@@ -1,0 +1,46 @@
+"""Shared benchmark setup: the paper's Sec. IV-A simulation environment on
+the synthetic FMNIST-like task (offline container)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.topology import make_process
+from repro.data.loader import FederatedBatches
+from repro.data.partition import by_labels
+from repro.data.synthetic import image_dataset
+from repro.fl.baselines import compare
+from repro.fl.simulator import SimConfig, make_eval_fn
+
+
+def paper_setup(m=10, iters=200, labels_per_device=1, r=50.0, seed=0,
+                radius=0.4, drop=0.3):
+    x, y = image_dataset(4000, seed=seed)
+    xt, yt = image_dataset(800, seed=seed + 1)
+    parts = by_labels(y, m, labels_per_device, seed=seed)
+    graph = make_process(m, "rgg", radius=radius, time_varying="edge_dropout",
+                         drop=drop, seed=seed)
+    sim = SimConfig(m=m, iters=iters, r=r, seed=seed)
+    eval_fn = make_eval_fn(sim, xt, yt)
+    return sim, graph, (lambda: FederatedBatches(x, y, parts, sim.batch, seed=seed + 2)), eval_fn
+
+
+def run_comparison(iters=200, seed=0, radius=0.4, eval_every=20):
+    sim, graph, bf, ef = paper_setup(iters=iters, seed=seed, radius=radius)
+    return compare(sim, graph, bf, ef, eval_every=eval_every)
+
+
+def timeit(fn, *args, warmup=1, reps=5):
+    for _ in range(warmup):
+        fn(*args)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    if hasattr(out, "block_until_ready"):
+        out.block_until_ready()
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def csv_line(name: str, us: float, derived: str) -> str:
+    return f"{name},{us:.1f},{derived}"

@@ -1,0 +1,70 @@
+"""Paper Fig. 2 (and Fig. 4) panels: one benchmark per panel.
+
+  (i)   transmission time per iteration, per policy
+  (ii)  accuracy per iteration (processing efficiency)
+  (iii) accuracy per cumulative transmission time (THE headline claim)
+  (iv)  accuracy after a fixed number of transmissions vs graph connectivity
+
+Each function returns CSV rows ``name,us_per_call,derived`` where the
+"derived" field carries the panel's headline metric.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import csv_line, paper_setup, run_comparison
+from repro.fl.baselines import compare
+
+
+def panel_i_transmission(results) -> list[str]:
+    rows = []
+    for name, res in results.items():
+        rows.append(csv_line(f"fig2i_tx_per_iter[{name}]", 0.0,
+                             f"mean_tx_time={res.tx_time.mean():.4f}"))
+    return rows
+
+
+def panel_ii_accuracy_per_iter(results) -> list[str]:
+    rows = []
+    for name, res in results.items():
+        rows.append(csv_line(f"fig2ii_acc_at_iter_end[{name}]", 0.0,
+                             f"acc={res.acc[-1]:.4f}"))
+    return rows
+
+
+def panel_iii_accuracy_per_tx(results) -> list[str]:
+    budget = min(res.cum_tx_time[-1] for res in results.values()) * 0.9
+    rows = []
+    for name, res in results.items():
+        k = int(np.searchsorted(res.cum_tx_time, budget))
+        acc = res.acc[min(k, len(res.acc) - 1)]
+        rows.append(csv_line(f"fig2iii_acc_at_tx_budget[{name}]", 0.0,
+                             f"acc={acc:.4f};budget={budget:.1f}"))
+    return rows
+
+
+def panel_iv_connectivity(radii=(0.3, 0.4, 0.6), iters=120, seeds=(0, 1)) -> list[str]:
+    rows = []
+    for radius in radii:
+        finals = {}
+        for seed in seeds:
+            res = run_comparison(iters=iters, seed=seed, radius=radius, eval_every=30)
+            for name, r in res.items():
+                finals.setdefault(name, []).append(r.acc[-1])
+        for name, accs in finals.items():
+            rows.append(csv_line(f"fig2iv_conn[r={radius}][{name}]", 0.0,
+                                 f"acc={np.mean(accs):.4f}"))
+    return rows
+
+
+def run_all(iters=200, connectivity=True) -> list[str]:
+    t0 = time.time()
+    results = run_comparison(iters=iters)
+    rows = (panel_i_transmission(results) + panel_ii_accuracy_per_iter(results)
+            + panel_iii_accuracy_per_tx(results))
+    if connectivity:
+        rows += panel_iv_connectivity()
+    rows.append(csv_line("fig2_total_wall_seconds", (time.time() - t0) * 1e6, "-"))
+    return rows

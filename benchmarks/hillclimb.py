@@ -1,0 +1,65 @@
+"""§Perf hillclimbing driver: run one (arch x shape) combo under a named
+variant, derive the roofline terms, and print the before/after diff against
+the stored baseline artifact.
+
+Variants are config/step-level switches (the hypothesis knobs):
+  baseline          - as shipped
+  neighbor          - neighbor-permute consensus instead of dense P@W
+  moe_bf16          - bf16 expert-combine accumulation (vs f32)
+  moe_groups=<n>    - override MoE dispatch group target size
+  no_remat          - disable scan remat (memory for FLOPs trade)
+  mix_bf16          - consensus mixing in bf16 (vs f32 tensordot)
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.hillclimb --arch deepseek-v3-671b \
+      --shape train_4k --variant moe_bf16
+"""
+import argparse
+import json
+import os
+import sys
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--out", default="artifacts/hillclimb")
+    args = ap.parse_args()
+
+    os.environ.setdefault("REPRO_VARIANT", args.variant)
+    from repro.launch import dryrun
+
+    mix = "neighbor" if args.variant == "neighbor" else "dense"
+    rec = dryrun.run_combo(args.arch, args.shape, args.mesh == "multi",
+                           mix=mix, out_dir=None, verbose=False)
+    os.makedirs(args.out, exist_ok=True)
+    path = os.path.join(
+        args.out, f"{args.arch}--{args.shape}--{args.mesh}--{args.variant}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+
+    from benchmarks.roofline import derive
+
+    d = derive(rec)
+    base_path = os.path.join("artifacts/dryrun",
+                             f"{args.arch}--{args.shape}--{args.mesh}.json")
+    print(f"variant={args.variant}")
+    print(f"  compute_s   {d['compute_s']:.4e}")
+    print(f"  memory_s    {d['memory_s']:.4e}")
+    print(f"  collective_s {d['collective_s']:.4e}  dominant={d['dominant']}")
+    print(f"  temp_bytes  {rec['memory_analysis'].get('temp_size_in_bytes', -1):.3e}")
+    print(f"  coll_bytes  {rec['collective_bytes']['total']:.3e}")
+    if os.path.exists(base_path):
+        with open(base_path) as f:
+            b = derive(json.load(f))
+        for k in ("compute_s", "memory_s", "collective_s"):
+            delta = (d[k] / b[k] - 1) * 100 if b[k] else float("nan")
+            print(f"  vs baseline {k}: {b[k]:.4e} -> {d[k]:.4e} ({delta:+.1f}%)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

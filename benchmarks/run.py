@@ -1,0 +1,34 @@
+"""Benchmark entry point: ``python -m benchmarks.run [--fast]``.
+
+One benchmark per paper table/figure panel (Fig. 2 i-iv) + kernel
+micro-benches + the roofline table when dry-run artifacts exist.
+Prints ``name,us_per_call,derived`` CSV.
+"""
+import argparse
+import os
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="reduced iteration counts")
+    ap.add_argument("--skip-fig2", action="store_true")
+    args = ap.parse_args()
+
+    rows = ["name,us_per_call,derived"]
+    from benchmarks import fig2_panels, kernel_bench, rate_check, roofline
+
+    if not args.skip_fig2:
+        rows += fig2_panels.run_all(iters=100 if args.fast else 200,
+                                    connectivity=not args.fast)
+    rows += kernel_bench.run_all()
+    rows += rate_check.run_all()
+    art = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                       "artifacts", "dryrun")
+    if os.path.isdir(art):
+        rows += roofline.run_all(art)
+    print("\n".join(rows))
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,71 @@
+"""Cross-pod EF-HC: the paper's bandwidth-heterogeneity story on TPU fabric.
+
+Two virtual pods (2 x 2 x 2 mesh = 8 host devices); four FL replicas, two
+per pod.  Pod-boundary replicas get a lower egress bandwidth (standing in
+for DCN vs ICI), so their personalized thresholds rho_i = 1/b_i are higher
+and they broadcast *less often* - exactly the paper's Sec. II-B mechanism,
+realized on datacenter fabric instead of ad-hoc radio links.
+
+    PYTHONPATH=src python examples/cross_pod_efhc.py [--steps 40]
+"""
+import argparse
+import os
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=40)
+    args = ap.parse_args()
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                               + os.environ.get("XLA_FLAGS", ""))
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import smoke_config
+    from repro.data.loader import lm_batches
+    from repro.data.synthetic import token_dataset
+    from repro.launch import input_specs as ispec
+    from repro.launch import steps as steps_mod
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import model as M
+    from repro.models.common import InputShape
+
+    mesh = make_host_mesh(data=2, model=2, pods=2)
+    import dataclasses
+
+    cfg = dataclasses.replace(smoke_config("granite-moe-3b-a800m"), fl_m=2)
+    setup = steps_mod.make_setup(cfg, mesh)
+    print(f"mesh {dict(mesh.shape)}; FL devices m={setup.m}; "
+          f"bandwidths={setup.bandwidths.tolist()} (pod-boundary replicas slower)")
+
+    shape = InputShape("xpod", 64, 8, "train")
+    fn = steps_mod.make_train_step(setup, mesh, n_model_params=cfg.n_params)
+    sp = ispec.train_specs(cfg, shape, mesh, setup.m, setup.mode)
+    step = jax.jit(fn, in_shardings=ispec.to_named(mesh, sp.in_shardings),
+                   out_shardings=ispec.to_named(mesh, sp.out_shardings))
+
+    key = jax.random.PRNGKey(0)
+    base = M.init_params(cfg, key)
+    params = jax.tree.map(lambda l: jnp.stack([l] * setup.m), base)
+    w_hat = jax.tree.map(jnp.copy, params)
+    stream = token_dataset(100_000, vocab=cfg.vocab, seed=0)
+    shards = np.array_split(stream, setup.m)
+    iters = [lm_batches(s, shape.global_batch // setup.m, shape.seq_len, seed=i)
+             for i, s in enumerate(shards)]
+
+    for k in range(args.steps):
+        per = [next(it) for it in iters]
+        batch = {kk: jnp.asarray(np.stack([p[kk] for p in per])) for kk in per[0]}
+        params, w_hat, metrics = step(params, w_hat, batch, jnp.asarray(k, jnp.int32))
+        if k % 10 == 0 or k == args.steps - 1:
+            print(f"step {k:3d} loss {float(metrics['loss']):.4f} "
+                  f"trigger_rate {float(metrics['trigger_rate']):.2f}")
+    print("cross-pod EF-HC done")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

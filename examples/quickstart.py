@@ -1,0 +1,41 @@
+"""Quickstart: decentralized event-triggered FL (EF-HC) in ~40 lines.
+
+Ten devices with non-iid data cooperatively train an SVM with NO central
+server: each device broadcasts its model to graph neighbors only when its
+personalized threshold (paper Eq. 3) fires.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core.topology import make_process
+from repro.data.loader import FederatedBatches
+from repro.data.partition import by_labels
+from repro.data.synthetic import image_dataset
+from repro.fl.simulator import SimConfig, make_eval_fn, run
+
+
+def main():
+    # 1. federated data: 10 devices, 1 label each (extreme non-iid, paper IV-A)
+    x, y = image_dataset(4000, seed=0)
+    x_test, y_test = image_dataset(800, seed=1)
+    parts = by_labels(y, m=10, labels_per_device=1)
+
+    # 2. time-varying peer-to-peer graph (random geometric, links drop 30%)
+    graph = make_process(10, "rgg", time_varying="edge_dropout", drop=0.3, seed=0)
+
+    # 3. run EF-HC
+    sim = SimConfig(m=10, iters=200, policy="efhc", r=50.0)
+    eval_fn = make_eval_fn(sim, x_test, y_test)
+    res = run(sim, graph, FederatedBatches(x, y, parts, sim.batch, seed=2),
+              eval_fn, eval_every=20)
+
+    print(f"final mean accuracy      : {res.acc[-1]:.3f}")
+    print(f"broadcast trigger rate   : {res.v.mean():.2f} (1.0 = every step)")
+    print(f"cumulative transmission  : {res.cum_tx_time[-1]:.1f} time units")
+    print(f"final consensus error    : {res.consensus_err[-1]:.2e}")
+    assert res.acc[-1] > 0.9
+
+
+if __name__ == "__main__":
+    main()

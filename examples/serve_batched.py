@@ -1,0 +1,25 @@
+"""Batched serving demo: prefill-by-replay + sampled decode with KV caches
+(sliding-window layers use ring buffers; SSM/hybrid archs carry recurrent
+state).
+
+    PYTHONPATH=src python examples/serve_batched.py --arch hymba-1.5b
+"""
+import argparse
+import sys
+
+from repro.launch import serve as serve_mod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="hymba-1.5b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--gen", type=int, default=24)
+    args = ap.parse_args()
+    return serve_mod.main(["--arch", args.arch, "--smoke",
+                           "--batch", str(args.batch),
+                           "--prompt_len", "16", "--gen", str(args.gen)])
+
+
+if __name__ == "__main__":
+    sys.exit(main())

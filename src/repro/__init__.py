@@ -1,0 +1,6 @@
+"""repro: DEFT — Decentralized Event-triggered Federated Training in JAX.
+
+Reproduction + production framework for "Event-Triggered Decentralized
+Federated Learning over Resource-Constrained Edge Devices" (EF-HC).
+"""
+__version__ = "0.1.0"

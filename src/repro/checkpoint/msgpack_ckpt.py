@@ -1,0 +1,95 @@
+"""msgpack pytree checkpointing (offline container: no orbax).
+
+Layout: <dir>/step_<k>.msgpack, each file a self-describing tree:
+arrays encoded as {"__nd__": shape, "dtype": str, "data": bytes}.
+``save`` writes atomically (tmp + rename) and rotates old checkpoints.
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Any
+
+import jax
+import msgpack
+import numpy as np
+
+
+def _encode(obj):
+    if isinstance(obj, (np.ndarray, jax.Array)):
+        arr = np.asarray(obj)
+        return {
+            "__nd__": list(arr.shape),
+            "dtype": str(arr.dtype),
+            "data": arr.tobytes(),
+        }
+    if isinstance(obj, (np.integer,)):
+        return int(obj)
+    if isinstance(obj, (np.floating,)):
+        return float(obj)
+    return obj
+
+
+def _default(obj):
+    enc = _encode(obj)
+    if enc is obj:
+        raise TypeError(f"cannot serialize {type(obj)}")
+    return enc
+
+
+def _tree_encode(tree):
+    return jax.tree.map(_encode, tree)
+
+
+def _tree_decode(obj):
+    if isinstance(obj, dict):
+        if "__nd__" in obj:
+            return np.frombuffer(obj["data"], dtype=np.dtype(obj["dtype"])).reshape(obj["__nd__"]).copy()
+        return {k: _tree_decode(v) for k, v in obj.items()}
+    if isinstance(obj, list):
+        return [_tree_decode(v) for v in obj]
+    return obj
+
+
+def save(ckpt_dir: str, step: int, tree: Any, *, keep: int = 3) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    path = os.path.join(ckpt_dir, f"step_{step}.msgpack")
+    tmp = path + ".tmp"
+    payload = msgpack.packb(_tree_encode(jax.device_get(tree)), use_bin_type=True)
+    with open(tmp, "wb") as f:
+        f.write(payload)
+    os.replace(tmp, path)
+    _rotate(ckpt_dir, keep)
+    return path
+
+
+def _steps(ckpt_dir: str) -> list[int]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for fn in os.listdir(ckpt_dir):
+        m = re.fullmatch(r"step_(\d+)\.msgpack", fn)
+        if m:
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def _rotate(ckpt_dir: str, keep: int) -> None:
+    steps = _steps(ckpt_dir)
+    for s in steps[:-keep] if keep > 0 else []:
+        os.remove(os.path.join(ckpt_dir, f"step_{s}.msgpack"))
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    steps = _steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore(ckpt_dir: str, step: int | None = None) -> Any:
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    with open(os.path.join(ckpt_dir, f"step_{step}.msgpack"), "rb") as f:
+        raw = msgpack.unpackb(f.read(), raw=False)
+    return _tree_decode(raw)

@@ -1,0 +1,119 @@
+"""Config registry: the 10 assigned architectures + the paper's own models.
+
+``get_config(arch_id)`` returns the full-size ArchConfig; ``smoke_config``
+returns the reduced same-family variant (<= 2 layers, d_model <= 512,
+<= 4 experts) used by the per-arch CPU smoke tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+from repro.models.common import ArchConfig, FrontendStub, MLAConfig, MoEConfig
+
+_MODULES = {
+    "granite-moe-3b-a800m": "granite_moe_3b_a800m",
+    "starcoder2-15b": "starcoder2_15b",
+    "hymba-1.5b": "hymba_1_5b",
+    "deepseek-coder-33b": "deepseek_coder_33b",
+    "phi3-medium-14b": "phi3_medium_14b",
+    "xlstm-125m": "xlstm_125m",
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "paligemma-3b": "paligemma_3b",
+    "qwen2-72b": "qwen2_72b",
+    "hubert-xlarge": "hubert_xlarge",
+}
+
+ARCH_IDS: list[str] = list(_MODULES)
+
+
+def get_config(arch_id: str) -> ArchConfig:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+    return mod.CONFIG
+
+
+# reduced layer plans preserving each family's block mix
+_SMOKE_PLANS = {
+    "granite-moe-3b-a800m": ((("moe",), 2),),
+    "starcoder2-15b": ((("attn",), 2),),
+    "hymba-1.5b": ((("hybrid_g",), 1), (("hybrid",), 1)),
+    "deepseek-coder-33b": ((("attn",), 2),),
+    "phi3-medium-14b": ((("attn",), 2),),
+    "xlstm-125m": ((("mlstm", "slstm"), 1),),
+    "deepseek-v3-671b": ((("mla",), 1), (("mla_moe",), 1)),
+    "paligemma-3b": ((("attn",), 2),),
+    "qwen2-72b": ((("attn",), 2),),
+    "hubert-xlarge": ((("attn",), 2),),
+}
+
+
+def smoke_config(arch_id: str) -> ArchConfig:
+    cfg = get_config(arch_id)
+    plan = _SMOKE_PLANS[arch_id]
+    n_layers = sum(len(c) * r for c, r in plan)
+    d_model = 128
+    n_heads = min(cfg.n_heads, 4)
+    ratio = max(cfg.n_heads // max(cfg.n_kv_heads, 1), 1)
+    n_kv = max(n_heads // ratio, 1)
+    updates = dict(
+        n_layers=n_layers,
+        layer_plan=plan,
+        d_model=d_model,
+        n_heads=n_heads,
+        n_kv_heads=n_kv,
+        d_head=d_model // n_heads,
+        d_ff=256 if cfg.d_ff > 0 else 0,
+        vocab=min(cfg.vocab, 512),
+        window=min(cfg.window, 32) if cfg.window else None,
+        mlstm_chunk=8,
+        dtype="float32",
+        remat=False,
+        fl_m=1,
+    )
+    if cfg.moe is not None:
+        updates["moe"] = dataclasses.replace(
+            cfg.moe, n_experts=4, top_k=2, d_expert=64,
+            n_shared=min(cfg.moe.n_shared, 1), impl="dense")
+    if cfg.mla is not None:
+        updates["mla"] = MLAConfig(q_lora_rank=64, kv_lora_rank=32,
+                                   qk_nope_head_dim=16, qk_rope_head_dim=8,
+                                   v_head_dim=16)
+    if cfg.frontend is not None:
+        updates["frontend"] = FrontendStub(
+            kind=cfg.frontend.kind,
+            tokens=4 if cfg.frontend.kind == "vision" else 0,
+            dim=32)
+    return dataclasses.replace(cfg, name=cfg.name + "-smoke", **updates)
+
+
+# ---------------------------------------------------------------------------
+# the paper's own experiment configs (Sec. IV-A)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PaperExperiment:
+    name: str
+    m: int
+    model: str  # svm | mlp
+    labels_per_device: int
+    r: float
+    b_mean: float = 5000.0
+    sigma_n: float = 0.9
+    alpha0: float = 0.1
+    n_classes: int = 10
+    dim: int = 784
+    topology: str = "rgg"
+    radius: float = 0.4
+
+
+PAPER_FMNIST_SVM = PaperExperiment(
+    name="fmnist-svm", m=10, model="svm", labels_per_device=1,
+    r=5000.0 * 1e-2)  # r = b_M * 1e-2
+PAPER_FEMNIST_SVM = PaperExperiment(
+    name="femnist-svm", m=30, model="svm", labels_per_device=3,
+    r=5000.0 * 1e-1, n_classes=62)  # r = b_M * 1e-1
+PAPER_FMNIST_LENET = PaperExperiment(
+    name="fmnist-lenet", m=10, model="mlp", labels_per_device=2,
+    r=5000.0 * 1e-2)

@@ -1,0 +1,4 @@
+"""EF-HC core: the paper's contribution as composable JAX modules."""
+from repro.core import consensus, efhc, flow, metrics, mixing, topology, triggers
+
+__all__ = ["consensus", "efhc", "flow", "metrics", "mixing", "topology", "triggers"]

@@ -1,0 +1,88 @@
+"""Communication-savings accounting for event-triggered consensus.
+
+Under one SPMD program the consensus collective executes every step with
+P = I when no event fires (DESIGN.md "Event semantics under SPMD"), so the
+*compiled* program cannot show the savings.  This module quantifies them
+from the trigger trace, closing the loop between the paper's event
+semantics and the framework's static schedules:
+
+  * dense schedule  - every device moves its full model through the fl-axis
+    collective each mixing round: bytes_dense = n_bytes * m (all-gather
+    class) regardless of v.
+  * event schedule  - only links with v_ij = 1 carry parameters:
+    bytes_event(k) = n_bytes * sum_ij v_ij(k) / m per device on average.
+  * every-K static schedule - the compiled-savings alternative: collective
+    appears in 1 of K steps; bytes = n_bytes * m / K.
+
+``savings_report`` returns per-step and cumulative bytes for all three,
+plus the paper's transmission-time metric under heterogeneous bandwidths.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class SavingsReport:
+    steps: int
+    m: int
+    n_bytes: int
+    dense_bytes: float  # cumulative, per device average
+    event_bytes: float
+    every_k_bytes: float
+    every_k: int
+    trigger_rate: float
+    link_utilization: float  # used links / physical links
+    tx_time_event: float  # paper Sec. IV metric, cumulative
+    tx_time_dense: float
+
+    @property
+    def event_vs_dense(self) -> float:
+        return self.event_bytes / max(self.dense_bytes, 1e-30)
+
+    def summary(self) -> str:
+        return (
+            f"m={self.m} steps={self.steps} model={self.n_bytes/1e6:.1f}MB | "
+            f"dense {self.dense_bytes/1e9:.2f}GB vs event {self.event_bytes/1e9:.2f}GB "
+            f"({100*self.event_vs_dense:.1f}%) vs every-{self.every_k} "
+            f"{self.every_k_bytes/1e9:.2f}GB | trigger_rate {self.trigger_rate:.2f}")
+
+
+def savings_report(
+    v_trace: np.ndarray,  # (T, m) broadcast events
+    adj_trace: np.ndarray,  # (T, m, m) physical graphs
+    n_bytes: int,
+    bandwidths: np.ndarray | None = None,
+    every_k: int = 4,
+) -> SavingsReport:
+    t, m = v_trace.shape
+    vv = np.logical_or(v_trace[:, :, None], v_trace[:, None, :])
+    comm = np.logical_and(vv, adj_trace)  # (T, m, m) used links
+    used_links = comm.sum(axis=(1, 2)) / 2.0  # undirected
+    phys_links = adj_trace.sum(axis=(1, 2)) / 2.0
+
+    # per-device average bytes per step: each used link moves the model in
+    # both directions; each endpoint sends once per used incident link
+    event_per_step = n_bytes * comm.sum(axis=(1, 2)) / m
+    dense_per_step = np.where(phys_links > 0, n_bytes * adj_trace.sum(axis=(1, 2)) / m, 0.0)
+
+    if bandwidths is None:
+        bandwidths = np.full(m, 1.0)
+    deg = np.maximum(adj_trace.sum(axis=2), 1)
+    frac_used = comm.sum(axis=2) / deg  # (T, m)
+    tx_event = float((frac_used * (n_bytes / bandwidths[None, :])).mean(axis=1).sum())
+    tx_dense = float(((adj_trace.sum(axis=2) > 0) * (n_bytes / bandwidths[None, :])).mean(axis=1).sum())
+
+    return SavingsReport(
+        steps=t, m=m, n_bytes=n_bytes,
+        dense_bytes=float(dense_per_step.sum()),
+        event_bytes=float(event_per_step.sum()),
+        every_k_bytes=float(dense_per_step.sum()) / every_k,
+        every_k=every_k,
+        trigger_rate=float(v_trace.mean()),
+        link_utilization=float(used_links.sum() / max(phys_links.sum(), 1.0)),
+        tx_time_event=tx_event,
+        tx_time_dense=tx_dense,
+    )

@@ -1,0 +1,141 @@
+"""EF-HC: the full four-event algorithm (paper Alg. 1) as a jittable step.
+
+State kept per device i (paper Sec. II-A):
+  * w_i      - instantaneous main model
+  * w_hat_i  - auxiliary (last broadcast) model
+plus shared bookkeeping: iteration k, previous adjacency (to detect Event-1
+neighbor connections), bandwidths b_i, PRNG key.
+
+The universal iteration k drives: the graph process (Event 1), trigger
+evaluation (Event 2), P-matrix mixing (Event 3) and the SGD step (Event 4).
+``step`` is pure; the simulator (repro/fl) scans it.
+
+Event semantics under one jitted program: when no event fires on a link,
+v_ij = 0 => p_ij = 0 and the mixing leaves w_i untouched -- mathematically
+identical to skipping the transmission (see DESIGN.md "Event semantics under
+SPMD" for how communication savings are accounted).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import consensus, mixing, triggers
+from repro.core.topology import GraphProcess
+
+
+class EFHCState(NamedTuple):
+    w: Any  # pytree, leaves (m, ...): per-device main models
+    w_hat: Any  # pytree, leaves (m, ...): last-broadcast models
+    k: jax.Array  # scalar int32 universal iteration
+    prev_adj: jax.Array  # (m, m) bool adjacency at k-1 (Event 1 detection)
+    bandwidths: jax.Array  # (m,)
+    key: jax.Array
+    opt_state: Any = None
+
+
+@dataclasses.dataclass(frozen=True)
+class EFHCConfig:
+    trigger: triggers.TriggerConfig = dataclasses.field(default_factory=triggers.TriggerConfig)
+    # gamma^(k): decaying factor; paper Sec. IV-A sets gamma^(k) = alpha^(k)
+    gamma: Callable[[jax.Array], jax.Array] = None  # type: ignore[assignment]
+    mix_impl: str = "dense"  # dense | delta
+
+
+def init_state(w_stack, bandwidths: jax.Array, adjacency0: jax.Array, key: jax.Array, opt_state=None) -> EFHCState:
+    return EFHCState(
+        w=w_stack,
+        w_hat=jax.tree.map(jnp.copy, w_stack),
+        k=jnp.asarray(0, jnp.int32),
+        prev_adj=adjacency0,
+        bandwidths=bandwidths,
+        key=key,
+        opt_state=opt_state,
+    )
+
+
+def _flatten_stack(w_stack) -> jax.Array:
+    """(m, n) flat view of the per-device model pytree."""
+    leaves = jax.tree.leaves(w_stack)
+    m = leaves[0].shape[0]
+    return jnp.concatenate([l.reshape(m, -1).astype(jnp.float32) for l in leaves], axis=1)
+
+
+class StepAux(NamedTuple):
+    v: jax.Array  # (m,) broadcast events fired
+    comm: jax.Array  # (m, m) links used (information-flow edges E'^(k))
+    p: jax.Array  # (m, m) transition matrix
+    loss: jax.Array  # (m,) per-device minibatch loss
+    tx_time: jax.Array  # scalar: avg transmission time this iteration
+    util: jax.Array  # scalar: resource utilization score
+
+
+def step(
+    cfg: EFHCConfig,
+    graph: GraphProcess,
+    state: EFHCState,
+    *,
+    grad_fn: Callable[[Any, jax.Array, Any], tuple[jax.Array, Any]],
+    batch,
+    alpha_k: jax.Array,
+    model_dim: int,
+) -> tuple[EFHCState, StepAux]:
+    """One universal iteration of Alg. 1 across all m devices.
+
+    grad_fn(w_i, key, batch_i) -> (loss_i, grad_i) for a single device;
+    it is vmapped over the leading device axis here.
+    """
+    m = state.bandwidths.shape[0]
+    key, k_trig, k_grad = jax.random.split(state.key, 3)
+
+    adj = graph.adjacency(state.k)
+
+    # ---- Event 2: broadcast triggers -------------------------------------
+    w_flat = _flatten_stack(state.w)
+    w_hat_flat = _flatten_stack(state.w_hat)
+    gamma_k = cfg.gamma(state.k) if cfg.gamma is not None else alpha_k
+    v = triggers.broadcast_events(
+        cfg.trigger, w=w_flat, w_hat=w_hat_flat,
+        bandwidths=state.bandwidths, gamma_k=gamma_k, key=k_trig,
+    )
+
+    # ---- Event 1: neighbor connection ------------------------------------
+    # Links that newly appeared vs k-1 exchange parameters unconditionally.
+    new_links = jnp.logical_and(adj, ~state.prev_adj)
+
+    # ---- Event 3: aggregation over the information-flow edges ------------
+    comm = jnp.logical_or(triggers.communication_matrix(v, adj), new_links)
+    p = mixing.build_p(adj, comm)
+    if cfg.mix_impl == "delta":
+        w_mixed = consensus.mix_delta_dense(p, state.w)
+    else:
+        w_mixed = consensus.mix_dense(p, state.w)
+
+    # w_hat update: devices that broadcast snapshot their *pre-mix* model
+    # (Alg. 1 line 12: w_hat^(k+1) = w^(k))
+    def upd_hat(h, wcur):
+        mask = v.reshape((m,) + (1,) * (wcur.ndim - 1))
+        return jnp.where(mask, wcur, h)
+
+    w_hat_new = jax.tree.map(upd_hat, state.w_hat, state.w)
+
+    # ---- Event 4: local SGD ----------------------------------------------
+    grad_keys = jax.random.split(k_grad, m)
+    loss, grads = jax.vmap(grad_fn, in_axes=(0, 0, 0))(w_mixed, grad_keys, batch)
+    w_new = jax.tree.map(lambda wm, g: (wm.astype(jnp.float32) - alpha_k * g.astype(jnp.float32)).astype(wm.dtype), w_mixed, grads)
+
+    # ---- paper metrics (Sec. IV-A) ----------------------------------------
+    deg = adj.sum(axis=1).astype(jnp.float32)
+    used = comm.sum(axis=1).astype(jnp.float32)
+    frac = jnp.where(deg > 0, used / jnp.maximum(deg, 1.0), 0.0)
+    tx_time = jnp.mean(frac * model_dim / state.bandwidths)
+    util = jnp.mean(frac * (1.0 / state.bandwidths) * model_dim)
+
+    new_state = EFHCState(
+        w=w_new, w_hat=w_hat_new, k=state.k + 1, prev_adj=adj,
+        bandwidths=state.bandwidths, key=key, opt_state=state.opt_state,
+    )
+    return new_state, StepAux(v=v, comm=comm, p=p, loss=loss, tx_time=tx_time, util=util)

@@ -1,0 +1,66 @@
+"""Information-flow graph analysis (paper Prop. 1, Appendix A).
+
+The information-flow graph G'^(k) contains only the links actually used for
+parameter exchange at iteration k.  Prop. 1: under Assumption 8, G'^(k) is
+B-connected with B = (l~ + 2) B_1 where l~ B_1 <= B_2 <= (l~ + 1) B_1 - 1.
+
+These helpers measure the *realized* B on simulation traces so tests and
+benchmarks can check the guarantee (physical B_1, trigger bound B_2 =>
+information-flow B).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def _connected(a: np.ndarray) -> bool:
+    m = a.shape[0]
+    seen = np.zeros(m, dtype=bool)
+    stack = [0]
+    seen[0] = True
+    while stack:
+        u = stack.pop()
+        for v in np.nonzero(a[u])[0]:
+            if not seen[v]:
+                seen[v] = True
+                stack.append(int(v))
+    return bool(seen.all())
+
+
+def union_connectivity(adjs: np.ndarray) -> int:
+    """Smallest window size B such that the union of every B consecutive
+    graphs in ``adjs`` (T, m, m) is connected; returns -1 if none works."""
+    t = adjs.shape[0]
+    for b in range(1, t + 1):
+        ok = True
+        for s in range(0, t - b + 1):
+            if not _connected(adjs[s : s + b].any(axis=0)):
+                ok = False
+                break
+        if ok:
+            return b
+    return -1
+
+
+def trigger_bound(v_trace: np.ndarray) -> int:
+    """Smallest B_2 such that every device fires at least once in every
+    window of B_2 consecutive iterations (Assumption 8-(b)); -1 if never."""
+    t, m = v_trace.shape
+    worst = 0
+    for i in range(m):
+        fired = np.nonzero(v_trace[:, i])[0]
+        if len(fired) == 0:
+            return -1
+        gaps = np.diff(np.concatenate([[-1], fired, [t]]))
+        worst = max(worst, int(gaps.max()))
+    return worst
+
+
+def predicted_b(b1: int, b2: int) -> int:
+    """Prop. 1: B = (l~ + 2) B_1 with l~ B_1 <= B_2 <= (l~ + 1) B_1 - 1."""
+    l_tilde = max(0, (b2 // b1) if b2 % b1 else b2 // b1)
+    # find l~ satisfying l~ B1 <= B2 <= (l~+1) B1 - 1
+    l_tilde = b2 // b1
+    if l_tilde * b1 > b2 or b2 > (l_tilde + 1) * b1 - 1:
+        l_tilde = max(0, -(-b2 // b1) - 1)
+    return (l_tilde + 2) * b1

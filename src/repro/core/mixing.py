@@ -1,0 +1,61 @@
+"""Mixing/aggregation weights (paper Sec. II-C, Assumption 2, Eq. 9/19).
+
+Metropolis-Hastings aggregation weights on the *physical* graph:
+
+    beta_ij^(k) = min{ 1/(1 + d_i^(k)), 1/(1 + d_j^(k)) }        (19)
+
+Transition matrix on the *information-flow* graph:
+
+    p_ij^(k) = beta_ij^(k) * v_ij^(k)                  (i != j)
+    p_ii^(k) = 1 - sum_j beta_ij^(k) v_ij^(k)                    (9)
+
+P^(k) is symmetric and doubly-stochastic by construction (Assumption 2);
+``assert_doubly_stochastic`` is used by property tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def metropolis_weights(adjacency: jax.Array) -> jax.Array:
+    """beta_ij from node degrees of the physical graph. (m, m) float32.
+
+    beta is defined for physical edges; non-edges get 0."""
+    a = adjacency.astype(jnp.float32)
+    deg = a.sum(axis=1)  # d_i^(k)
+    inv = 1.0 / (1.0 + deg)
+    beta = jnp.minimum(inv[:, None], inv[None, :])
+    return beta * a
+
+
+def transition_matrix(beta: jax.Array, comm: jax.Array) -> jax.Array:
+    """P^(k) from beta and the communication mask v_ij (Eq. 9)."""
+    off = beta * comm.astype(beta.dtype)
+    row = off.sum(axis=1)
+    return off + jnp.diag(1.0 - row)
+
+
+def build_p(adjacency: jax.Array, comm: jax.Array) -> jax.Array:
+    return transition_matrix(metropolis_weights(adjacency), comm)
+
+
+def assert_doubly_stochastic(p: jax.Array, atol: float = 1e-6) -> None:
+    import numpy as np
+
+    p = np.asarray(p)
+    assert np.all(p >= -atol), f"negative entries: min {p.min()}"
+    assert np.allclose(p.sum(axis=0), 1.0, atol=atol), "columns not stochastic"
+    assert np.allclose(p.sum(axis=1), 1.0, atol=atol), "rows not stochastic"
+    assert np.allclose(p, p.T, atol=atol), "not symmetric"
+
+
+def spectral_gap(p: jax.Array) -> jax.Array:
+    """1 - rho where rho = second-largest |eigenvalue| of the (symmetric,
+    doubly-stochastic) P restricted to the disagreement subspace.  Used in
+    benchmarks to connect measured mixing to the paper's rho in Lemma 2."""
+    m = p.shape[0]
+    ones = jnp.ones((m, m), dtype=p.dtype) / m
+    evs = jnp.linalg.eigvalsh(p - ones)
+    rho = jnp.max(jnp.abs(evs))
+    return 1.0 - rho

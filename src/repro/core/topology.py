@@ -1,0 +1,166 @@
+"""Time-varying communication graph processes (paper Sec. II-B, Assumption 8).
+
+The physical network graph G^(k) = (M, E^(k)) is a time-varying undirected
+graph over m devices.  We model it as a deterministic, seeded process: given
+a base key and the universal iteration k, ``adjacency(k)`` returns the m x m
+symmetric boolean adjacency (no self loops) for iteration k.
+
+All processes are pure-JAX so they can live inside jit'd training steps;
+graph generators used for *setup* (random geometric graphs a la paper
+Sec. IV-A) use numpy at trace time.
+
+Assumption 8-(a) requires the union of G^(k) over any B1 consecutive
+iterations to be connected.  The processes below guarantee this by
+construction (``static``/``ring``) or statistically (``edge_dropout``,
+``rgg_churn``); `repro.core.flow.union_connectivity` measures the realized
+B1 and tests assert it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Adjacency = jax.Array  # (m, m) bool, symmetric, zero diagonal
+
+
+def _symmetrize(a: jax.Array) -> jax.Array:
+    a = jnp.logical_or(a, a.T)
+    m = a.shape[0]
+    return jnp.logical_and(a, ~jnp.eye(m, dtype=bool))
+
+
+def ring_adjacency(m: int) -> np.ndarray:
+    """Static ring: always connected (B1 = 1)."""
+    a = np.zeros((m, m), dtype=bool)
+    idx = np.arange(m)
+    a[idx, (idx + 1) % m] = True
+    a[(idx + 1) % m, idx] = True
+    if m <= 2:
+        np.fill_diagonal(a, False)
+    return a
+
+
+def complete_adjacency(m: int) -> np.ndarray:
+    a = np.ones((m, m), dtype=bool)
+    np.fill_diagonal(a, False)
+    return a
+
+
+def random_geometric_adjacency(m: int, radius: float, seed: int) -> np.ndarray:
+    """Random geometric graph on the unit square (paper Sec. IV-A uses RGG
+    with connectivity 0.4).  Retries with a growing radius until connected
+    so Assumption 8-(a) holds with B1 = 1 for the base graph."""
+    rng = np.random.default_rng(seed)
+    pts = rng.uniform(size=(m, 2))
+    r = radius
+    for _ in range(64):
+        d2 = ((pts[:, None, :] - pts[None, :, :]) ** 2).sum(-1)
+        a = d2 <= r * r
+        np.fill_diagonal(a, False)
+        if _connected_np(a):
+            return a
+        r *= 1.15
+    raise RuntimeError("could not build a connected RGG")
+
+
+def erdos_renyi_adjacency(m: int, p: float, seed: int) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    for trial in range(64):
+        upper = rng.uniform(size=(m, m)) < p
+        a = np.triu(upper, 1)
+        a = a | a.T
+        if _connected_np(a):
+            return a
+        p = min(1.0, p * 1.2)
+    raise RuntimeError("could not build a connected ER graph")
+
+
+def _connected_np(a: np.ndarray) -> bool:
+    m = a.shape[0]
+    seen = np.zeros(m, dtype=bool)
+    stack = [0]
+    seen[0] = True
+    while stack:
+        u = stack.pop()
+        for v in np.nonzero(a[u])[0]:
+            if not seen[v]:
+                seen[v] = True
+                stack.append(int(v))
+    return bool(seen.all())
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphProcess:
+    """A seeded time-varying graph process.
+
+    ``base``:   (m, m) bool numpy adjacency, the physical fabric.
+    ``kind``:   'static'        -> G^(k) = base for all k
+                'edge_dropout'  -> each base edge present w.p. (1 - drop) at
+                                   each k, resampled per iteration (symmetric)
+                'partition_cycle' -> cycles through ``cycle_len`` edge subsets
+                                   whose union is the base graph (worst-case
+                                   B1 = cycle_len, deterministic)
+    """
+
+    base: np.ndarray
+    kind: str = "static"
+    drop: float = 0.0
+    cycle_len: int = 1
+    seed: int = 0
+
+    @property
+    def m(self) -> int:
+        return int(self.base.shape[0])
+
+    def adjacency(self, k: jax.Array | int) -> Adjacency:
+        base = jnp.asarray(self.base)
+        if self.kind == "static":
+            return base
+        if self.kind == "edge_dropout":
+            key = jax.random.fold_in(jax.random.PRNGKey(self.seed), jnp.asarray(k, jnp.uint32))
+            u = jax.random.uniform(key, base.shape)
+            u = jnp.triu(u, 1)
+            u = u + u.T  # symmetric uniforms
+            keep = u >= self.drop
+            return _symmetrize(jnp.logical_and(base, keep))
+        if self.kind == "partition_cycle":
+            # deterministically keep edges whose (i + j) % cycle_len == k % cycle_len
+            m = self.m
+            i = jnp.arange(m)[:, None]
+            j = jnp.arange(m)[None, :]
+            phase = jnp.asarray(k, jnp.int32) % self.cycle_len
+            keep = (i + j) % self.cycle_len == phase
+            return _symmetrize(jnp.logical_and(base, keep))
+        raise ValueError(f"unknown graph process kind: {self.kind}")
+
+    def degrees(self, k: jax.Array | int) -> jax.Array:
+        return self.adjacency(k).sum(axis=1).astype(jnp.int32)
+
+
+def make_process(
+    m: int,
+    topology: str = "rgg",
+    *,
+    time_varying: str = "static",
+    radius: float = 0.4,
+    er_p: float = 0.4,
+    drop: float = 0.3,
+    cycle_len: int = 2,
+    seed: int = 0,
+) -> GraphProcess:
+    """Factory used by configs / the FL simulator."""
+    if topology == "rgg":
+        base = random_geometric_adjacency(m, radius, seed)
+    elif topology == "er":
+        base = erdos_renyi_adjacency(m, er_p, seed)
+    elif topology == "ring":
+        base = ring_adjacency(m)
+    elif topology == "complete":
+        base = complete_adjacency(m)
+    else:
+        raise ValueError(f"unknown topology: {topology}")
+    return GraphProcess(base=base, kind=time_varying, drop=drop, cycle_len=cycle_len, seed=seed + 1)

@@ -1,0 +1,50 @@
+"""Synthetic datasets (offline container: no downloads).
+
+* ``image_dataset`` - FMNIST-shaped (28x28, C classes) class-conditional
+  Gaussian-blob images: each class has a random prototype; samples are
+  prototype + noise.  Linearly-separable enough for the paper's SVM
+  experiments while remaining non-trivial.
+* ``token_dataset`` - LM token streams from a seeded Zipfian bigram chain
+  (so there is actual structure to learn for transformer examples).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def image_dataset(
+    n: int,
+    *,
+    n_classes: int = 10,
+    dim: int = 784,
+    noise: float = 0.6,
+    seed: int = 0,
+    proto_seed: int = 1234,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Returns (x (n, dim) float32 in ~[0,1], y (n,) int32).
+
+    Class prototypes come from ``proto_seed`` (fixed across train/test splits
+    so the task is consistent); ``seed`` controls sampling/noise."""
+    rng = np.random.default_rng(seed)
+    protos = np.random.default_rng(proto_seed).normal(
+        0.5, 0.35, size=(n_classes, dim)).astype(np.float32)
+    y = rng.integers(0, n_classes, size=n).astype(np.int32)
+    x = protos[y] + rng.normal(0.0, noise, size=(n, dim)).astype(np.float32)
+    return np.clip(x, 0.0, 1.0).astype(np.float32), y
+
+
+def token_dataset(n_tokens: int, *, vocab: int = 512, seed: int = 0) -> np.ndarray:
+    """Zipfian bigram stream: P(next | cur) concentrated on a few successors."""
+    rng = np.random.default_rng(seed)
+    succ = rng.integers(0, vocab, size=(vocab, 4))
+    ranks = np.arange(1, vocab + 1, dtype=np.float64)
+    zipf = (1.0 / ranks) / (1.0 / ranks).sum()
+    out = np.empty(n_tokens, dtype=np.int32)
+    cur = int(rng.integers(0, vocab))
+    for i in range(n_tokens):
+        out[i] = cur
+        if rng.random() < 0.75:
+            cur = int(succ[cur, rng.integers(0, 4)])
+        else:
+            cur = int(rng.choice(vocab, p=zipf))
+    return out

@@ -1,0 +1,1 @@
+from repro.fl import baselines, simulator

@@ -1,0 +1,36 @@
+"""Baseline runners (paper Sec. IV-B): ZT, GT, RG vs EF-HC.
+
+``compare`` runs all four policies on identical data/graph/seed and returns
+{policy: SimResult} for the benchmark figures.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+from repro.core.topology import GraphProcess
+from repro.data.loader import FederatedBatches
+from repro.fl.simulator import SimConfig, SimResult, run
+
+POLICIES = {
+    "EF-HC": "efhc",
+    "GT": "global",
+    "ZT": "zero",
+    "RG": "gossip",
+}
+
+
+def compare(
+    sim: SimConfig,
+    graph: GraphProcess,
+    batches_factory: Callable[[], FederatedBatches],
+    eval_fn,
+    *,
+    policies: dict[str, str] | None = None,
+    eval_every: int = 10,
+) -> dict[str, SimResult]:
+    out = {}
+    for name, policy in (policies or POLICIES).items():
+        cfg = dataclasses.replace(sim, policy=policy)
+        out[name] = run(cfg, graph, batches_factory(), eval_fn, eval_every=eval_every)
+    return out

@@ -1,0 +1,5 @@
+"""Pallas TPU kernels (validated with interpret=True on CPU):
+  mixing/  - fused consensus mixing P @ W        (paper Event 3)
+  trigger/ - fused ||w - w_hat||^2 reduction      (paper Event 2)
+  swa/     - sliding-window causal flash attention (long_500k path)
+"""

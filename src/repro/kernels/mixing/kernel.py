@@ -1,0 +1,46 @@
+"""Fused consensus-mixing Pallas kernel:  OUT = P @ W  (paper Eq. 8/10).
+
+The per-step EF-HC aggregation multiplies the tiny doubly-stochastic
+transition matrix P (m x m, m = #FL devices <= 64) into the stacked flat
+parameter matrix W (m x n, n = model dim, huge).  On TPU this is a
+skinny-matmul streaming workload: W is tiled along n into MXU-aligned
+(m x bn) VMEM blocks; P stays resident in VMEM for every grid step.
+
+Grid: (n // bn,).  Arithmetic intensity is ~m flops/byte, so the kernel is
+HBM-bound; the point of fusing (vs XLA default) is to avoid materializing
+the (w_j - w_i) delta tensor in HBM for the delta form.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mix_kernel(p_ref, w_ref, o_ref):
+    p = p_ref[...].astype(jnp.float32)  # (m, m), VMEM-resident
+    w = w_ref[...].astype(jnp.float32)  # (m, bn)
+    o_ref[...] = jnp.dot(p, w, preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def mix_pallas(p: jax.Array, w: jax.Array, *, block_n: int = 512,
+               interpret: bool = False) -> jax.Array:
+    """p (m, m) float32; w (m, n).  Returns (m, n) in w.dtype.
+    n must be a multiple of block_n (the ops wrapper pads)."""
+    m, n = w.shape
+    assert n % block_n == 0, (n, block_n)
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        _mix_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, m), lambda i: (0, 0)),  # P resident
+            pl.BlockSpec((m, block_n), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((m, block_n), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((m, n), w.dtype),
+        interpret=interpret,
+    )(p, w)

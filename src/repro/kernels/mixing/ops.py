@@ -1,0 +1,29 @@
+"""jit'd public wrapper: pads n to the block size, applies the kernel
+leaf-wise over a stacked parameter pytree."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.mixing.kernel import mix_pallas
+
+
+def mix(p: jax.Array, w: jax.Array, *, block_n: int = 512,
+        interpret: bool = False) -> jax.Array:
+    """p (m, m); w (m, n) -> (m, n); pads n up to a block multiple."""
+    m, n = w.shape
+    pad = (-n) % block_n
+    wp = jnp.pad(w, ((0, 0), (0, pad))) if pad else w
+    out = mix_pallas(p, wp, block_n=block_n, interpret=interpret)
+    return out[:, :n] if pad else out
+
+
+def mix_tree(p: jax.Array, tree, *, block_n: int = 512, interpret: bool = False):
+    """Apply the consensus mixing to a pytree whose leaves have a leading
+    fl axis: each leaf is flattened to (m, -1), mixed, and reshaped."""
+    def one(leaf):
+        m = leaf.shape[0]
+        flat = leaf.reshape(m, -1)
+        return mix(p, flat, block_n=block_n, interpret=interpret).reshape(leaf.shape)
+
+    return jax.tree.map(one, tree)

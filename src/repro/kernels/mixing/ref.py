@@ -1,0 +1,7 @@
+"""Pure-jnp oracle for the mixing kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def mix_ref(p: jax.Array, w: jax.Array) -> jax.Array:
+    return (p.astype(jnp.float32) @ w.astype(jnp.float32)).astype(w.dtype)

@@ -1,0 +1,119 @@
+"""Sliding-window causal flash attention (forward) Pallas kernel.
+
+The sub-quadratic attention path for ``long_500k`` (starcoder2's window-4096
+attention, hymba's windowed layers).  Design for TPU:
+
+  * grid (B, H, n_q_blocks, n_kv_blocks_per_q): the last axis iterates the
+    *window-pruned* KV range for the current q block - out-of-window blocks
+    are never fetched, which is where the sub-quadratic cost comes from.
+  * q/k/v tiles live in VMEM with MXU-aligned (128-multiple) block shapes;
+    softmax runs online with fp32 (m, l, acc) scratch carried across the
+    sequential innermost grid axis.
+  * GQA: the k/v BlockSpec index_map folds the head-group mapping
+    h -> h // (H // G), so no KV duplication in HBM.
+
+Work per q block: (window + bq) columns => FLOPs ~ 4 * S * (W + bq) * dh
+per (b, h) instead of 2 * S^2 * dh.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _swa_fwd_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                    block_q: int, block_k: int, window: int, n_kv: int, seq_k: int):
+    iq = pl.program_id(2)
+    jk = pl.program_id(3)
+
+    @pl.when(jk == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # (bq, dh)
+    k = k_ref[0, 0].astype(jnp.float32)  # (bk, dh)
+    v = v_ref[0, 0].astype(jnp.float32)  # (bk, dh)
+    dh = q.shape[-1]
+
+    # absolute positions of this tile (recompute the clamped block index
+    # exactly as the BlockSpec index_map does)
+    rq = block_q // block_k
+    raw = iq * rq - (window // block_k) + jk
+    k_blk = jnp.clip(raw, 0, seq_k // block_k - 1)
+    q_pos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    k_pos = k_blk * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = (k_pos <= q_pos) & (k_pos > q_pos - window) & (raw == k_blk)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) / jnp.sqrt(dh * 1.0)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_scr[...] = l_scr[...] * alpha + p.sum(axis=1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(jk == n_kv - 1)
+    def _finish():
+        l = l_scr[...]
+        o_ref[0, 0] = (acc_scr[...] / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("window", "block_q", "block_k", "interpret"))
+def swa_attention_pallas(
+    q: jax.Array,  # (B, H, S, dh)
+    k: jax.Array,  # (B, G, S, dh)
+    v: jax.Array,  # (B, G, S, dh)
+    *,
+    window: int,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    b, h, s, dh = q.shape
+    g = k.shape[1]
+    assert h % g == 0 and s % block_q == 0 and s % block_k == 0
+    assert block_q % block_k == 0 and window % block_k == 0
+    rq = block_q // block_k
+    n_kv = window // block_k + rq
+    grid = (b, h, s // block_q, n_kv)
+    group = h // g
+
+    def k_index(bi, hi, iq, jk):
+        raw = iq * rq - (window // block_k) + jk
+        blk = jnp.clip(raw, 0, s // block_k - 1)
+        return (bi, hi // group, blk, 0)
+
+    kernel = functools.partial(
+        _swa_fwd_kernel, block_q=block_q, block_k=block_k, window=window,
+        n_kv=n_kv, seq_k=s)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, dh), lambda bi, hi, iq, jk: (bi, hi, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, dh), k_index),
+            pl.BlockSpec((1, 1, block_k, dh), k_index),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, dh), lambda bi, hi, iq, jk: (bi, hi, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle: dense masked sliding-window causal attention."""
+import jax
+import jax.numpy as jnp
+
+
+def swa_ref(q, k, v, *, window: int):
+    """q (B,H,S,dh), k/v (B,G,S,dh) -> (B,H,S,dh)."""
+    b, h, s, dh = q.shape
+    g = k.shape[1]
+    qg = q.reshape(b, g, h // g, s, dh)
+    scores = jnp.einsum("bgrsk,bgtk->bgrst", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(dh * 1.0)
+    pos = jnp.arange(s)
+    mask = (pos[None, :] <= pos[:, None]) & (pos[None, :] > pos[:, None] - window)
+    scores = jnp.where(mask, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bgrst,bgtk->bgrsk", p, v.astype(jnp.float32))
+    return out.reshape(b, h, s, dh).astype(q.dtype)

@@ -1,0 +1,55 @@
+"""Fused trigger-deviation Pallas kernel (paper Eq. 3 LHS).
+
+Computes per-FL-device squared parameter deviation
+
+    sq[i] = sum_n (w[i, n] - w_hat[i, n])^2
+
+without materializing (w - w_hat) in HBM.  W is streamed through VMEM in
+(m x bn) tiles; a (m x 128) f32 accumulator output block is revisited by
+every grid step (TPU grids execute sequentially, so read-modify-write on a
+revisited output block is well-defined).  Lane reduction to (m,) happens in
+the ops wrapper.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+
+
+def _trigger_kernel(w_ref, h_ref, o_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    d = w_ref[...].astype(jnp.float32) - h_ref[...].astype(jnp.float32)
+    sq = d * d  # (m, bn)
+    m, bn = sq.shape
+    part = sq.reshape(m, bn // LANES, LANES).sum(axis=1)  # (m, LANES)
+    o_ref[...] += part
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def trigger_sq_pallas(w: jax.Array, w_hat: jax.Array, *, block_n: int = 1024,
+                      interpret: bool = False) -> jax.Array:
+    """w, w_hat (m, n); n % block_n == 0; returns (m, 128) partial sums."""
+    m, n = w.shape
+    assert n % block_n == 0 and block_n % LANES == 0
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        _trigger_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, block_n), lambda i: (0, i)),
+            pl.BlockSpec((m, block_n), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((m, LANES), lambda i: (0, 0)),  # revisited
+        out_shape=jax.ShapeDtypeStruct((m, LANES), jnp.float32),
+        interpret=interpret,
+    )(w, w_hat)

@@ -1,0 +1,35 @@
+"""jit'd wrappers: padding + lane reduction + threshold compare."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.trigger.kernel import trigger_sq_pallas
+
+
+def trigger_sq(w: jax.Array, w_hat: jax.Array, *, block_n: int = 1024,
+               interpret: bool = False) -> jax.Array:
+    """(m, n) x2 -> (m,) squared deviation; pads n (zero pad -> no effect)."""
+    m, n = w.shape
+    pad = (-n) % block_n
+    if pad:
+        w = jnp.pad(w, ((0, 0), (0, pad)))
+        w_hat = jnp.pad(w_hat, ((0, 0), (0, pad)))
+    part = trigger_sq_pallas(w, w_hat, block_n=block_n, interpret=interpret)
+    return part.sum(axis=1)
+
+
+def trigger_sq_tree(w_tree, h_tree, *, interpret: bool = False) -> jax.Array:
+    """Pytree form: leaves (m, ...) are flattened and accumulated."""
+    tot = None
+    for w, h in zip(jax.tree.leaves(w_tree), jax.tree.leaves(h_tree)):
+        m = w.shape[0]
+        s = trigger_sq(w.reshape(m, -1), h.reshape(m, -1), interpret=interpret)
+        tot = s if tot is None else tot + s
+    return tot
+
+
+def events(w, w_hat, *, n_model: int, r: float, rho: jax.Array,
+           gamma_k: jax.Array, interpret: bool = False) -> jax.Array:
+    dev = jnp.sqrt(trigger_sq(w, w_hat, interpret=interpret) / n_model)
+    return dev >= r * rho * gamma_k

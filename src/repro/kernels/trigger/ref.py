@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the trigger kernel."""
+import jax.numpy as jnp
+
+
+def trigger_sq_ref(w, w_hat):
+    d = w.astype(jnp.float32) - w_hat.astype(jnp.float32)
+    return (d * d).sum(axis=1)
+
+
+def events_ref(w, w_hat, *, n_model, r, rho, gamma_k):
+    """v_i = 1{ sqrt(sq_i / n) >= r * rho_i * gamma_k }  (paper Eq. 3/7)."""
+    dev = jnp.sqrt(trigger_sq_ref(w, w_hat) / n_model)
+    return dev >= r * rho * gamma_k

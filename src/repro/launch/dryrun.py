@@ -1,0 +1,277 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("REPRO_XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+# (the two lines above MUST run before any jax import - jax locks the device
+#  count on first init; REPRO_XLA_FLAGS lets tests use a smaller device pool)
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh)
+combination against the production meshes, proving the distribution config
+is coherent without hardware.  Writes one JSON artifact per combo with
+memory_analysis, cost_analysis and the collective-bytes breakdown parsed
+from the optimized HLO (consumed by benchmarks/roofline.py).
+
+Usage:
+  python -m repro.launch.dryrun --arch starcoder2-15b --shape train_4k \
+      --mesh single --out artifacts/dryrun
+  python -m repro.launch.dryrun --all --mesh both --out artifacts/dryrun
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch import input_specs as ispec
+from repro.launch import steps as steps_mod
+from repro.launch.mesh import make_production_mesh
+from repro.models.common import INPUT_SHAPES, supported_shapes
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^)]*\)|[^ ]+)\s+([\w\-]+)")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Sum operand bytes of every collective op in the optimized HLO.
+    Two passes: map instruction name -> output bytes, then for collective
+    instructions sum their operands' bytes (falling back to output bytes)."""
+    sizes: dict[str, int] = {}
+    hlo_text = re.sub(r"/\*.*?\*/", "", hlo_text)
+    lines = hlo_text.splitlines()
+    for ln in lines:
+        m = _INSTR_RE.match(ln)
+        if m:
+            sizes[m.group(1)] = _type_bytes(m.group(2))
+    out: dict[str, float] = {c: 0.0 for c in _COLLECTIVES}
+    out["count"] = 0
+    for ln in lines:
+        m = _INSTR_RE.match(ln)
+        if not m:
+            continue
+        name, type_str, op = m.groups()
+        kind = None
+        for c in _COLLECTIVES:
+            if op == c or op.startswith(c + "-start") or op.startswith(c + "."):
+                kind = c
+                break
+        if kind is None:
+            continue
+        if op.endswith("-done"):
+            continue  # avoid double counting async pairs
+        # operand list inside the first (...) after the op name
+        paren = ln.find("(", ln.find(op))
+        args_str = ln[paren + 1 : ln.find(")", paren)] if paren >= 0 else ""
+        operand_bytes = 0
+        for ref in re.findall(r"%?([\w.\-]+)", args_str):
+            operand_bytes += sizes.get(ref, 0)
+        if operand_bytes == 0:
+            operand_bytes = _type_bytes(type_str)
+        out[kind] += float(operand_bytes)
+        out["count"] += 1
+    out["total"] = float(sum(out[c] for c in _COLLECTIVES))
+    return out
+
+
+def _mem_dict(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:  # pragma: no cover - backend dependent
+        return {"error": str(e)}
+    out = {}
+    for f in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        try:
+            out[f] = int(getattr(ma, f))
+        except Exception:
+            pass
+    return out
+
+
+def run_combo(arch: str, shape_name: str, multi_pod: bool, *, mix: str = "dense",
+              out_dir: str | None = None, verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    import dataclasses
+
+    from repro import variants
+
+    if variants.active("no_remat"):
+        cfg = dataclasses.replace(cfg, remat=False)
+    if variants.value("attn_chunk"):
+        cfg = dataclasses.replace(cfg, attn_chunk=int(variants.value("attn_chunk")))
+    if variants.value("fl_m"):
+        cfg = dataclasses.replace(cfg, fl_m=int(variants.value("fl_m")))
+    if variants.active("pallas_swa") and cfg.window:
+        cfg = dataclasses.replace(cfg, attn_impl="pallas_swa")
+    if variants.active("banded") and cfg.window:
+        cfg = dataclasses.replace(cfg, attn_impl="banded")
+    if variants.active("moe_shard_map") and cfg.moe is not None:
+        cfg = dataclasses.replace(cfg, moe=dataclasses.replace(cfg.moe, impl="shard_map"))
+    if variants.value("mlstm_chunk"):
+        cfg = dataclasses.replace(cfg, mlstm_chunk=int(variants.value("mlstm_chunk")))
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+
+    if shape.kind == "train":
+        setup = steps_mod.make_setup(cfg, mesh, mix=mix)
+        n_par = cfg.n_params
+        sp = ispec.train_specs(cfg, shape, mesh, setup.m, setup.mode)
+        gshard = ispec.to_named(mesh, sp.in_shardings[0])
+        if setup.mix == "neighbor":
+            fn = steps_mod.make_neighbor_train_step(setup, mesh, n_model_params=n_par)
+        else:
+            fn = steps_mod.make_train_step(setup, mesh, n_model_params=n_par,
+                                           grad_shardings=gshard)
+        with mesh:
+            lowered = jax.jit(
+                fn, in_shardings=ispec.to_named(mesh, sp.in_shardings),
+                out_shardings=ispec.to_named(mesh, sp.out_shardings),
+                donate_argnums=(0, 1),
+            ).lower(sp.params, sp.w_hat, sp.batch, sp.k)
+            compiled = lowered.compile()
+        extra = {"m": setup.m, "mode": setup.mode, "mix": setup.mix}
+    elif shape.kind == "prefill":
+        fn = steps_mod.make_prefill_step(cfg, mesh)
+        sp = ispec.prefill_specs(cfg, shape, mesh)
+        with mesh:
+            lowered = jax.jit(
+                fn, in_shardings=ispec.to_named(mesh, sp.in_shardings),
+                out_shardings=ispec.to_named(mesh, sp.out_shardings),
+            ).lower(sp.params, sp.batch)
+            compiled = lowered.compile()
+        extra = {}
+    else:  # decode
+        fn = steps_mod.make_serve_step(cfg, mesh)
+        sp = ispec.serve_specs(cfg, shape, mesh)
+        with mesh:
+            lowered = jax.jit(
+                fn, in_shardings=ispec.to_named(mesh, sp.in_shardings),
+                out_shardings=ispec.to_named(mesh, sp.out_shardings),
+                donate_argnums=(1,),
+            ).lower(sp.params, sp.caches, sp.tokens, sp.t)
+            compiled = lowered.compile()
+        extra = {}
+
+    compile_s = time.time() - t0
+    cost = {}
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        cost = {k: float(v) for k, v in ca.items()
+                if isinstance(v, (int, float)) and (
+                    k in ("flops", "transcendentals") or k.startswith("bytes accessed"))}
+    except Exception as e:
+        cost = {"error": str(e)}
+    mem = _mem_dict(compiled)
+    hlo_text = compiled.as_text()
+    coll = collective_bytes(hlo_text)
+    # loop-aware accounting (cost_analysis counts scan bodies once; this
+    # multiplies by while trip counts - see repro.launch.hlo_analysis)
+    from repro.launch import hlo_analysis
+
+    try:
+        hlo_tot = hlo_analysis.totals(hlo_text)
+        hlo_tot.pop("entry", None)
+    except Exception as e:  # pragma: no cover
+        hlo_tot = {"error": str(e)}
+
+    n_devices = int(np.prod(list(mesh.shape.values())))
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "n_devices": n_devices,
+        "kind": shape.kind,
+        "compile_seconds": round(compile_s, 2),
+        "n_params": cfg.n_params,
+        "n_active_params": cfg.n_active_params,
+        "cost_analysis": cost,
+        "memory_analysis": mem,
+        "collective_bytes": coll,
+        "hlo_totals": hlo_tot,
+        **extra,
+    }
+    if verbose:
+        print(json.dumps({k: result[k] for k in
+                          ("arch", "shape", "mesh", "compile_seconds")}))
+        print("  memory_analysis:", mem)
+        print("  cost_analysis:", {k: f"{v:.3e}" for k, v in cost.items() if isinstance(v, float)})
+        print("  collective_bytes:", {k: f"{v:.3e}" for k, v in coll.items()})
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        suffix = "" if mix == "dense" else f"-{mix}"
+        path = os.path.join(out_dir, f"{arch}--{shape_name}--{result['mesh']}{suffix}.json")
+        with open(path, "w") as f:
+            json.dump(result, f, indent=1)
+    return result
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(INPUT_SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--mix", choices=["dense", "neighbor"], default="dense")
+    ap.add_argument("--all", action="store_true", help="run every supported combo")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args(argv)
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    combos = []
+    if args.all:
+        for a in ARCH_IDS:
+            for s in supported_shapes(get_config(a)):
+                combos.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all required"
+        combos = [(args.arch, args.shape)]
+
+    failures = []
+    for a, s in combos:
+        if s not in supported_shapes(get_config(a)):
+            print(f"SKIP {a} x {s} (unsupported; see DESIGN.md §4)")
+            continue
+        for mp in meshes:
+            tag = f"{a} x {s} x {'multi' if mp else 'single'}"
+            try:
+                run_combo(a, s, mp, mix=args.mix, out_dir=args.out)
+            except Exception as e:
+                failures.append(tag)
+                print(f"FAIL {tag}: {e}")
+                traceback.print_exc()
+    if failures:
+        print("FAILURES:", failures)
+        return 1
+    print("dry-run OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

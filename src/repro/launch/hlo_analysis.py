@@ -1,0 +1,237 @@
+"""Loop-aware roofline accounting from optimized HLO text.
+
+``compiled.cost_analysis()`` on the CPU backend counts each while-loop body
+(= lax.scan layer stack) ONCE, not x trip-count - wrong by ~n_layers for
+scanned transformers.  This module re-derives the three roofline inputs by
+statically walking the optimized HLO:
+
+  * dot FLOPs       - 2 * numel(out) * k for every dot, x enclosing trips
+  * kernel bytes    - sum(operand + output bytes) of every top-level kernel
+                      (post-fusion, so ~ one HBM round-trip per instruction),
+                      x enclosing trips  -> HBM-traffic proxy
+  * collective bytes- operand bytes per collective kind, x enclosing trips
+
+While trip counts come from the loop condition's comparison constant.
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{\s*$")
+_INSTR = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^=]*?\)|\S+)\s+([\w\-]+)\((.*)$")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SKIP_OPS = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+             "while", "call", "conditional", "after-all", "iota",
+             "partition-id", "replica-id",
+             # loop-carry copies: elided on TPU via buffer aliasing/donation
+             # (the CPU backend materializes them; counting them would put
+             # ~100x phantom HBM traffic on every scan carry)
+             "copy", "copy-start", "copy-done"}
+
+
+def _shape_dims(type_str: str) -> list[tuple[str, list[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt in _DTYPE_BYTES:
+            out.append((dt, [int(d) for d in dims.split(",")] if dims else []))
+    return out
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _shape_dims(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+class _Comp:
+    def __init__(self):
+        self.types: dict[str, str] = {}
+        self.flops = 0.0
+        self.bytes = 0.0
+        self.coll: dict[str, float] = {c: 0.0 for c in _COLLECTIVES}
+        self.coll_count = 0
+        self.children: list[tuple[str, str]] = []  # (kind, comp_name) kind in while|call
+        self.whiles: list[tuple[str, str]] = []  # (body_comp, cond_comp)
+        self.max_const = 0  # for trip-count inference when used as a condition
+
+
+def parse(text: str) -> dict[str, _Comp]:
+    comps: dict[str, _Comp] = {}
+    cur: Optional[_Comp] = None
+    comment = re.compile(r"/\*.*?\*/")
+    for raw in text.splitlines():
+        line = comment.sub("", raw).rstrip()
+        hdr = _COMP_HDR.match(line)
+        if hdr and ("->" in line):
+            cur = comps.setdefault(hdr.group(1), _Comp())
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            continue
+        m = _INSTR.match(line)
+        if not m:
+            cm = re.search(r"constant\((\d+)\)", line)
+            if cm:
+                cur.max_const = max(cur.max_const, int(cm.group(1)))
+            continue
+        name, type_str, op, rest = m.groups()
+        cur.types[name] = type_str
+        if op == "constant":
+            cm = re.match(r"\s*(\d+)\s*\)", rest)
+            if cm:
+                cur.max_const = max(cur.max_const, int(cm.group(1)))
+            continue
+        if op == "while":
+            body = re.search(r"body=%?([\w.\-]+)", line)
+            cond = re.search(r"condition=%?([\w.\-]+)", line)
+            if body and cond:
+                cur.whiles.append((body.group(1), cond.group(1)))
+            continue
+        if op in ("call", "async-start"):
+            tgt = re.search(r"to_apply=%?([\w.\-]+)", line)
+            if tgt:
+                cur.children.append(("call", tgt.group(1)))
+        if op in _SKIP_OPS:
+            continue
+        # pure layout/dtype-movement fusions: the CPU backend materializes
+        # per-iteration transposes/converts of bf16 carries (f32 shadows)
+        # that XLA:TPU folds into consumers - exclude from the HBM proxy
+        if op == "fusion" and re.match(
+                r"^(transpose_copy|convert_bitcast|bitcast_convert|copy|convert|transpose)[_.]", name):
+            continue
+        if op in ("convert", "transpose", "reshape"):
+            continue
+        # operand bytes: refs in the argument list (first balanced paren run)
+        depth, args_end = 1, len(rest)
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    args_end = i
+                    break
+        args = rest[:args_end]
+        operand_sizes = [
+            _type_bytes(cur.types.get(ref, ""))
+            for ref in re.findall(r"%([\w.\-]+)", args)
+        ]
+        operand_bytes = sum(operand_sizes)
+        out_bytes = _type_bytes(type_str)
+        # in-place slice ops on big loop carries touch only the slice, not
+        # the whole buffer - approximate their true traffic:
+        lname = name.lower()
+        if "dynamic-update-slice" in lname or op == "dynamic-update-slice":
+            small = [s for s in operand_sizes if s < out_bytes]
+            operand_bytes = sum(small)
+            out_bytes = max(small) if small else out_bytes
+        elif "dynamic-slice" in lname or op in ("dynamic-slice", "gather"):
+            operand_bytes = out_bytes
+        elif op == "scatter":
+            upd = operand_sizes[-1] if operand_sizes else out_bytes
+            operand_bytes = 2 * upd
+            out_bytes = 0
+
+        is_coll = None
+        for c in _COLLECTIVES:
+            if op == c or op.startswith(c + "-start"):
+                is_coll = c
+                break
+        if op.endswith("-done"):
+            continue
+        if is_coll:
+            cur.coll[is_coll] += float(operand_bytes or out_bytes)
+            cur.coll_count += 1
+            continue
+        cur.bytes += float(operand_bytes + out_bytes)
+        if op == "dot":
+            # k = product of lhs contracting dims
+            lhs_ref = re.match(r"\s*%?([\w.\-]+)", args)
+            k = 1
+            cd = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+            if lhs_ref and cd and cd.group(1):
+                shapes = _shape_dims(cur.types.get(lhs_ref.group(1), ""))
+                if shapes:
+                    dims = shapes[0][1]
+                    for di in cd.group(1).split(","):
+                        di = int(di)
+                        if di < len(dims):
+                            k *= dims[di]
+            out_elems = 0
+            for dt, dims in _shape_dims(type_str):
+                n = 1
+                for d in dims:
+                    n *= d
+                out_elems += n
+            cur.flops += 2.0 * out_elems * k
+        elif op in ("convolution",):
+            cur.bytes += 0.0  # bytes already counted; flops: rare, skipped
+    return comps
+
+
+def totals(text: str, entry_hint: str = "main") -> dict:
+    comps = parse(text)
+    entry = None
+    for name in comps:
+        if name.startswith(entry_hint):
+            entry = name
+    if entry is None:  # fall back: the computation that is no one's child
+        referenced = set()
+        for c in comps.values():
+            referenced.update(n for _, n in c.children)
+            referenced.update(b for b, _ in c.whiles)
+            referenced.update(cd for _, cd in c.whiles)
+        cands = [n for n in comps if n not in referenced]
+        entry = cands[-1] if cands else next(iter(comps))
+
+    memo: dict[str, tuple] = {}
+
+    def walk(name: str) -> tuple:
+        if name in memo:
+            return memo[name]
+        c = comps.get(name)
+        if c is None:
+            return (0.0, 0.0, {k: 0.0 for k in _COLLECTIVES}, 0)
+        memo[name] = (0.0, 0.0, {k: 0.0 for k in _COLLECTIVES}, 0)  # cycle guard
+        flops, bts = c.flops, c.bytes
+        coll = dict(c.coll)
+        cnt = c.coll_count
+        for kind, child in c.children:
+            f, b, cl, cc = walk(child)
+            flops += f
+            bts += b
+            for k in coll:
+                coll[k] += cl[k]
+            cnt += cc
+        for body, cond in c.whiles:
+            trips = max(comps[cond].max_const if cond in comps else 1, 1)
+            f, b, cl, cc = walk(body)
+            flops += trips * f
+            bts += trips * b
+            for k in coll:
+                coll[k] += trips * cl[k]
+            cnt += trips * cc
+        memo[name] = (flops, bts, coll, cnt)
+        return memo[name]
+
+    flops, bts, coll, cnt = walk(entry)
+    return {
+        "flops_dot": flops,
+        "kernel_bytes": bts,
+        "collective": {**coll, "total": sum(coll.values()), "count": cnt},
+        "entry": entry,
+    }

@@ -1,0 +1,143 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation).
+
+For each (arch, input shape) pair this module produces:
+  * the abstract params (+ w_hat for train) via jax.eval_shape,
+  * the abstract batch / decode inputs,
+  * the matching PartitionSpec trees for jit in_shardings.
+
+Shapes follow the assignment:
+  train_4k     seq 4096,   global_batch 256   -> train_step
+  prefill_32k  seq 32768,  global_batch 32    -> prefill_step
+  decode_32k   seq 32768,  global_batch 128   -> serve_step (1 new token)
+  long_500k    seq 524288, global_batch 1     -> serve_step (1 new token)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.models import model as M
+from repro.models import sharding as S
+from repro.models.common import INPUT_SHAPES, ArchConfig, InputShape
+
+SDS = jax.ShapeDtypeStruct
+
+
+def to_named(mesh: Mesh, tree):
+    """PartitionSpec tree -> NamedSharding tree (jit in/out_shardings)."""
+    from jax.sharding import NamedSharding
+
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def param_shapes(cfg: ArchConfig):
+    return jax.eval_shape(lambda: M.init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def stacked_param_shapes(cfg: ArchConfig, m: int):
+    base = param_shapes(cfg)
+    return jax.tree.map(lambda s: SDS((m, *s.shape), s.dtype), base)
+
+
+def cache_shapes(cfg: ArchConfig, batch: int, cache_len: int):
+    return jax.eval_shape(lambda: M.init_cache(cfg, batch, cache_len))
+
+
+def _batch_struct(cfg: ArchConfig, batch: int, seq: int) -> dict[str, SDS]:
+    out: dict[str, SDS] = {}
+    if cfg.frontend is not None and cfg.frontend.kind == "vision":
+        text = seq - cfg.frontend.tokens
+        out["tokens"] = SDS((batch, text), jnp.int32)
+        out["targets"] = SDS((batch, text), jnp.int32)
+        out["loss_mask"] = SDS((batch, text), jnp.float32)
+        out["frontend"] = SDS((batch, cfg.frontend.tokens, cfg.frontend.dim), jnp.float32)
+    elif cfg.frontend is not None:  # audio: frames are the sequence
+        out["tokens"] = SDS((batch, seq), jnp.int32)
+        out["targets"] = SDS((batch, seq), jnp.int32)
+        out["loss_mask"] = SDS((batch, seq), jnp.float32)
+        out["frontend"] = SDS((batch, seq, cfg.frontend.dim), jnp.float32)
+    else:
+        out["tokens"] = SDS((batch, seq), jnp.int32)
+        out["targets"] = SDS((batch, seq), jnp.int32)
+    return out
+
+
+@dataclasses.dataclass
+class TrainSpecs:
+    params: Any
+    w_hat: Any
+    batch: Any
+    k: SDS
+    in_shardings: tuple
+    out_shardings: Any
+
+
+def train_specs(cfg: ArchConfig, shape: InputShape, mesh: Mesh, m: int, mode: str) -> TrainSpecs:
+    assert shape.kind == "train"
+    per_fl = shape.global_batch // m
+    assert per_fl >= 1, f"{cfg.name}: global_batch {shape.global_batch} < m {m}"
+    pshapes = stacked_param_shapes(cfg, m)
+    base_specs = S.param_specs(cfg, param_shapes(cfg), mesh, mode)
+    pspecs = S.add_fl_axis(base_specs, mesh, mode)
+
+    batch = _batch_struct(cfg, per_fl, shape.seq_len)
+    batch = jax.tree.map(lambda s: SDS((m, *s.shape), s.dtype), batch)
+    bspecs = S.token_batch_specs(batch, mesh, fl_axis=True, mode=mode)
+    k = SDS((), jnp.int32)
+
+    in_shardings = (pspecs, pspecs, bspecs, P())
+    out_shardings = (pspecs, pspecs, {"loss": P(), "trigger_rate": P(), "alpha": P()})
+    return TrainSpecs(params=pshapes, w_hat=pshapes, batch=batch, k=k,
+                      in_shardings=in_shardings, out_shardings=out_shardings)
+
+
+@dataclasses.dataclass
+class ServeSpecs:
+    params: Any
+    caches: Any
+    tokens: Any
+    t: SDS
+    in_shardings: tuple
+    out_shardings: Any
+
+
+def serve_specs(cfg: ArchConfig, shape: InputShape, mesh: Mesh) -> ServeSpecs:
+    assert shape.kind == "decode"
+    pshapes = param_shapes(cfg)
+    pspecs = S.param_specs(cfg, pshapes, mesh, "fsdp")  # fully sharded serving
+    cshapes = cache_shapes(cfg, shape.global_batch, shape.seq_len)
+    cspecs = S.cache_specs(cshapes, mesh)
+    tokens = SDS((shape.global_batch,), jnp.int32)
+    tspec = S.token_batch_specs({"t": tokens}, mesh, fl_axis=False, mode="serve")["t"]
+    t = SDS((), jnp.int32)
+    in_shardings = (pspecs, cspecs, tspec, P())
+    out_shardings = (P(), cspecs)  # logits replicated (small), caches in place
+    return ServeSpecs(params=pshapes, caches=cshapes, tokens=tokens, t=t,
+                      in_shardings=in_shardings, out_shardings=out_shardings)
+
+
+@dataclasses.dataclass
+class PrefillSpecs:
+    params: Any
+    batch: Any
+    in_shardings: tuple
+    out_shardings: Any
+
+
+def prefill_specs(cfg: ArchConfig, shape: InputShape, mesh: Mesh) -> PrefillSpecs:
+    assert shape.kind == "prefill"
+    pshapes = param_shapes(cfg)
+    pspecs = S.param_specs(cfg, pshapes, mesh, "fsdp")
+    batch = _batch_struct(cfg, shape.global_batch, shape.seq_len)
+    bspecs = S.token_batch_specs(batch, mesh, fl_axis=False, mode="serve")
+    in_shardings = (pspecs, bspecs)
+    da = S.data_axes(mesh)
+    out_shardings = P(da if len(da) > 1 else da[0])  # logits: batch-sharded
+    return PrefillSpecs(params=pshapes, batch=batch,
+                        in_shardings=in_shardings, out_shardings=out_shardings)

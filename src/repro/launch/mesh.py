@@ -1,0 +1,34 @@
+"""Production meshes.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state.  The dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before any jax import.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def _mk(shape, axes):
+    from jax.sharding import AxisType
+
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mk(shape, axes)
+
+
+def make_host_mesh(*, data: int = 2, model: int = 2, pods: int = 0):
+    """Small mesh over forced host devices for integration tests."""
+    if pods:
+        return _mk((pods, data, model), ("pod", "data", "model"))
+    return _mk((data, model), ("data", "model"))
+
+
+# TPU v5e hardware constants used by the roofline analysis
+PEAK_FLOPS_BF16 = 197e12  # per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link

@@ -1,0 +1,86 @@
+"""Serving driver: batched prompt prefill (via replayed decode) + decode.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch xlstm-125m --smoke \
+      --batch 4 --prompt_len 16 --gen 16
+"""
+import argparse
+import os
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--devices", type=int, default=0)
+    ap.add_argument("--data", type=int, default=1)
+    ap.add_argument("--model", type=int, default=1)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt_len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=1.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    if args.devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices} "
+            + os.environ.get("XLA_FLAGS", ""))
+
+    import time
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import get_config, smoke_config
+    from repro.data.synthetic import token_dataset
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import model as M
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if not cfg.supports_decode:
+        print(f"{cfg.name} is encoder-only: running encode forward instead")
+    key = jax.random.PRNGKey(args.seed)
+    params = M.init_params(cfg, key)
+
+    if not cfg.supports_decode:
+        batch = {
+            "tokens": jnp.zeros((args.batch, args.prompt_len), jnp.int32),
+            "targets": jnp.zeros((args.batch, args.prompt_len), jnp.int32),
+            "frontend": jax.random.normal(key, (args.batch, args.prompt_len, cfg.frontend.dim)),
+        }
+        feats, _ = jax.jit(lambda p, b: M.forward(cfg, p, b))(params, batch)
+        print("encoded:", feats.shape)
+        return 0
+
+    cache_len = args.prompt_len + args.gen
+    caches = M.init_cache(cfg, args.batch, cache_len)
+    stream = token_dataset(4096, vocab=cfg.vocab, seed=args.seed)
+    prompts = np.stack([stream[i * args.prompt_len:(i + 1) * args.prompt_len]
+                        for i in range(args.batch)]).astype(np.int32)
+
+    decode = jax.jit(lambda p, c, tok, t: M.decode_step(cfg, p, c, tok, t))
+
+    t0 = time.time()
+    logits = None
+    for t in range(args.prompt_len):  # prefill by replaying decode (exact)
+        logits, caches = decode(params, caches, jnp.asarray(prompts[:, t]), jnp.asarray(t))
+    out = []
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    for t in range(args.prompt_len, cache_len):
+        out.append(np.asarray(tok))
+        logits, caches = decode(params, caches, tok, jnp.asarray(t))
+        if args.temperature > 0 and args.temperature != 1.0:
+            logits = logits / args.temperature
+        key, sub = jax.random.split(key)
+        tok = jax.random.categorical(sub, logits).astype(jnp.int32)
+    dt = time.time() - t0
+    gen = np.stack(out, axis=1)
+    print(f"generated {gen.shape} tokens in {dt:.2f}s "
+          f"({args.batch * args.gen / dt:.1f} tok/s)")
+    print("sample:", gen[0][:16].tolist())
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,228 @@
+"""Distributed train/serve steps for the production meshes.
+
+train_step implements one universal EF-HC iteration (paper Alg. 1) at
+framework scale: FL devices are model replicas enumerated by the mesh's fl
+axes (DESIGN.md sec. 3).  Params carry a leading ``fl`` axis; the consensus
+mixing ``W <- P W`` is a tensordot over that axis, which XLA lowers to
+collectives across the fl mesh axes.  Event semantics: when no trigger
+fires, P = I and the mixing is a no-op (savings accounting in DESIGN.md).
+
+Mix schedules (selectable; see EXPERIMENTS.md §Perf):
+  * "dense"    - tensordot P @ W over the fl axis (all-gather class).
+  * "neighbor" - shard_map ppermute rounds over a static edge coloring of
+                 the base graph (beyond-paper; bytes scale with degree).
+  * "none"     - no consensus op in the compiled program (fl_m == 1).
+
+serve_step is a single-token decode against a supplied KV cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import consensus as core_consensus
+from repro.core import mixing as core_mixing
+from repro.models import model as M
+from repro.models import sharding as S
+from repro.models.common import ArchConfig, InputShape
+from repro.optim.schedules import paper_diminishing
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainSetup:
+    cfg: ArchConfig
+    mode: str  # replica | fsdp
+    m: int  # number of FL devices
+    adjacency: np.ndarray  # (m, m) static base graph (ring over fl devices)
+    bandwidths: np.ndarray  # (m,)
+    r: float = 0.05
+    alpha0: float = 0.01
+    mix: str = "dense"  # dense | neighbor | none
+
+
+def make_setup(cfg: ArchConfig, mesh: Mesh, *, mix: str = "dense") -> TrainSetup:
+    mode = "replica" if cfg.fl_m > 1 else "fsdp"
+    m = S.fl_count(mesh, mode)
+    if m >= 3:
+        from repro.core.topology import ring_adjacency
+
+        adj = ring_adjacency(m)
+    elif m == 2:
+        adj = np.array([[False, True], [True, False]])
+    else:
+        adj = np.zeros((1, 1), bool)
+        mix = "none"
+    # intra-pod replicas get fast links; pod-boundary replicas slower egress
+    # (cross-pod DCN) -> personalized (lower) trigger frequency, paper Sec. II
+    bw = np.full(m, 5000.0)
+    if "pod" in mesh.axis_names and m > 2:
+        per_pod = m // mesh.shape["pod"]
+        bw[::per_pod] = 1000.0  # pod-boundary replicas
+    if m == 1:
+        mix = "none"
+    return TrainSetup(cfg=cfg, mode=mode, m=m, adjacency=adj, bandwidths=bw, mix=mix)
+
+
+# ---------------------------------------------------------------------------
+# EF-HC pieces at framework scale
+# ---------------------------------------------------------------------------
+
+def _param_sq_diff(w, w_hat):
+    """Per-FL-device sum of squared parameter deviation: (m,)."""
+    tot = None
+    for a, b in zip(jax.tree.leaves(w), jax.tree.leaves(w_hat)):
+        d = (a.astype(jnp.float32) - b.astype(jnp.float32)) ** 2
+        s = d.reshape(d.shape[0], -1).sum(axis=1)
+        tot = s if tot is None else tot + s
+    return tot
+
+
+def _mix_dense(p_mat, w):
+    from repro import variants
+
+    if variants.active("mix_bf16"):
+        # bf16 consensus mixing: halves the cross-replica collective bytes;
+        # numerically safe because P is doubly stochastic (convex combo)
+        return jax.tree.map(
+            lambda leaf: jnp.tensordot(p_mat.astype(leaf.dtype), leaf, axes=1), w)
+    return jax.tree.map(
+        lambda leaf: jnp.tensordot(p_mat.astype(jnp.float32), leaf.astype(jnp.float32), axes=1).astype(leaf.dtype),
+        w)
+
+
+def make_train_step(setup: TrainSetup, mesh: Mesh, *, n_model_params: int,
+                    mix_override=None, grad_shardings=None):
+    """Returns the EF-HC train step function (to be jit'd with shardings).
+
+    grad_shardings: optional NamedSharding pytree matching the stacked
+    params; applied to the gradients so XLA lowers the cross-batch gradient
+    reduction as reduce-scatter into the param sharding instead of a
+    full-size all-reduce (critical for fsdp-mode giants; see §Perf)."""
+    cfg = setup.cfg
+    m = setup.m
+    fl_ax = S.fl_axes(mesh, setup.mode)
+    spmd_name = fl_ax if len(fl_ax) != 1 else fl_ax[0]
+    sched = paper_diminishing(setup.alpha0, gamma=1.0, theta=0.5)
+    adj = jnp.asarray(setup.adjacency)
+    bw = jnp.asarray(setup.bandwidths, jnp.float32)
+    rho = 1.0 / bw * jnp.mean(bw)  # normalized inverse-bandwidth (EF-HC)
+
+    def loss_one(params, batch):
+        with S.activation_sharding(mesh, setup.mode):
+            loss, metrics = M.loss_fn(cfg, params, batch)
+        return loss
+
+    if m == 1:
+        # no vmap for a single FL device: keeps the model code out of vmap
+        # so shard_map-based blocks (expert-parallel MoE) are usable
+        def vloss(params, batch):
+            p0 = jax.tree.map(lambda x: x[0], params)
+            b0 = jax.tree.map(lambda x: x[0], batch)
+            return loss_one(p0, b0)[None]
+    elif spmd_name:
+        vloss = jax.vmap(loss_one, in_axes=(0, 0), spmd_axis_name=spmd_name)
+    else:
+        vloss = jax.vmap(loss_one, in_axes=(0, 0))
+
+    def train_step(params, w_hat, batch, k):
+        alpha = sched(k)
+        gamma = alpha  # paper Sec. IV-A: gamma^(k) = alpha^(k)
+
+        # ---- Event 2: personalized triggers (paper Eq. 3) ----------------
+        if setup.mix != "none":
+            sq = _param_sq_diff(params, w_hat)
+            dev = jnp.sqrt(sq / float(n_model_params))
+            v = dev > setup.r * rho * gamma  # strict: paper Eq. 7
+            comm = jnp.logical_and(jnp.logical_or(v[:, None], v[None, :]), adj)
+            p_mat = core_mixing.build_p(adj, comm)
+            # ---- Event 3: consensus mixing (paper Eq. 8) ------------------
+            mix = mix_override if mix_override is not None else _mix_dense
+            mixed = mix(p_mat, params)
+            w_hat = jax.tree.map(
+                lambda h, w: jnp.where(
+                    v.reshape((m,) + (1,) * (w.ndim - 1)), w.astype(h.dtype), h),
+                w_hat, params)
+        else:
+            v = jnp.zeros((m,), bool)
+            mixed = params
+
+        # ---- Event 4: local SGD ------------------------------------------
+        loss, grads = jax.value_and_grad(lambda pr: vloss(pr, batch).sum())(mixed)
+        if grad_shardings is not None:
+            grads = jax.tree.map(jax.lax.with_sharding_constraint, grads, grad_shardings)
+        new_params = jax.tree.map(
+            lambda w, g: (w.astype(jnp.float32) - alpha * g.astype(jnp.float32)).astype(w.dtype),
+            mixed, grads)
+        metrics = {"loss": loss / m, "trigger_rate": v.astype(jnp.float32).mean(), "alpha": alpha}
+        return new_params, w_hat, metrics
+
+    return train_step
+
+
+def mix_neighbor_permute(p_mat: jax.Array, params, rounds) -> Any:
+    """Beyond-paper mix schedule: decompose the sparse P over a static edge
+    coloring of the base graph.  Each matching round is a constant
+    *permutation* of the fl axis (swap matched endpoints), which XLA lowers
+    to a collective-permute across the fl mesh axes - bytes scale with node
+    degree instead of m (vs the dense tensordot's all-gather class).
+
+        W' = diag(P) W + sum_r  w_r  *  W[perm_r]
+
+    where w_r[i] = P[i, perm_r[i]] (zero when i is unmatched in round r,
+    since then perm_r[i] == i and P's off-diagonal weight is not used).
+    """
+    m = p_mat.shape[0]
+    perms = []
+    for matching in rounds:
+        perm = np.arange(m)
+        for (a, b) in matching:
+            perm[a], perm[b] = perm[b], perm[a]
+        perms.append(perm)
+
+    def mix_leaf(leaf):
+        shape1 = (m,) + (1,) * (leaf.ndim - 1)
+        acc = jnp.diagonal(p_mat).reshape(shape1).astype(jnp.float32) * leaf.astype(jnp.float32)
+        for perm in perms:
+            idx = jnp.asarray(perm)
+            wgt = jnp.where(idx != jnp.arange(m), p_mat[jnp.arange(m), idx], 0.0)
+            acc = acc + wgt.reshape(shape1) * jnp.take(leaf, idx, axis=0).astype(jnp.float32)
+        return acc.astype(leaf.dtype)
+
+    return jax.tree.map(mix_leaf, params)
+
+
+def make_neighbor_train_step(setup: TrainSetup, mesh: Mesh, *, n_model_params: int,
+                             grad_shardings=None):
+    """make_train_step with the neighbor-permute mix schedule."""
+    rounds = core_consensus.edge_coloring(setup.adjacency)
+    return make_train_step(
+        setup, mesh, n_model_params=n_model_params, grad_shardings=grad_shardings,
+        mix_override=functools.partial(mix_neighbor_permute, rounds=rounds))
+
+
+# ---------------------------------------------------------------------------
+# serve step
+# ---------------------------------------------------------------------------
+
+def make_serve_step(cfg: ArchConfig, mesh: Mesh):
+    def serve_step(params, caches, tokens, t):
+        with S.activation_sharding(mesh, "serve"):
+            logits, new_caches = M.decode_step(cfg, params, caches, tokens, t)
+        return logits, new_caches
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ArchConfig, mesh: Mesh):
+    def prefill_step(params, batch):
+        with S.activation_sharding(mesh, "serve"):
+            logits, _ = M.forward(cfg, params, batch)
+        return logits
+
+    return prefill_step

@@ -1,0 +1,128 @@
+"""End-to-end decentralized training driver.
+
+Runs EF-HC training of any --arch (smoke or full config) on a host mesh.
+On this CPU container use --devices N to force a virtual device pool, e.g.:
+
+  PYTHONPATH=src python -m repro.launch.train --arch xlstm-125m --smoke \
+      --devices 8 --data 4 --model 2 --steps 50 --batch 8 --seq 128
+
+Each data-slice is one FL device (replica mode); the run logs loss,
+trigger rate and EF-HC consensus distance, and checkpoints via
+repro.checkpoint.
+"""
+import argparse
+import os
+import sys
+
+
+def _parse(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true", help="use the reduced config")
+    ap.add_argument("--devices", type=int, default=0, help="force host device count")
+    ap.add_argument("--data", type=int, default=1)
+    ap.add_argument("--model", type=int, default=1)
+    ap.add_argument("--fl_m", type=int, default=0, help="override cfg.fl_m")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8, help="global batch")
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--mix", choices=["dense", "neighbor"], default="dense")
+    ap.add_argument("--ckpt", default="")
+    ap.add_argument("--ckpt_every", type=int, default=50)
+    ap.add_argument("--log_every", type=int, default=5)
+    ap.add_argument("--seed", type=int, default=0)
+    return ap.parse_args(argv)
+
+
+def main(argv=None) -> int:
+    args = _parse(argv)
+    if args.devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices} "
+            + os.environ.get("XLA_FLAGS", ""))
+
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro import checkpoint
+    from repro.configs import get_config, smoke_config
+    from repro.data.loader import lm_batches
+    from repro.data.synthetic import token_dataset
+    from repro.launch import input_specs as ispec
+    from repro.launch import steps as steps_mod
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import model as M
+    from repro.models.common import InputShape
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if args.fl_m:
+        cfg = dataclasses.replace(cfg, fl_m=args.fl_m)
+    mesh = make_host_mesh(data=args.data, model=args.model)
+    setup = steps_mod.make_setup(cfg, mesh, mix=args.mix)
+    m = setup.m
+    assert args.batch % max(m, 1) == 0, "--batch must divide by FL devices"
+
+    shape = InputShape("cli", args.seq, args.batch, "train")
+    n_par = cfg.n_params
+    if setup.mix == "neighbor":
+        fn = steps_mod.make_neighbor_train_step(setup, mesh, n_model_params=n_par)
+    else:
+        fn = steps_mod.make_train_step(setup, mesh, n_model_params=n_par)
+    sp = ispec.train_specs(cfg, shape, mesh, m, setup.mode)
+    step_jit = jax.jit(fn, in_shardings=ispec.to_named(mesh, sp.in_shardings),
+                       out_shardings=ispec.to_named(mesh, sp.out_shardings))
+
+    key = jax.random.PRNGKey(args.seed)
+    base = M.init_params(cfg, key)
+    params = jax.tree.map(lambda l: jnp.stack([l] * m), base)
+    w_hat = jax.tree.map(jnp.copy, params)
+
+    stream = token_dataset(200_000, vocab=cfg.vocab, seed=args.seed)
+    # non-iid: each FL device trains on its own contiguous shard
+    shards = np.array_split(stream, m)
+    iters = [lm_batches(s, args.batch // m, args.seq, seed=args.seed + i)
+             for i, s in enumerate(shards)]
+
+    def next_batch():
+        per = [next(it) for it in iters]
+        out = {k: np.stack([p[k] for p in per]) for k in per[0]}
+        if cfg.frontend is not None:
+            b, s = out["tokens"].shape[1:]
+            nt = cfg.frontend.tokens if cfg.frontend.kind == "vision" else s
+            out["frontend"] = np.zeros((m, b, nt, cfg.frontend.dim), np.float32)
+            out["loss_mask"] = np.ones_like(out["tokens"], np.float32)
+        return {k: jnp.asarray(v) for k, v in out.items()}
+
+    start = 0
+    if args.ckpt and checkpoint.latest_step(args.ckpt) is not None:
+        state = checkpoint.restore(args.ckpt)
+        params = jax.tree.map(jnp.asarray, state["params"])
+        w_hat = jax.tree.map(jnp.asarray, state["w_hat"])
+        start = int(state["step"])
+        print(f"restored step {start} from {args.ckpt}")
+
+    for k in range(start, start + args.steps):
+        params, w_hat, metrics = step_jit(params, w_hat, next_batch(),
+                                          jnp.asarray(k, jnp.int32))
+        if k % args.log_every == 0 or k == start + args.steps - 1:
+            flat = jnp.concatenate([l.reshape(m, -1).astype(jnp.float32)
+                                    for l in jax.tree.leaves(params)], axis=1)
+            cons = float(((flat - flat.mean(0)) ** 2).sum())
+            print(f"step {k:5d} loss {float(metrics['loss']):.4f} "
+                  f"trigger_rate {float(metrics['trigger_rate']):.2f} "
+                  f"consensus_err {cons:.3e} alpha {float(metrics['alpha']):.4f}")
+        if args.ckpt and (k + 1) % args.ckpt_every == 0:
+            checkpoint.save(args.ckpt, k + 1,
+                            {"params": params, "w_hat": w_hat, "step": k + 1})
+    if args.ckpt:
+        checkpoint.save(args.ckpt, start + args.steps,
+                        {"params": params, "w_hat": w_hat, "step": start + args.steps})
+    print("training done")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

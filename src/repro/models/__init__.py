@@ -1,0 +1,2 @@
+"""Model zoo: composable blocks covering all assigned architectures."""
+from repro.models.common import ArchConfig, InputShape, INPUT_SHAPES, MLAConfig, MoEConfig

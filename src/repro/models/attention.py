@@ -1,0 +1,408 @@
+"""Attention: GQA/MQA/MHA with RoPE, optional QKV bias, sliding window,
+prefix-LM and bidirectional masks, chunked online-softmax for long context,
+KV-cache decode (ring buffer for sliding-window layers), and MLA
+(multi-head latent attention, deepseek-v3) with absorbed-matrix decode.
+
+Shapes: x (B, S, D); q (B, S, H, dh); k/v (B, S, G, dh) with G = n_kv_heads.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ArchConfig
+from repro.models.layers import apply_rope, dense_init
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def init_attention(cfg: ArchConfig, key, dtype):
+    d, h, g, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, h, dh), d, dtype),
+        "wk": dense_init(ks[1], (d, g, dh), d, dtype),
+        "wv": dense_init(ks[2], (d, g, dh), d, dtype),
+        "wo": dense_init(ks[3], (h, dh, d), h * dh, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, dh), dtype)
+        p["bk"] = jnp.zeros((g, dh), dtype)
+        p["bv"] = jnp.zeros((g, dh), dtype)
+    return p
+
+
+def _qkv(cfg: ArchConfig, p, x, positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dgk->bsgk", x, p["wk"])
+    v = jnp.einsum("bsd,dgk->bsgk", x, p["wv"])
+    if "bq" in p:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _mask(
+    q_pos: jax.Array,  # (Sq,)
+    k_pos: jax.Array,  # (Sk,)
+    *,
+    causal: bool,
+    window: Optional[int],
+    prefix_len: Optional[jax.Array],
+) -> jax.Array:
+    """(Sq, Sk) boolean 'allowed' mask."""
+    qp = q_pos[:, None]
+    kp = k_pos[None, :]
+    if causal:
+        allowed = kp <= qp
+        if prefix_len is not None:
+            allowed = jnp.logical_or(allowed, kp < prefix_len)
+    else:
+        allowed = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if window is not None:
+        allowed = jnp.logical_and(allowed, kp > qp - window)
+    return allowed
+
+
+def _sdpa(cfg, q, k, v, mask):
+    """Dense softmax(QK^T)V with GQA head grouping.  q (B,Sq,H,dh),
+    k/v (B,Sk,G,dh), mask (Sq,Sk) or (B,Sq,Sk)."""
+    b, sq, h, dh = q.shape
+    g = k.shape[2]
+    q = q.reshape(b, sq, g, h // g, dh)
+    scores = jnp.einsum("bsgrk,btgk->bgrst", q, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(dh).astype(jnp.float32)
+    if cfg.logit_softcap > 0:
+        scores = cfg.logit_softcap * jnp.tanh(scores / cfg.logit_softcap)
+    m = mask if mask.ndim == 3 else mask[None]
+    scores = jnp.where(m[:, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bgrst,btgk->bsgrk", probs.astype(v.dtype), v)
+    return out.reshape(b, sq, h, dh)
+
+
+def _sdpa_chunked(cfg, q, k, v, q_pos, k_pos, *, causal, window, prefix_len):
+    """Online-softmax attention scanning over KV chunks: O(Sq * chunk) live
+    memory instead of O(Sq * Sk).  Used for long sequences (prefill_32k+)."""
+    b, sq, h, dh = q.shape
+    g = k.shape[2]
+    chunk = min(cfg.attn_chunk, k.shape[1])
+    n_chunks = k.shape[1] // chunk
+    assert k.shape[1] % chunk == 0, "seq must be divisible by attn_chunk"
+    qg = q.reshape(b, sq, g, h // g, dh)
+    kc = k.reshape(b, n_chunks, chunk, g, dh).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, chunk, g, dh).transpose(1, 0, 2, 3, 4)
+    kpc = k_pos.reshape(n_chunks, chunk)
+
+    def body(carry, inputs):
+        m_run, l_run, acc = carry
+        k_i, v_i, kp_i = inputs
+        s = jnp.einsum("bsgrk,btgk->bgrst", qg, k_i).astype(jnp.float32)
+        s = s / jnp.sqrt(dh).astype(jnp.float32)
+        if cfg.logit_softcap > 0:
+            s = cfg.logit_softcap * jnp.tanh(s / cfg.logit_softcap)
+        mask = _mask(q_pos, kp_i, causal=causal, window=window, prefix_len=prefix_len)
+        s = jnp.where(mask[None, None, None], s, -1e30)
+        m_new = jnp.maximum(m_run, s.max(-1))
+        scale = jnp.exp(m_run - m_new)
+        p_i = jnp.exp(s - m_new[..., None])
+        l_new = l_run * scale + p_i.sum(-1)
+        acc = acc * scale[..., None] + jnp.einsum("bgrst,btgk->bgrsk", p_i, v_i.astype(jnp.float32))
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, g, h // g, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, g, h // g, sq), jnp.float32)
+    a0 = jnp.zeros((b, g, h // g, sq, dh), jnp.float32)
+    (m_f, l_f, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kc, vc, kpc))
+    out = acc / jnp.maximum(l_f, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, dh).astype(q.dtype)
+
+
+def _sdpa_banded(cfg, q, k, v, *, window: int):
+    """Blocked local attention for causal sliding windows: each W-sized q
+    block attends only to [previous block, own block] - exactly the columns
+    a window <= W can reach.  FLOPs O(S * 2W * dh) and live memory
+    O(S * 2W) instead of the chunked path's O(S * S) score masking work.
+    Requires S % W == 0 (caller pads)."""
+    b, s, h, dh = q.shape
+    g = k.shape[2]
+    nb = s // window
+    qb = q.reshape(b, nb, window, g, h // g, dh)
+    kb = k.reshape(b, nb, window, g, dh)
+    vb = v.reshape(b, nb, window, g, dh)
+    zero = jnp.zeros_like(kb[:, :1])
+    k_prev = jnp.concatenate([zero, kb[:, :-1]], axis=1)
+    v_prev = jnp.concatenate([zero, vb[:, :-1]], axis=1)
+    k2 = jnp.concatenate([k_prev, kb], axis=2)  # (B, nb, 2W, G, dh)
+    v2 = jnp.concatenate([v_prev, vb], axis=2)
+    scores = jnp.einsum("bnqgrk,bntgk->bngrqt", qb, k2).astype(jnp.float32)
+    scores = scores / jnp.sqrt(dh).astype(jnp.float32)
+    qpos = jnp.arange(window)[:, None]  # within-block q index
+    tpos = jnp.arange(2 * window)[None, :] - window  # relative kv index
+    allowed = (tpos <= qpos) & (tpos > qpos - window)
+    first = jnp.arange(nb) == 0  # block 0 has no previous block
+    allowed = allowed[None] & ~(first[:, None, None] & (tpos < 0)[None])
+    scores = jnp.where(allowed[None, :, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bngrqt,bntgk->bnqgrk", probs.astype(v.dtype), v2)
+    return out.reshape(b, s, h, dh)
+
+
+def attention_seq(
+    cfg: ArchConfig,
+    p,
+    x: jax.Array,
+    positions: jax.Array,  # (S,)
+    *,
+    layer_window: Optional[int],
+    prefix_len: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Full-sequence attention (train / prefill)."""
+    q, k, v = _qkv(cfg, p, x, positions[None])
+    s = x.shape[1]
+    impl = cfg.attn_impl
+    if impl == "auto":
+        impl = "chunked" if s > 4096 else "xla"
+    if impl in ("banded", "pallas_swa") and (
+            layer_window is None or s % layer_window != 0 or s <= layer_window
+            or prefix_len is not None or not cfg.causal):
+        impl = "chunked" if s > 4096 else "xla"  # banded prerequisites unmet
+    if impl == "pallas_swa":
+        from repro.kernels.swa import ops as swa_ops
+
+        out = swa_ops.swa_attention(q, k, v, window=layer_window, causal=cfg.causal)
+    elif impl == "banded":
+        out = _sdpa_banded(cfg, q, k, v, window=layer_window)
+    elif impl == "chunked":
+        out = _sdpa_chunked(
+            cfg, q, k, v, positions, positions,
+            causal=cfg.causal, window=layer_window, prefix_len=prefix_len)
+    else:
+        mask = _mask(positions, positions, causal=cfg.causal, window=layer_window, prefix_len=prefix_len)
+        out = _sdpa(cfg, q, k, v, mask)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# KV-cache decode
+# ---------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    k: jax.Array  # (B, L, G, dh)
+    v: jax.Array  # (B, L, G, dh)
+    pos: jax.Array  # (L,) absolute positions stored (-1 = empty)
+
+
+def init_kv_cache(cfg: ArchConfig, batch: int, cache_len: int, dtype) -> KVCache:
+    g, dh = cfg.n_kv_heads, cfg.d_head
+    return KVCache(
+        k=jnp.zeros((batch, cache_len, g, dh), dtype),
+        v=jnp.zeros((batch, cache_len, g, dh), dtype),
+        pos=jnp.full((cache_len,), -1, jnp.int32),
+    )
+
+
+def prefill_kv_cache(cfg: ArchConfig, k: jax.Array, v: jax.Array, positions: jax.Array, cache_len: int) -> KVCache:
+    """Build a cache from prefill K/V.  If the sequence exceeds cache_len
+    (sliding-window layers) keep the last cache_len entries, placed at their
+    ring slots."""
+    s = k.shape[1]
+    if s <= cache_len:
+        pad = cache_len - s
+        kq = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vq = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        pos = jnp.pad(positions, (0, pad), constant_values=-1)
+        return KVCache(kq, vq, pos.astype(jnp.int32))
+    k_tail, v_tail, p_tail = k[:, -cache_len:], v[:, -cache_len:], positions[-cache_len:]
+    slots = p_tail % cache_len
+    order = jnp.argsort(slots)
+    return KVCache(k_tail[:, order], v_tail[:, order], p_tail[order].astype(jnp.int32))
+
+
+def attention_decode(
+    cfg: ArchConfig,
+    p,
+    x_t: jax.Array,  # (B, 1, D)
+    cache: KVCache,
+    t: jax.Array,  # scalar absolute position of the new token
+    *,
+    layer_window: Optional[int],
+) -> tuple[jax.Array, KVCache]:
+    q, k_new, v_new = _qkv(cfg, p, x_t, t[None, None])
+    cache_len = cache.k.shape[1]
+    if layer_window is not None and cache_len < 2 ** 30:
+        slot = t % cache_len  # ring buffer
+    else:
+        slot = jnp.minimum(t, cache_len - 1)
+    k = jax.lax.dynamic_update_slice(cache.k, k_new, (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache.v, v_new, (0, slot, 0, 0))
+    pos = jax.lax.dynamic_update_slice(cache.pos, t[None].astype(jnp.int32), (slot,))
+
+    valid = pos >= 0
+    if layer_window is not None:
+        valid = jnp.logical_and(valid, pos > t - layer_window)
+    valid = jnp.logical_and(valid, pos <= t)
+
+    b, _, h, dh = q.shape
+    g = k.shape[2]
+    qg = q.reshape(b, 1, g, h // g, dh)
+    scores = jnp.einsum("bsgrk,btgk->bgrst", qg, k).astype(jnp.float32) / jnp.sqrt(dh)
+    if cfg.logit_softcap > 0:
+        scores = cfg.logit_softcap * jnp.tanh(scores / cfg.logit_softcap)
+    scores = jnp.where(valid[None, None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bgrst,btgk->bsgrk", probs.astype(v.dtype), v).reshape(b, 1, h, dh)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, KVCache(k, v, pos)
+
+
+# ---------------------------------------------------------------------------
+# MLA (deepseek-v3)
+# ---------------------------------------------------------------------------
+
+def init_mla(cfg: ArchConfig, key, dtype):
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wq_a": dense_init(ks[0], (d, m.q_lora_rank), d, dtype),
+        "q_norm": jnp.ones((m.q_lora_rank,), dtype),
+        "wq_b": dense_init(ks[1], (m.q_lora_rank, h, qk_dim), m.q_lora_rank, dtype),
+        "wkv_a": dense_init(ks[2], (d, m.kv_lora_rank + m.qk_rope_head_dim), d, dtype),
+        "kv_norm": jnp.ones((m.kv_lora_rank,), dtype),
+        "wk_b": dense_init(ks[3], (m.kv_lora_rank, h, m.qk_nope_head_dim), m.kv_lora_rank, dtype),
+        "wv_b": dense_init(ks[4], (m.kv_lora_rank, h, m.v_head_dim), m.kv_lora_rank, dtype),
+        "wo": dense_init(ks[5], (h, m.v_head_dim, d), h * m.v_head_dim, dtype),
+    }
+
+
+def _rms(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt((xf * xf).mean(-1, keepdims=True) + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def _mla_qkr(cfg: ArchConfig, p, x, positions):
+    """Shared q / latent projections.  Returns per-head q (nope, rope) and
+    the latent stream (c_kv, k_rope)."""
+    m = cfg.mla
+    cq = _rms(x @ p["wq_a"], p["q_norm"])
+    q = jnp.einsum("bsr,rhk->bshk", cq, p["wq_b"])
+    q_nope = q[..., : m.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., m.qk_nope_head_dim :], positions, cfg.rope_theta)
+
+    kv = x @ p["wkv_a"]
+    c_kv = _rms(kv[..., : m.kv_lora_rank], p["kv_norm"])  # (B,S,R)
+    k_rope = kv[..., m.kv_lora_rank :]  # (B,S,rope_dim), shared across heads
+    k_rope = apply_rope(k_rope[..., None, :], positions, cfg.rope_theta)[..., 0, :]
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_seq(cfg: ArchConfig, p, x, positions, *, prefix_len=None) -> jax.Array:
+    """Prefill/train MLA: decompress K/V per head (naive form)."""
+    m = cfg.mla
+    q_nope, q_rope, c_kv, k_rope = _mla_qkr(cfg, p, x, positions[None])
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, p["wk_b"])
+    val = jnp.einsum("bsr,rhk->bshk", c_kv, p["wv_b"])
+    scale = 1.0 / jnp.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+
+    s = x.shape[1]
+    chunk = min(cfg.attn_chunk, s)
+    use_chunked = s > 4096 and s % chunk == 0
+    mask_full = None if use_chunked else _mask(
+        positions, positions, causal=cfg.causal, window=None, prefix_len=prefix_len)
+
+    if use_chunked:
+        out = _mla_chunked(cfg, q_nope, q_rope, k_nope, k_rope, val, positions, scale, prefix_len)
+    else:
+        scores = (
+            jnp.einsum("bshk,bthk->bhst", q_nope, k_nope)
+            + jnp.einsum("bshk,btk->bhst", q_rope, k_rope)
+        ).astype(jnp.float32) * scale
+        scores = jnp.where(mask_full[None, None], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bhst,bthk->bshk", probs.astype(val.dtype), val)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def _mla_chunked(cfg, q_nope, q_rope, k_nope, k_rope, val, positions, scale, prefix_len):
+    b, s, h, dn = q_nope.shape
+    dv = val.shape[-1]
+    chunk = min(cfg.attn_chunk, s)
+    n_chunks = s // chunk
+    kc = k_nope.reshape(b, n_chunks, chunk, h, dn).transpose(1, 0, 2, 3, 4)
+    rc = k_rope.reshape(b, n_chunks, chunk, -1).transpose(1, 0, 2, 3)
+    vc = val.reshape(b, n_chunks, chunk, h, dv).transpose(1, 0, 2, 3, 4)
+    pc = positions.reshape(n_chunks, chunk)
+
+    def body(carry, inputs):
+        m_run, l_run, acc = carry
+        k_i, r_i, v_i, p_i = inputs
+        sc = (
+            jnp.einsum("bshk,bthk->bhst", q_nope, k_i)
+            + jnp.einsum("bshk,btk->bhst", q_rope, r_i)
+        ).astype(jnp.float32) * scale
+        mask = _mask(positions, p_i, causal=cfg.causal, window=None, prefix_len=prefix_len)
+        sc = jnp.where(mask[None, None], sc, -1e30)
+        m_new = jnp.maximum(m_run, sc.max(-1))
+        alpha = jnp.exp(m_run - m_new)
+        pr = jnp.exp(sc - m_new[..., None])
+        l_new = l_run * alpha + pr.sum(-1)
+        acc = acc * alpha[..., None] + jnp.einsum("bhst,bthk->bhsk", pr, v_i.astype(jnp.float32))
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, h, s), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, h, s), jnp.float32)
+    a0 = jnp.zeros((b, h, s, dv), jnp.float32)
+    (m_f, l_f, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kc, rc, vc, pc))
+    out = (acc / jnp.maximum(l_f, 1e-30)[..., None]).transpose(0, 2, 1, 3)
+    return out.astype(q_nope.dtype)
+
+
+class MLACache(NamedTuple):
+    c_kv: jax.Array  # (B, L, R) compressed latent
+    k_rope: jax.Array  # (B, L, rope_dim)
+    pos: jax.Array  # (L,)
+
+
+def init_mla_cache(cfg: ArchConfig, batch: int, cache_len: int, dtype) -> MLACache:
+    m = cfg.mla
+    return MLACache(
+        c_kv=jnp.zeros((batch, cache_len, m.kv_lora_rank), dtype),
+        k_rope=jnp.zeros((batch, cache_len, m.qk_rope_head_dim), dtype),
+        pos=jnp.full((cache_len,), -1, jnp.int32),
+    )
+
+
+def mla_decode(cfg: ArchConfig, p, x_t, cache: MLACache, t) -> tuple[jax.Array, MLACache]:
+    """Absorbed-matrix MLA decode: attention runs in the latent space, FLOPs
+    per token O(H * R * S) instead of decompressing the whole cache."""
+    m = cfg.mla
+    q_nope, q_rope, c_new, r_new, = _mla_qkr(cfg, p, x_t, t[None, None])
+    slot = jnp.minimum(t, cache.c_kv.shape[1] - 1)
+    c_kv = jax.lax.dynamic_update_slice(cache.c_kv, c_new, (0, slot, 0))
+    k_rope = jax.lax.dynamic_update_slice(cache.k_rope, r_new, (0, slot, 0))
+    pos = jax.lax.dynamic_update_slice(cache.pos, t[None].astype(jnp.int32), (slot,))
+
+    # absorb wk_b into q: q_abs (B,1,H,R)
+    q_abs = jnp.einsum("bshk,rhk->bshr", q_nope, p["wk_b"])
+    scale = 1.0 / jnp.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    scores = (
+        jnp.einsum("bshr,btr->bhst", q_abs, c_kv)
+        + jnp.einsum("bshk,btk->bhst", q_rope, k_rope)
+    ).astype(jnp.float32) * scale
+    valid = jnp.logical_and(pos >= 0, pos <= t)
+    scores = jnp.where(valid[None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhst,btr->bshr", probs.astype(c_kv.dtype), c_kv)  # latent ctx
+    out = jnp.einsum("bshr,rhk->bshk", ctx, p["wv_b"])  # absorb wv_b
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, MLACache(c_kv, k_rope, pos)

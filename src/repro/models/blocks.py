@@ -1,0 +1,179 @@
+"""Block assembly: one (init, seq, decode, init_cache) quadruple per block
+type, with uniform signatures so stages can be lax.scan'd over stacked
+per-layer params (compact HLO - essential for 512-device dry-run compiles).
+
+Block types (see common.py): attn, attn_g, moe, mla, mla_moe, hybrid,
+hybrid_g, mamba, mlstm, slstm.  The ``_g`` suffix = global attention
+(ignores cfg.window); used by hymba's [0, mid, last] global layers.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm
+from repro.models.common import ArchConfig
+from repro.models.layers import apply_mlp, apply_norm, init_mlp, init_norm
+
+
+def block_window(cfg: ArchConfig, block_type: str) -> Optional[int]:
+    if block_type.endswith("_g"):
+        return None
+    return cfg.window
+
+
+def _has_attn(block_type: str) -> bool:
+    return block_type in ("attn", "attn_g", "moe", "hybrid", "hybrid_g")
+
+
+def _is_mla(block_type: str) -> bool:
+    return block_type in ("mla", "mla_moe")
+
+
+def _has_mlp(cfg: ArchConfig, block_type: str) -> bool:
+    return block_type in ("attn", "attn_g", "mla", "hybrid", "hybrid_g") and cfg.d_ff > 0
+
+
+def _has_moe(block_type: str) -> bool:
+    return block_type in ("moe", "mla_moe")
+
+
+def _has_mamba(block_type: str) -> bool:
+    return block_type in ("hybrid", "hybrid_g", "mamba")
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_block(cfg: ArchConfig, block_type: str, key, dtype) -> dict:
+    ks = jax.random.split(key, 6)
+    p: dict[str, Any] = {"norm1": init_norm(cfg, cfg.d_model, dtype)}
+    if block_type in ("mlstm", "slstm"):
+        init_fn = ssm.init_mlstm if block_type == "mlstm" else ssm.init_slstm
+        p["core"] = init_fn(cfg, ks[0], dtype)
+        return p
+    if _is_mla(block_type):
+        p["attn"] = attn.init_mla(cfg, ks[0], dtype)
+    elif _has_attn(block_type):
+        p["attn"] = attn.init_attention(cfg, ks[0], dtype)
+    if _has_mamba(block_type):
+        # hymba: mamba heads run in parallel with attention on the same input
+        p["mamba"] = ssm.init_mamba(cfg, ks[1], dtype)
+    if _has_mlp(cfg, block_type) or _has_moe(block_type):
+        p["norm2"] = init_norm(cfg, cfg.d_model, dtype)
+    if _has_moe(block_type):
+        p["ffn"] = moe_mod.init_moe(cfg, ks[2], dtype)
+    elif _has_mlp(cfg, block_type):
+        p["ffn"] = init_mlp(cfg, ks[2], cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# sequence (train / prefill) forward
+# ---------------------------------------------------------------------------
+
+def block_seq(
+    cfg: ArchConfig,
+    block_type: str,
+    p,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    prefix_len=None,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (x_out, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = apply_norm(cfg, p["norm1"], x)
+    if block_type == "mlstm":
+        return x + ssm.mlstm_seq(cfg, p["core"], h), aux
+    if block_type == "slstm":
+        return x + ssm.slstm_seq(cfg, p["core"], h), aux
+    if block_type == "mamba":
+        return x + ssm.mamba_seq(cfg, p["mamba"], h), aux
+
+    if _is_mla(block_type):
+        y = attn.mla_seq(cfg, p["attn"], h, positions, prefix_len=prefix_len)
+    else:
+        y = attn.attention_seq(cfg, p["attn"], h, positions,
+                               layer_window=block_window(cfg, block_type),
+                               prefix_len=prefix_len)
+    if _has_mamba(block_type):  # hymba: parallel heads, fused by averaging
+        y = 0.5 * (y + ssm.mamba_seq(cfg, p["mamba"], h))
+    x = x + y
+
+    if "ffn" in p:
+        h2 = apply_norm(cfg, p["norm2"], x)
+        if _has_moe(block_type):
+            out, aux = moe_mod.moe_ffn(cfg, p["ffn"], h2)
+        else:
+            out = apply_mlp(cfg, p["ffn"], h2)
+        x = x + out
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# caches + decode
+# ---------------------------------------------------------------------------
+
+def init_block_cache(cfg: ArchConfig, block_type: str, batch: int, cache_len: int, dtype):
+    if block_type == "mlstm":
+        return {"mlstm": ssm.init_mlstm_cache(cfg, batch, dtype)}
+    if block_type == "slstm":
+        return {"slstm": ssm.init_slstm_cache(cfg, batch, dtype)}
+    cache: dict[str, Any] = {}
+    if _is_mla(block_type):
+        cache["mla"] = attn.init_mla_cache(cfg, batch, cache_len, dtype)
+    elif _has_attn(block_type):
+        w = block_window(cfg, block_type)
+        eff = cache_len if w is None else min(cache_len, w)
+        cache["kv"] = attn.init_kv_cache(cfg, batch, eff, dtype)
+    if _has_mamba(block_type):
+        d_inner = cfg.ssm_expand * cfg.d_model
+        cache["mamba"] = ssm.init_mamba_cache(cfg, batch, d_inner, dtype)
+    return cache
+
+
+def block_decode(
+    cfg: ArchConfig,
+    block_type: str,
+    p,
+    x_t: jax.Array,
+    cache,
+    t: jax.Array,
+) -> tuple[jax.Array, Any]:
+    h = apply_norm(cfg, p["norm1"], x_t)
+    new_cache = dict(cache)
+    if block_type == "mlstm":
+        y, new_cache["mlstm"] = ssm.mlstm_decode(cfg, p["core"], h, cache["mlstm"])
+        return x_t + y, new_cache
+    if block_type == "slstm":
+        y, new_cache["slstm"] = ssm.slstm_decode(cfg, p["core"], h, cache["slstm"])
+        return x_t + y, new_cache
+    if block_type == "mamba":
+        y, new_cache["mamba"] = ssm.mamba_decode(cfg, p["mamba"], h, cache["mamba"])
+        return x_t + y, new_cache
+
+    if _is_mla(block_type):
+        y, new_cache["mla"] = attn.mla_decode(cfg, p["attn"], h, cache["mla"], t)
+    else:
+        y, new_cache["kv"] = attn.attention_decode(
+            cfg, p["attn"], h, cache["kv"], t,
+            layer_window=block_window(cfg, block_type))
+    if _has_mamba(block_type):
+        ym, new_cache["mamba"] = ssm.mamba_decode(cfg, p["mamba"], h, cache["mamba"])
+        y = 0.5 * (y + ym)
+    x_t = x_t + y
+
+    if "ffn" in p:
+        h2 = apply_norm(cfg, p["norm2"], x_t)
+        if _has_moe(block_type):
+            out, _ = moe_mod.moe_ffn(cfg, p["ffn"], h2)
+        else:
+            out = apply_mlp(cfg, p["ffn"], h2)
+        x_t = x_t + out
+    return x_t, new_cache

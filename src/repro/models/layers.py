@@ -1,0 +1,128 @@
+"""Shared layers: norms, activations, MLPs, RoPE, embeddings, init."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ArchConfig
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, in_axis_size=None, dtype=jnp.float32):
+    """Scaled normal (LeCun-ish) initializer."""
+    fan_in = in_axis_size if in_axis_size is not None else shape[0]
+    scale = 1.0 / jnp.sqrt(jnp.maximum(fan_in, 1)).astype(jnp.float32)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_norm(cfg: ArchConfig, d: int, dtype):
+    p = {"scale": jnp.ones((d,), dtype)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def apply_norm(cfg: ArchConfig, p, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        var = (xf * xf).mean(-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# activations / MLP
+# ---------------------------------------------------------------------------
+
+def act_fn(name: str, x):
+    if name in ("gelu", "geglu"):
+        return jax.nn.gelu(x)
+    if name in ("silu", "swiglu"):
+        return jax.nn.silu(x)
+    raise ValueError(name)
+
+
+def init_mlp(cfg: ArchConfig, key, d_in: int, d_ff: int, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    gated = cfg.act in ("swiglu", "geglu")
+    p = {
+        "w_in": dense_init(k1, (d_in, d_ff), d_in, dtype),
+        "w_out": dense_init(k2, (d_ff, d_in), d_ff, dtype),
+    }
+    if gated:
+        p["w_gate"] = dense_init(k3, (d_in, d_ff), d_in, dtype)
+    return p
+
+
+def apply_mlp(cfg: ArchConfig, p, x):
+    h = x @ p["w_in"]
+    if "w_gate" in p:
+        h = act_fn(cfg.act, x @ p["w_gate"]) * h
+    else:
+        h = act_fn(cfg.act, h)
+    return h @ p["w_out"]
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(d_head: int, theta: float) -> jax.Array:
+    half = d_head // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, n_heads, d_head); positions: (..., seq)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # (d/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, d/2)
+    cos = jnp.cos(ang)[..., None, :]  # (..., seq, 1, d/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# embeddings / head
+# ---------------------------------------------------------------------------
+
+def init_embed(cfg: ArchConfig, key, dtype):
+    k1, k2 = jax.random.split(key)
+    p = {"tok": embed_init(k1, (cfg.vocab, cfg.d_model), dtype)}
+    if cfg.frontend is not None:
+        p["frontend_proj"] = dense_init(k2, (cfg.frontend.dim, cfg.d_model), cfg.frontend.dim, dtype)
+    return p
+
+
+def embed_tokens(p, tokens: jax.Array) -> jax.Array:
+    return jnp.take(p["tok"], tokens, axis=0)
+
+
+def init_head(cfg: ArchConfig, key, dtype):
+    if cfg.tie_embeddings:
+        return {}
+    return {"w": dense_init(key, (cfg.d_model, cfg.vocab), cfg.d_model, dtype)}
+
+
+def apply_head(cfg: ArchConfig, head_p, embed_p, x) -> jax.Array:
+    if cfg.tie_embeddings:
+        return x @ embed_p["tok"].T
+    return x @ head_p["w"]

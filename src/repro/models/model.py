@@ -1,0 +1,268 @@
+"""Full model assembly.
+
+Params pytree:
+  {"embed": {...}, "stages": [stage0, stage1, ...], "final_norm": {...},
+   "head": {...}, "mtp": {...}?}
+
+Each stage corresponds to one (cycle, repeat) entry of cfg.layer_plan and is
+a dict {block_name_i: stacked_params} with leading axis ``repeat`` so the
+stage lowers as a single lax.scan (optionally remat'd).
+
+Batch dict (produced by data/ or launch/input_specs):
+  tokens    (B, S) int32      input ids (text part for VLM)
+  targets   (B, S) int32      labels (next token for LM, codebook for hubert)
+  loss_mask (B, S) f32        1 where the CE loss counts
+  frontend  (B, T, dim) f32   stub modality embeddings (vlm/audio only)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks
+from repro.models.common import ArchConfig
+from repro.models.layers import (apply_head, apply_norm, dense_init, embed_tokens,
+                                 init_embed, init_head, init_norm)
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ArchConfig, key) -> dict:
+    dtype = _dtype(cfg)
+    k_embed, k_head, k_stage, k_mtp = jax.random.split(key, 4)
+    params: dict[str, Any] = {
+        "embed": init_embed(cfg, k_embed, dtype),
+        "final_norm": init_norm(cfg, cfg.d_model, dtype),
+        "head": init_head(cfg, k_head, dtype),
+        "stages": [],
+    }
+    for si, (cycle, repeat) in enumerate(cfg.layer_plan):
+        stage = {}
+        for bi, bt in enumerate(cycle):
+            keys = jax.random.split(jax.random.fold_in(k_stage, si * 97 + bi), repeat)
+            stage[f"{bi}_{bt}"] = jax.vmap(lambda k: blocks.init_block(cfg, bt, k, dtype))(keys)
+        params["stages"].append(stage)
+    if cfg.mtp:
+        km1, km2 = jax.random.split(k_mtp)
+        params["mtp"] = {
+            "proj": dense_init(km1, (2 * cfg.d_model, cfg.d_model), 2 * cfg.d_model, dtype),
+            "norm_h": init_norm(cfg, cfg.d_model, dtype),
+            "norm_e": init_norm(cfg, cfg.d_model, dtype),
+            "block": blocks.init_block(cfg, "attn", km2, dtype),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# backbone (sequence form)
+# ---------------------------------------------------------------------------
+
+def _stage_seq(cfg: ArchConfig, cycle, stage_params, x, positions, prefix_len):
+    def body(carry, layer_params):
+        x, aux = carry
+        for bi, bt in enumerate(cycle):
+            x, a = blocks.block_seq(cfg, bt, layer_params[f"{bi}_{bt}"], x,
+                                    positions, prefix_len=prefix_len)
+            aux = aux + a
+        return (x, aux), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), stage_params)
+    return x, aux
+
+
+def backbone_seq(cfg: ArchConfig, params, x, positions, prefix_len=None):
+    from repro.models.sharding import constrain
+
+    aux_total = jnp.zeros((), jnp.float32)
+    x = constrain(x, ("batch", "seq", "embed"))
+    for (cycle, _), stage_params in zip(cfg.layer_plan, params["stages"]):
+        x, aux = _stage_seq(cfg, cycle, stage_params, x, positions, prefix_len)
+        x = constrain(x, ("batch", "seq", "embed"))
+        aux_total = aux_total + aux
+    return apply_norm(cfg, params["final_norm"], x), aux_total
+
+
+def _embed_inputs(cfg: ArchConfig, params, batch):
+    """Returns (x (B,S,D), positions (S,), prefix_len or None)."""
+    tokens = batch["tokens"]
+    if cfg.frontend is not None and "frontend" in batch:
+        fe = batch["frontend"] @ params["embed"]["frontend_proj"]
+        if cfg.frontend.kind == "vision":
+            # image patches prefix + text suffix; tokens hold the text part
+            x = jnp.concatenate([fe.astype(_dtype(cfg)), embed_tokens(params["embed"], tokens)], axis=1)
+            s = x.shape[1]
+            return x, jnp.arange(s), jnp.asarray(cfg.frontend.tokens)
+        # audio: frames *are* the sequence
+        x = fe.astype(_dtype(cfg))
+        return x, jnp.arange(x.shape[1]), None
+    x = embed_tokens(params["embed"], tokens)
+    return x, jnp.arange(x.shape[1]), None
+
+
+def forward(cfg: ArchConfig, params, batch) -> tuple[jax.Array, jax.Array]:
+    """Full-sequence forward -> (logits (B,S,V), aux_loss)."""
+    x, positions, prefix_len = _embed_inputs(cfg, params, batch)
+    h, aux = backbone_seq(cfg, params, x, positions, prefix_len)
+    if cfg.frontend is not None and cfg.frontend.kind == "vision":
+        h = h[:, cfg.frontend.tokens :]  # logits over the text suffix only
+    logits = apply_head(cfg, params["head"], params["embed"], h)
+    return logits, aux
+
+
+# ---------------------------------------------------------------------------
+# loss / train step
+# ---------------------------------------------------------------------------
+
+def _xent(logits, targets, mask):
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return -(ll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def loss_fn(cfg: ArchConfig, params, batch) -> tuple[jax.Array, dict]:
+    logits, aux = forward(cfg, params, batch)
+    mask = batch.get("loss_mask", jnp.ones_like(batch["targets"], jnp.float32))
+    loss = _xent(logits, batch["targets"], mask)
+    metrics = {"ce": loss, "aux": aux}
+    if cfg.moe is not None:
+        loss = loss + cfg.moe.router_aux_weight * aux
+    if cfg.mtp:
+        mtp_loss = _mtp_loss(cfg, params, batch)
+        metrics["mtp"] = mtp_loss
+        loss = loss + cfg.mtp_weight * mtp_loss
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+def _mtp_loss(cfg: ArchConfig, params, batch):
+    """Deepseek-v3 MTP: depth-1 extra head predicting token t+2 from the
+    backbone state at t combined with the embedding of token t+1."""
+    tokens, targets = batch["tokens"], batch["targets"]
+    x, positions, prefix_len = _embed_inputs(cfg, params, batch)
+    h, _ = backbone_seq(cfg, params, x, positions, prefix_len)
+    p = params["mtp"]
+    h_t = apply_norm(cfg, p["norm_h"], h[:, :-1])
+    e_next = apply_norm(cfg, p["norm_e"], embed_tokens(params["embed"], tokens[:, 1:]))
+    z = jnp.concatenate([h_t, e_next], axis=-1) @ p["proj"]
+    z, _ = blocks.block_seq(cfg, "attn", p["block"], z, positions[:-1])
+    logits = apply_head(cfg, params["head"], params["embed"], z)
+    # predict targets shifted one further (t+2 = targets[t+1])
+    mask = batch.get("loss_mask", jnp.ones_like(targets, jnp.float32))
+    return _xent(logits[:, :-1], targets[:, 2:], mask[:, 2:])
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, cache_len: int):
+    dtype = _dtype(cfg)
+    caches = []
+    for (cycle, repeat) in cfg.layer_plan:
+        stage = {}
+        for bi, bt in enumerate(cycle):
+            one = blocks.init_block_cache(cfg, bt, batch, cache_len, dtype)
+            stage[f"{bi}_{bt}"] = jax.tree.map(
+                lambda c: jnp.broadcast_to(c[None], (repeat, *c.shape)), one)
+        caches.append(stage)
+    return caches
+
+
+def decode_step(cfg: ArchConfig, params, caches, token_t: jax.Array, t: jax.Array):
+    """One-token decode.  token_t (B,) int32; t scalar position.
+    Returns (logits (B,V), new_caches)."""
+    x = embed_tokens(params["embed"], token_t[:, None])
+    new_caches = []
+    for (cycle, _), stage_params, stage_cache in zip(cfg.layer_plan, params["stages"], caches):
+        def body(x, xs):
+            layer_params, layer_cache = xs
+            new_cache = {}
+            for bi, bt in enumerate(cycle):
+                x, new_cache[f"{bi}_{bt}"] = blocks.block_decode(
+                    cfg, bt, layer_params[f"{bi}_{bt}"], x, layer_cache[f"{bi}_{bt}"], t)
+            return x, new_cache
+
+        x, new_stage_cache = jax.lax.scan(body, x, (stage_params, stage_cache))
+        new_caches.append(new_stage_cache)
+    h = apply_norm(cfg, params["final_norm"], x)
+    logits = apply_head(cfg, params["head"], params["embed"], h)[:, 0]
+    return logits, new_caches
+
+
+def prefill(cfg: ArchConfig, params, batch):
+    """Prompt-processing forward (the `prefill_32k` shape): full-sequence
+    logits (features for encoder-only archs).  Cache *construction* for the
+    decode path is done either by replaying decode_step over the prompt
+    (examples, exact) or supplied directly as an input (dry-run serve_step,
+    where the cache is a ShapeDtypeStruct)."""
+    logits, _ = forward(cfg, params, batch)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# analytic parameter count (roofline MODEL_FLOPS = 6 N D)
+# ---------------------------------------------------------------------------
+
+def count_params_analytic(cfg: ArchConfig, active_only: bool = False) -> int:
+    d, h, g, dh, ff, v = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head, cfg.d_ff, cfg.vocab
+    total = v * d  # embed
+    if not cfg.tie_embeddings:
+        total += d * v
+    if cfg.frontend is not None:
+        total += cfg.frontend.dim * d
+
+    def block_params(bt: str) -> int:
+        n = 0
+        if bt in ("mlstm", "slstm"):
+            di = cfg.ssm_expand * d
+            if bt == "mlstm":
+                n += 2 * d * di + 3 * di * di + di * 2 * h + di * d + di
+            else:
+                dhh = d // h
+                n += d * 4 * d + 4 * h * dhh * dhh + 4 * d + d
+                n += 2 * d * ((4 * d) // 3) + ((4 * d) // 3) * d
+            return n + d  # norm
+        if bt in ("mla", "mla_moe"):
+            m = cfg.mla
+            qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+            n += d * m.q_lora_rank + m.q_lora_rank * h * qk
+            n += d * (m.kv_lora_rank + m.qk_rope_head_dim)
+            n += m.kv_lora_rank * h * (m.qk_nope_head_dim + m.v_head_dim)
+            n += h * m.v_head_dim * d
+        elif bt in ("attn", "attn_g", "moe", "hybrid", "hybrid_g"):
+            n += d * h * dh + 2 * d * g * dh + h * dh * d
+        if bt in ("hybrid", "hybrid_g", "mamba"):
+            di = cfg.ssm_expand * d
+            dt_rank = max(d // 16, 1)
+            n += 2 * d * di + cfg.ssm_conv * di + di * 2 * cfg.ssm_state
+            n += di * dt_rank + dt_rank * di + di * cfg.ssm_state + 2 * di + di * d
+        if bt in ("moe", "mla_moe"):
+            m = cfg.moe
+            gated = 3 if cfg.act in ("swiglu", "geglu") else 2
+            per_expert = gated * d * m.d_expert
+            experts = m.top_k if active_only else m.n_experts
+            n += d * m.n_experts + experts * per_expert + m.n_shared * per_expert
+            n += 2 * d  # two norms
+        elif bt in ("attn", "attn_g", "mla", "hybrid", "hybrid_g") and ff > 0:
+            gated = 3 if cfg.act in ("swiglu", "geglu") else 2
+            n += gated * d * ff + 2 * d
+        else:
+            n += d
+        return n
+
+    for cycle, repeat in cfg.layer_plan:
+        total += repeat * sum(block_params(bt) for bt in cycle)
+    if cfg.mtp:
+        total += 2 * d * d + block_params("attn")
+    return int(total)

@@ -1,0 +1,338 @@
+"""Logical-axis sharding rules (MaxText-style) for the production meshes.
+
+Mesh axes:   ("data", "model")            single pod, 16 x 16
+             ("pod", "data", "model")     two pods,   2 x 16 x 16
+
+Two parallelism modes per arch (DESIGN.md sec. 3):
+
+* ``replica`` (fl_m == |data|): each data slice is one FL device with its own
+  full parameter set -> params carry a leading ``fl`` axis sharded over
+  ("pod","data"); inner dims shard over "model" only.  Per-replica batch is
+  unsharded on "data" (the fl axis *is* the data parallelism).
+* ``fsdp`` (fl_m == 1 per pod): one FL device per pod; params shard over
+  ("data" [zero-style], "model" [tensor]) with a leading fl axis over "pod"
+  in the multi-pod mesh.
+
+Activations use sequence parallelism at layer boundaries ("seq" -> "model")
+to bound boundary-activation memory; heads / d_ff / experts / vocab shard
+over "model" inside blocks.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import ArchConfig
+
+
+def fl_axes(mesh: Mesh, mode: str) -> tuple[str, ...]:
+    """Mesh axes that enumerate FL devices."""
+    has_pod = "pod" in mesh.axis_names
+    if mode == "replica":
+        return ("pod", "data") if has_pod else ("data",)
+    return ("pod",) if has_pod else ()
+
+
+def fl_count(mesh: Mesh, mode: str) -> int:
+    axes = fl_axes(mesh, mode)
+    return int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+
+
+# ---------------------------------------------------------------------------
+# Per-leaf param specs.  We pattern-match on the param path (flattened key
+# string) - robust to the nested dict layout of model.init_params.
+# ---------------------------------------------------------------------------
+
+# (regex, spec for the *param dims* (no fl/stage axes)) - first match wins.
+# Dims are named by position; None = replicated.
+_PARAM_RULES: list[tuple[str, tuple[Optional[str], ...]]] = [
+    (r"embed/tok$", ("vocab", "embed")),
+    (r"embed/frontend_proj$", (None, "embed")),
+    (r"head/w$", ("embed", "vocab")),
+    (r"attn/wq$", ("embed", "heads", None)),
+    (r"attn/wk$", ("embed", "kv_heads", None)),
+    (r"attn/wv$", ("embed", "kv_heads", None)),
+    (r"attn/wo$", ("heads", None, "embed")),
+    (r"attn/b[qkv]$", ("heads", None)),
+    (r"attn/wq_a$", ("embed", None)),
+    (r"attn/wq_b$", (None, "heads", None)),
+    (r"attn/wkv_a$", ("embed", None)),
+    (r"attn/wk_b$", (None, "heads", None)),
+    (r"attn/wv_b$", (None, "heads", None)),
+    (r"ffn/router$", ("embed", None)),
+    (r"ffn/w_(in|gate)$", ("expert", "embed", None)),
+    (r"ffn/w_out$", ("expert", None, "embed")),
+    (r"ffn/shared_(in|gate)$", ("embed", "mlp")),
+    (r"ffn/shared_out$", ("mlp", "embed")),
+    (r"(ffn|block/ffn)/w_(in|gate)$", ("embed", "mlp")),
+    (r"(ffn|block/ffn)/w_out$", ("mlp", "embed")),
+    (r"(mamba|core)/w_(in|gate|up)$", ("embed", "mlp")),
+    (r"(mamba|core)/w_(out|down)$", ("mlp", "embed")),
+    (r"(mamba|core)/wq$", ("mlp", "mlp2")),
+    (r"(mamba|core)/wk$", ("mlp", "mlp2")),
+    (r"(mamba|core)/wv$", ("mlp", "mlp2")),
+    (r"(mamba|core)/w_if$", ("mlp", None)),
+    (r"(mamba|core)/w_bc$", ("mlp", None)),
+    (r"(mamba|core)/w_dt1$", ("mlp", None)),
+    (r"(mamba|core)/w_dt2$", (None, "mlp")),
+    (r"(mamba|core)/conv$", (None, "mlp")),
+    (r"(mamba|core)/a_log$", ("mlp", None)),
+    (r"(mamba|core)/(d_skip|gn_scale)$", ("mlp",)),
+    (r"core/w_gates$", ("embed", None, "heads", None)),
+    (r"core/r_gates$", (None, "heads", None, None)),
+    (r"core/b_gates$", (None, "heads", None)),
+    (r"mtp/proj$", (None, "embed")),
+]
+
+
+def _logical_to_mesh(mode: str, mesh: Mesh) -> dict[str, Any]:
+    """Map logical axis names -> mesh axes for param dims."""
+    fsdp = mode == "fsdp"
+    return {
+        "embed": "data" if fsdp else None,  # zero-style shard of d_model dim
+        "vocab": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "mlp": "model",
+        "mlp2": None,
+        "expert": "model",
+    }
+
+
+def _spec_for_path(path: str, n_prefix_axes: int, mapping: dict) -> P:
+    for pat, dims in _PARAM_RULES:
+        if re.search(pat, path):
+            mapped = tuple(mapping.get(d) if d else None for d in dims)
+            return P(*([None] * n_prefix_axes), *mapped)
+    # norms / scalars: replicated over param dims
+    return P()
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "name"):  # GetAttrKey (NamedTuple fields)
+            parts.append(str(p.name))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_specs(cfg: ArchConfig, params_shape, mesh: Mesh, mode: str):
+    """PartitionSpec pytree matching ``params_shape`` (a pytree of
+    ShapeDtypeStruct or arrays).  When mode == 'replica' (or multi-pod), the
+    leading fl axis (added by the caller via stack_fl) shards over fl axes;
+    this function handles only the *per-replica* params: prefix axes =
+    [stage scan axis] where applicable."""
+    mapping = _logical_to_mesh(mode, mesh)
+
+    def spec_one(path, leaf):
+        ps = _path_str(path)
+        in_stage = "/stages/" in f"/{ps}/" or ps.startswith("stages/")
+        n_prefix = 1 if in_stage else 0  # stage scan axis is unsharded
+        spec = _spec_for_path(ps, n_prefix, mapping)
+        # guard: spec length must not exceed rank; extend with None
+        nd = len(leaf.shape)
+        tup = tuple(spec) + (None,) * (nd - len(tuple(spec)))
+        tup = tup[:nd]
+        # drop shardings on dims not divisible by the mesh axis size
+        fixed = []
+        for dim, ax in zip(leaf.shape, tup):
+            if ax is None:
+                fixed.append(None)
+            else:
+                size = mesh.shape[ax] if isinstance(ax, str) else int(np.prod([mesh.shape[a] for a in ax]))
+                fixed.append(ax if dim % size == 0 else None)
+        return P(*fixed)
+
+    return jax.tree_util.tree_map_with_path(spec_one, params_shape)
+
+
+def add_fl_axis(specs, mesh: Mesh, mode: str):
+    """Prepend the fl sharding axis to every param spec (params are stacked
+    with a leading fl axis by the trainer)."""
+    axes = fl_axes(mesh, mode)
+    lead = axes if len(axes) > 1 else (axes[0] if axes else None)
+
+    def upd(spec: P) -> P:
+        return P(lead, *tuple(spec))
+
+    return jax.tree.map(upd, specs, is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# activation/batch specs
+# ---------------------------------------------------------------------------
+
+def batch_spec(mesh: Mesh, mode: str, *, with_fl_axis: bool) -> P:
+    """Spec for (fl?, B, S) token batches."""
+    axes = fl_axes(mesh, mode)
+    lead = axes if len(axes) > 1 else (axes[0] if axes else None)
+    if with_fl_axis:
+        batch_dim = "data" if mode == "fsdp" else None
+        return P(lead, batch_dim, None)
+    return P("data", None)
+
+
+def named(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def data_axes(mesh: Mesh) -> tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _axis_size(mesh: Mesh, ax) -> int:
+    if isinstance(ax, str):
+        return int(mesh.shape[ax])
+    return int(np.prod([mesh.shape[a] for a in ax]))
+
+
+def _fit(mesh: Mesh, dim: int, candidates: list):
+    """First candidate axis (or tuple) that divides dim."""
+    for ax in candidates:
+        if ax is None:
+            continue
+        if dim % _axis_size(mesh, ax) == 0:
+            return ax
+    return None
+
+
+def cache_specs(cache_shapes, mesh: Mesh):
+    """PartitionSpecs for decode caches (leaves carry a leading layer-stack
+    axis).  Priority: batch -> data axes; heads/state dims -> model; cache
+    length absorbs whatever axes remain (long_500k has batch 1)."""
+    da = data_axes(mesh)
+    da_flat = da if len(da) > 1 else da[0]
+
+    def spec_one(path, leaf):
+        ps = _path_str(path)
+        shape = leaf.shape
+        if re.search(r"/pos$", ps) or len(shape) <= 2:
+            return P()
+        used: list = []
+        dims: list = [None] * len(shape)  # dim 0 = layer stack, unsharded
+        if re.search(r"kv/(k|v)$", ps) or re.search(r"mla/(c_kv|k_rope)$", ps):
+            # (layer, B, L, G, dh) or (layer, B, L, R)
+            b, l = shape[1], shape[2]
+            bax = _fit(mesh, b, [da_flat, "data"])
+            dims[1] = bax
+            if bax is not None:
+                used.append(bax)
+            head_dim_idx = 3 if len(shape) >= 4 else None
+            remaining = [a for a in ("model",) + tuple(da) if a not in _flatten_axes(used)]
+            if head_dim_idx is not None and len(shape) >= 5:
+                hax = _fit(mesh, shape[3], ["model"]) if "model" in remaining else None
+                if hax:
+                    dims[3] = hax
+                    remaining.remove("model")
+            rem = [a for a in remaining]
+            lax_ = _fit(mesh, l, [tuple(rem) if len(rem) > 1 else (rem[0] if rem else None), "model", "data"])
+            dims[2] = lax_
+            return P(*dims)
+        if re.search(r"(mamba/(conv|ssm)|mlstm/(c|n|m)|slstm/(c|n|h|m))$", ps):
+            b = shape[1]
+            dims[1] = _fit(mesh, b, [da_flat, "data"])
+            # shard the big inner dim (d_inner or heads) over model
+            if len(shape) >= 3:
+                dims[2] = _fit(mesh, shape[2], ["model"])
+            return P(*dims)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec_one, cache_shapes)
+
+
+def _flatten_axes(used) -> set:
+    out = set()
+    for u in used:
+        if isinstance(u, str):
+            out.add(u)
+        elif u:
+            out.update(u)
+    return out
+
+
+def token_batch_specs(batch_shapes, mesh: Mesh, *, fl_axis: bool, mode: str):
+    """Specs for batch dicts. With fl_axis: leaves are (m, B, ...) - m over
+    the fl axes; inner B over 'data' only in fsdp mode.  Without: (B, ...)
+    over the data axes."""
+    if fl_axis:
+        axes = fl_axes(mesh, mode)
+        lead = axes if len(axes) > 1 else (axes[0] if axes else None)
+        inner = "data" if mode == "fsdp" else None
+
+        def spec_one(leaf):
+            dims = [lead] + [None] * (len(leaf.shape) - 1)
+            if len(leaf.shape) >= 2 and inner is not None and leaf.shape[1] % mesh.shape[inner] == 0:
+                dims[1] = inner
+            return P(*dims)
+    else:
+        da = data_axes(mesh)
+        da_flat = da if len(da) > 1 else da[0]
+
+        def spec_one(leaf):
+            dims = [None] * len(leaf.shape)
+            if leaf.shape and leaf.shape[0] % _axis_size(mesh, da_flat) == 0:
+                dims[0] = da_flat
+            elif leaf.shape and leaf.shape[0] % mesh.shape["data"] == 0:
+                dims[0] = "data"
+            return P(*dims)
+
+    return jax.tree.map(spec_one, batch_shapes)
+
+
+# ---------------------------------------------------------------------------
+# activation sharding context: model code calls constrain(x, logical_axes);
+# outside a context (unit tests, simulator) it is a no-op.  Under
+# vmap(spmd_axis_name=...) the fl axis is prepended automatically by jax.
+# ---------------------------------------------------------------------------
+
+import contextlib
+import threading
+
+_ACT_CTX = threading.local()
+
+# logical activation axes -> mesh axes per mode
+def activation_mapping(mode: str) -> dict[str, Any]:
+    return {
+        "batch": "data" if mode in ("fsdp", "serve") else None,
+        "seq": "model",  # sequence parallelism at layer boundaries
+        "embed": None,
+        "heads": "model",
+        "vocab": "model",
+        "expert": "model",
+    }
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh, mode: str):
+    _ACT_CTX.mesh = mesh
+    _ACT_CTX.mapping = activation_mapping(mode)
+    try:
+        yield
+    finally:
+        _ACT_CTX.mesh = None
+        _ACT_CTX.mapping = None
+
+
+def constrain(x: jax.Array, logical: tuple[Optional[str], ...]) -> jax.Array:
+    mesh = getattr(_ACT_CTX, "mesh", None)
+    if mesh is None:
+        return x
+    mapping = _ACT_CTX.mapping
+    dims = []
+    for size, name in zip(x.shape, logical):
+        ax = mapping.get(name) if name else None
+        if ax is not None:
+            sz = mesh.shape[ax] if isinstance(ax, str) else int(np.prod([mesh.shape[a] for a in ax]))
+            ax = ax if size % sz == 0 else None
+        dims.append(ax)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*dims)))

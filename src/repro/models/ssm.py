@@ -1,0 +1,366 @@
+"""State-space / recurrent blocks.
+
+* Mamba-style selective SSM (hymba's parallel SSM heads, arXiv:2411.13676):
+  sequence form uses an associative scan over time; decode form is the O(1)
+  recurrent step on the carried (conv, ssm) state.
+
+* xLSTM (arXiv:2405.04517):
+    - mLSTM: matrix memory C in R^{dh x dh} per head with exponential gating.
+      Sequence form is chunkwise-parallel (intra-chunk quadratic "linear
+      attention with decay" + inter-chunk recurrence on chunk states), the
+      standard parallelization; decode is the plain recurrence.
+    - sLSTM: scalar memory with recurrent (block-diagonal per head) weights;
+      inherently sequential => lax.scan over time.
+
+All recurrences carry log-space stabilizer states for the exponential gates.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ArchConfig
+from repro.models.layers import dense_init
+
+
+# ===========================================================================
+# Mamba-style selective SSM
+# ===========================================================================
+
+def init_mamba(cfg: ArchConfig, key, dtype, d_inner: int | None = None):
+    d = cfg.d_model
+    di = d_inner if d_inner is not None else cfg.ssm_expand * d
+    n = cfg.ssm_state
+    ks = jax.random.split(key, 7)
+    dt_rank = max(d // 16, 1)
+    return {
+        "w_in": dense_init(ks[0], (d, di), d, dtype),
+        "w_gate": dense_init(ks[1], (d, di), d, dtype),
+        "conv": dense_init(ks[2], (cfg.ssm_conv, di), cfg.ssm_conv, dtype),
+        "w_bc": dense_init(ks[3], (di, 2 * n), di, dtype),
+        "w_dt1": dense_init(ks[4], (di, dt_rank), di, dtype),
+        "w_dt2": dense_init(ks[5], (dt_rank, di), dt_rank, dtype),
+        "a_log": jnp.log(jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32), (di, 1))).astype(dtype),
+        "d_skip": jnp.ones((di,), dtype),
+        "w_out": dense_init(ks[6], (di, d), di, dtype),
+    }
+
+
+def _mamba_inner(p, u, conv_state=None):
+    """Shared pieces: conv + dt/B/C projections.  u (B,S,di)."""
+    kw = p["conv"].shape[0]
+    if conv_state is None:
+        pad = jnp.pad(u, ((0, 0), (kw - 1, 0), (0, 0)))
+    else:
+        pad = jnp.concatenate([conv_state, u], axis=1)
+    # depthwise causal conv1d
+    x = sum(pad[:, i : i + u.shape[1], :] * p["conv"][i] for i in range(kw))
+    x = jax.nn.silu(x)
+    bc = x @ p["w_bc"]
+    n = bc.shape[-1] // 2
+    b_t, c_t = bc[..., :n], bc[..., n:]
+    dt = jax.nn.softplus((x @ p["w_dt1"]) @ p["w_dt2"])  # (B,S,di)
+    new_conv_state = pad[:, -(kw - 1) :, :] if kw > 1 else pad[:, :0, :]
+    return x, b_t, c_t, dt, new_conv_state
+
+
+def mamba_seq(cfg: ArchConfig, p, x_in: jax.Array) -> jax.Array:
+    """x_in (B,S,D) -> (B,S,D). Associative scan over time.
+
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t * x_t ;  y_t = C_t . h_t + D x_t
+    """
+    u = x_in @ p["w_in"]
+    z = jax.nn.silu(x_in @ p["w_gate"])
+    x, b_t, c_t, dt, _ = _mamba_inner(p, u)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))  # (di, n)
+    # decay per step: (B,S,di,n)
+    decay = jnp.exp(dt[..., None].astype(jnp.float32) * a)
+    inp = (dt * x)[..., None].astype(jnp.float32) * b_t[..., None, :].astype(jnp.float32)
+
+    def combine(l, r):
+        dl, hl = l
+        dr, hr = r
+        return dl * dr, hr + dr * hl
+
+    _, h = jax.lax.associative_scan(combine, (decay, inp), axis=1)
+    y = jnp.einsum("bsdn,bsn->bsd", h, c_t.astype(jnp.float32))
+    y = y.astype(x.dtype) + p["d_skip"] * x
+    return (y * z) @ p["w_out"]
+
+
+class MambaCache(NamedTuple):
+    conv: jax.Array  # (B, kw-1, di)
+    ssm: jax.Array  # (B, di, n) fp32
+
+
+def init_mamba_cache(cfg: ArchConfig, batch: int, d_inner: int, dtype) -> MambaCache:
+    return MambaCache(
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, d_inner), dtype),
+        ssm=jnp.zeros((batch, d_inner, cfg.ssm_state), jnp.float32),
+    )
+
+
+def mamba_decode(cfg: ArchConfig, p, x_t: jax.Array, cache: MambaCache) -> tuple[jax.Array, MambaCache]:
+    """Single-token recurrent step. x_t (B,1,D)."""
+    u = x_t @ p["w_in"]
+    z = jax.nn.silu(x_t @ p["w_gate"])
+    x, b_t, c_t, dt, conv_new = _mamba_inner(p, u, conv_state=cache.conv)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    decay = jnp.exp(dt[:, 0, :, None].astype(jnp.float32) * a)  # (B,di,n)
+    inp = (dt[:, 0] * x[:, 0])[..., None].astype(jnp.float32) * b_t[:, 0, None, :].astype(jnp.float32)
+    h = decay * cache.ssm + inp
+    y = jnp.einsum("bdn,bn->bd", h, c_t[:, 0].astype(jnp.float32))[:, None]
+    y = y.astype(x.dtype) + p["d_skip"] * x
+    out = (y * z) @ p["w_out"]
+    return out, MambaCache(conv=conv_new, ssm=h)
+
+
+# ===========================================================================
+# xLSTM: mLSTM
+# ===========================================================================
+
+def init_mlstm(cfg: ArchConfig, key, dtype):
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    h = cfg.n_heads
+    ks = jax.random.split(key, 7)
+    return {
+        "w_up": dense_init(ks[0], (d, di), d, dtype),
+        "w_gate": dense_init(ks[1], (d, di), d, dtype),
+        "wq": dense_init(ks[2], (di, di), di, dtype),
+        "wk": dense_init(ks[3], (di, di), di, dtype),
+        "wv": dense_init(ks[4], (di, di), di, dtype),
+        "w_if": dense_init(ks[5], (di, 2 * h), di, dtype),  # input & forget gate pre-acts
+        "b_if": jnp.concatenate([jnp.zeros((h,)), 3.0 * jnp.ones((h,))]).astype(dtype),
+        "gn_scale": jnp.ones((di,), dtype),
+        "w_down": dense_init(ks[6], (di, d), di, dtype),
+    }
+
+
+def _mlstm_gates(p, x, h):
+    """log input/forget gates, stabilized. x (B,S,di) -> (B,S,H)."""
+    pre = x @ p["w_if"] + p["b_if"]
+    i_pre, f_pre = pre[..., :h], pre[..., h:]
+    log_f = -jax.nn.softplus(-f_pre.astype(jnp.float32))  # log sigmoid(f)
+    log_i = i_pre.astype(jnp.float32)  # exponential input gate: log i = i_pre
+    return log_i, log_f
+
+
+def _headify(x, h):
+    b, s, di = x.shape
+    return x.reshape(b, s, h, di // h)
+
+
+def _group_norm_heads(x, scale):
+    """Per-head RMS norm then flatten heads (xLSTM uses GroupNorm)."""
+    b, s, h, dh = x.shape
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt((xf * xf).mean(-1, keepdims=True) + 1e-6)
+    y = y.reshape(b, s, h * dh) * scale.astype(jnp.float32)
+    return y
+
+
+def mlstm_seq(cfg: ArchConfig, p, x_in: jax.Array) -> jax.Array:
+    """Chunkwise-parallel mLSTM. x_in (B,S,D)."""
+    h = cfg.n_heads
+    x = x_in @ p["w_up"]
+    z = jax.nn.silu(x_in @ p["w_gate"])
+    b, s, di = x.shape
+    dh = di // h
+    q = _headify(x @ p["wq"], h)
+    k = _headify(x @ p["wk"], h) / jnp.sqrt(dh)
+    v = _headify(x @ p["wv"], h)
+    log_i, log_f = _mlstm_gates(p, x, h)
+
+    chunk = min(cfg.mlstm_chunk, s)
+    assert s % chunk == 0, "seq must be divisible by mlstm_chunk"
+    nc = s // chunk
+
+    def resh(t):  # (B,S,...) -> (nc, B, chunk, ...)
+        return t.reshape(b, nc, chunk, *t.shape[2:]).transpose(1, 0, 2, *range(3, t.ndim + 1))
+
+    qc, kc, vc = resh(q), resh(k), resh(v)
+    lic, lfc = resh(log_i), resh(log_f)
+
+    def body(carry, inp):
+        # c_state/n_state are *stabilized*: actual C = exp(m_state) * c_state
+        c_state, n_state, m_state = carry  # (B,H,dh,dh), (B,H,dh), (B,H)
+        q_i, k_i, v_i, li, lf = inp  # (B,chunk,H,*)
+        csum_f = jnp.cumsum(lf, axis=1)  # (B,chunk,H) inclusive
+        total_f = csum_f[:, -1]  # (B,H)
+        lt = csum_f.transpose(0, 2, 1)  # (B,H,chunk)
+        lis = li.transpose(0, 2, 1)  # (B,H,chunk)
+        # intra-chunk: state_t = sum_{s<=t} exp(csum_f[t]-csum_f[s]+li[s]) v_s k_s^T
+        logD = lt[..., :, None] - lt[..., None, :] + lis[..., None, :]
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        logD = jnp.where(tri, logD, -jnp.inf)
+        # incoming chunk-carry state weight at step t: exp(csum_f[t] + m_state)
+        log_in = lt + m_state[:, :, None]  # (B,H,chunk)
+        m_new = jnp.maximum(jnp.max(logD, axis=-1), log_in)  # (B,H,chunk)
+        D = jnp.exp(logD - m_new[..., None])
+        qh = q_i.transpose(0, 2, 1, 3).astype(jnp.float32)  # (B,H,chunk,dh)
+        kh = k_i.transpose(0, 2, 1, 3).astype(jnp.float32)
+        vh = v_i.transpose(0, 2, 1, 3).astype(jnp.float32)
+        scores = jnp.einsum("bhtk,bhsk->bhts", qh, kh) * D
+        inter_scale = jnp.exp(log_in - m_new)  # (B,H,chunk)
+        num = (
+            jnp.einsum("bhts,bhsv->bhtv", scores, vh)
+            + jnp.einsum("bhtk,bhkv->bhtv", qh, c_state) * inter_scale[..., None]
+        )
+        n_vec = (
+            jnp.einsum("bhts,bhsk->bhtk", D, kh)
+            + n_state[:, :, None, :] * inter_scale[..., None]
+        )
+        den = jnp.abs(jnp.einsum("bhtk,bhtk->bht", qh, n_vec))
+        out = num / jnp.maximum(den, jnp.exp(-m_new))[..., None]
+
+        # ---- chunk-state update ------------------------------------------
+        log_ws = (total_f[:, None] - csum_f + li).transpose(0, 2, 1)  # (B,H,chunk)
+        log_carry = total_f + m_state  # (B,H)
+        m_end = jnp.maximum(jnp.max(log_ws, axis=-1), log_carry)
+        ws = jnp.exp(log_ws - m_end[..., None])
+        carry_scale = jnp.exp(log_carry - m_end)
+        c_new = carry_scale[..., None, None] * c_state + jnp.einsum("bhs,bhsk,bhsv->bhkv", ws, kh, vh)
+        n_new = carry_scale[..., None] * n_state + jnp.einsum("bhs,bhsk->bhk", ws, kh)
+        out = out.transpose(0, 2, 1, 3)  # (B,chunk,H,dh)
+        return (c_new, n_new, m_end), out
+
+    c0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+    n0 = jnp.zeros((b, h, dh), jnp.float32)
+    m0 = jnp.full((b, h), -1e30, jnp.float32)
+    _, outs = jax.lax.scan(body, (c0, n0, m0), (qc, kc, vc, lic, lfc))
+    y = outs.transpose(1, 0, 2, 3, 4).reshape(b, s, h, dh)
+    y = _group_norm_heads(y, p["gn_scale"]).astype(x.dtype)
+    return (y * z) @ p["w_down"]
+
+
+class MLSTMCache(NamedTuple):
+    c: jax.Array  # (B,H,dh,dh) fp32
+    n: jax.Array  # (B,H,dh) fp32
+    m: jax.Array  # (B,H) fp32 stabilizer
+
+
+def init_mlstm_cache(cfg: ArchConfig, batch: int, dtype) -> MLSTMCache:
+    h = cfg.n_heads
+    dh = cfg.ssm_expand * cfg.d_model // h
+    return MLSTMCache(
+        c=jnp.zeros((batch, h, dh, dh), jnp.float32),
+        n=jnp.zeros((batch, h, dh), jnp.float32),
+        m=jnp.full((batch, h), -1e30, jnp.float32),
+    )
+
+
+def mlstm_decode(cfg: ArchConfig, p, x_t: jax.Array, cache: MLSTMCache) -> tuple[jax.Array, MLSTMCache]:
+    h = cfg.n_heads
+    x = x_t @ p["w_up"]
+    z = jax.nn.silu(x_t @ p["w_gate"])
+    b, _, di = x.shape
+    dh = di // h
+    q = _headify(x @ p["wq"], h)[:, 0]  # (B,H,dh)... reshape below
+    q = q.reshape(b, h, dh)
+    k = (_headify(x @ p["wk"], h) / jnp.sqrt(dh)).reshape(b, h, dh)
+    v = _headify(x @ p["wv"], h).reshape(b, h, dh)
+    log_i, log_f = _mlstm_gates(p, x, h)
+    li, lf = log_i[:, 0], log_f[:, 0]  # (B,H)
+
+    m_new = jnp.maximum(lf + cache.m, li)
+    f_s = jnp.exp(lf + cache.m - m_new)[..., None]
+    i_s = jnp.exp(li - m_new)[..., None]
+    c_new = f_s[..., None] * cache.c + i_s[..., None] * jnp.einsum("bhk,bhv->bhkv", k.astype(jnp.float32), v.astype(jnp.float32))
+    n_new = f_s * cache.n + i_s * k.astype(jnp.float32)
+    num = jnp.einsum("bhk,bhkv->bhv", q.astype(jnp.float32), c_new)
+    den = jnp.abs(jnp.einsum("bhk,bhk->bh", q.astype(jnp.float32), n_new))
+    out = num / jnp.maximum(den, jnp.exp(-m_new))[..., None]
+    y = _group_norm_heads(out[:, None], p["gn_scale"]).astype(x.dtype)  # (B,1,di)
+    return (y * z) @ p["w_down"], MLSTMCache(c_new, n_new, m_new)
+
+
+# ===========================================================================
+# xLSTM: sLSTM
+# ===========================================================================
+
+def init_slstm(cfg: ArchConfig, key, dtype):
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    ks = jax.random.split(key, 4)
+    # 4 gates (i, f, z, o): input weights (d, 4, h, dh) + per-head recurrent
+    # block-diagonal weights (4, h, dh, dh)
+    return {
+        "w_gates": dense_init(ks[0], (d, 4, h, dh), d, dtype),
+        "r_gates": dense_init(ks[1], (4, h, dh, dh), dh, dtype),
+        "b_gates": jnp.zeros((4, h, dh), dtype),
+        "gn_scale": jnp.ones((d,), dtype),
+        "w_up": dense_init(ks[2], (d, (4 * d) // 3), d, dtype),
+        "w_gate": dense_init(ks[3], (d, (4 * d) // 3), d, dtype),
+        "w_down": dense_init(jax.random.fold_in(ks[3], 7), ((4 * d) // 3, d), (4 * d) // 3, dtype),
+    }
+
+
+class SLSTMState(NamedTuple):
+    c: jax.Array  # (B,H,dh)
+    n: jax.Array  # (B,H,dh)
+    h: jax.Array  # (B,H,dh)
+    m: jax.Array  # (B,H,dh) stabilizer
+
+
+def init_slstm_cache(cfg: ArchConfig, batch: int, dtype) -> SLSTMState:
+    h, dh = cfg.n_heads, cfg.d_model // cfg.n_heads
+    z = jnp.zeros((batch, h, dh), jnp.float32)
+    return SLSTMState(c=z, n=z, h=z, m=jnp.full((batch, h, dh), -1e30, jnp.float32))
+
+
+def _slstm_cell(p, x_t, st: SLSTMState, pre_x=None) -> SLSTMState:
+    """x_t (B,D). One recurrence step (fp32 state).
+
+    pre_x: optionally the precomputed input projection (B,4,H,dh) - the
+    sequence form hoists `x @ w_gates` out of the scan (one parallel matmul
+    over time instead of a per-step weight re-read; EXPERIMENTS.md §Perf)."""
+    if pre_x is None:
+        pre_x = jnp.einsum("bd,dghk->bghk", x_t, p["w_gates"])  # (B,4,H,dh)
+    rec = jnp.einsum("bhk,ghkj->bghj", st.h.astype(pre_x.dtype), p["r_gates"])
+    pre = (pre_x + rec + p["b_gates"]).astype(jnp.float32)
+    i_p, f_p, z_p, o_p = pre[:, 0], pre[:, 1], pre[:, 2], pre[:, 3]
+    log_f = -jax.nn.softplus(-f_p)  # log sigmoid
+    m_new = jnp.maximum(log_f + st.m, i_p)
+    i_s = jnp.exp(i_p - m_new)
+    f_s = jnp.exp(log_f + st.m - m_new)
+    c_new = f_s * st.c + i_s * jnp.tanh(z_p)
+    n_new = f_s * st.n + i_s
+    h_new = jax.nn.sigmoid(o_p) * c_new / jnp.maximum(n_new, 1e-6)
+    return SLSTMState(c=c_new, n=n_new, h=h_new, m=m_new)
+
+
+def slstm_seq(cfg: ArchConfig, p, x_in: jax.Array) -> jax.Array:
+    """x_in (B,S,D): sequential scan over time (sLSTM has no parallel form)."""
+    b, s, d = x_in.shape
+    st0 = init_slstm_cache(cfg, b, x_in.dtype)
+    # input projections for ALL timesteps in one parallel matmul; the scan
+    # body then touches only the (small, head-block-diagonal) R matrices
+    pre_x = jnp.einsum("bsd,dghk->bsghk", x_in, p["w_gates"])
+
+    def body(st, pre_t):
+        st = _slstm_cell(p, None, st, pre_x=pre_t)
+        return st, st.h
+
+    _, hs = jax.lax.scan(body, st0, pre_x.transpose(1, 0, 2, 3, 4))
+    h = cfg.n_heads
+    y = hs.transpose(1, 0, 2, 3).reshape(b, s, d)  # (B,S,H,dh)->(B,S,D)
+    yn = _group_norm_heads(y.reshape(b, s, h, d // h), p["gn_scale"]).astype(x_in.dtype)
+    # post-recurrence gated FFN (proj factor 4/3, xLSTM block structure)
+    up = yn @ p["w_up"]
+    gate = jax.nn.gelu(yn @ p["w_gate"])
+    return (up * gate) @ p["w_down"]
+
+
+def slstm_decode(cfg: ArchConfig, p, x_t: jax.Array, st: SLSTMState) -> tuple[jax.Array, SLSTMState]:
+    b = x_t.shape[0]
+    st = _slstm_cell(p, x_t[:, 0], st)
+    h, d = cfg.n_heads, cfg.d_model
+    y = st.h.reshape(b, 1, h, d // h)
+    yn = _group_norm_heads(y, p["gn_scale"]).astype(x_t.dtype)
+    up = yn @ p["w_up"]
+    gate = jax.nn.gelu(yn @ p["w_gate"])
+    return (up * gate) @ p["w_down"], st

@@ -1,0 +1,8 @@
+"""Optimizers + step-size schedules (pure JAX, no optax)."""
+from repro.optim.optimizers import adam, init_opt, momentum, sgd, apply_updates, clip_by_global_norm
+from repro.optim.schedules import constant, paper_diminishing, cosine
+
+__all__ = [
+    "adam", "init_opt", "momentum", "sgd", "apply_updates",
+    "clip_by_global_norm", "constant", "paper_diminishing", "cosine",
+]

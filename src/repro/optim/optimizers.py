@@ -1,0 +1,85 @@
+"""Minimal functional optimizers.
+
+Each optimizer is (init, update): ``init(params) -> state``,
+``update(grads, state, params, lr) -> (new_params, new_state)``.
+The paper's Event 4 uses plain SGD; momentum/Adam are provided for the
+beyond-paper examples.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array], tuple[Any, Any]]
+
+
+def _tmap(f, *trees):
+    return jax.tree.map(f, *trees)
+
+
+def sgd() -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params, lr):
+        new = _tmap(lambda p, g: (p.astype(jnp.float32) - lr * g.astype(jnp.float32)).astype(p.dtype), params, grads)
+        return new, state
+
+    return Optimizer(init, update)
+
+
+def momentum(beta: float = 0.9) -> Optimizer:
+    def init(params):
+        return _tmap(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+    def update(grads, state, params, lr):
+        vel = _tmap(lambda v, g: beta * v + g.astype(jnp.float32), state, grads)
+        new = _tmap(lambda p, v: (p.astype(jnp.float32) - lr * v).astype(p.dtype), params, vel)
+        return new, vel
+
+    return Optimizer(init, update)
+
+
+class AdamState(NamedTuple):
+    mu: Any
+    nu: Any
+    count: jax.Array
+
+
+def adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> Optimizer:
+    def init(params):
+        z = _tmap(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return AdamState(mu=z, nu=_tmap(jnp.copy, z), count=jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params, lr):
+        count = state.count + 1
+        mu = _tmap(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state.mu, grads)
+        nu = _tmap(lambda n, g: b2 * n + (1 - b2) * jnp.square(g.astype(jnp.float32)), state.nu, grads)
+        bc1 = 1 - b1 ** count.astype(jnp.float32)
+        bc2 = 1 - b2 ** count.astype(jnp.float32)
+        new = _tmap(
+            lambda p, m, n: (p.astype(jnp.float32) - lr * (m / bc1) / (jnp.sqrt(n / bc2) + eps)).astype(p.dtype),
+            params, mu, nu)
+        return new, AdamState(mu, nu, count)
+
+    return Optimizer(init, update)
+
+
+def init_opt(name: str) -> Optimizer:
+    return {"sgd": sgd, "momentum": momentum, "adam": adam}[name]()
+
+
+def apply_updates(params, updates):
+    return _tmap(lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype), params, updates)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), gn

@@ -1,0 +1,37 @@
+"""Step-size policies (paper Assumption 7).
+
+* constant:          alpha^(k) = alpha                       (Thm 1)
+* paper_diminishing: alpha^(k) = alpha0 / (1 + k/gamma)^theta, theta in
+                     (0.5, 1]; theta = 0.5 gives the ln k / sqrt(k) rate of
+                     Thm 2 (paper Sec. IV uses alpha^(k) = 0.1/sqrt(1+k)).
+* cosine:            standard warmup+cosine for the transformer examples.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(alpha: float):
+    def sched(k):
+        return jnp.asarray(alpha, jnp.float32)
+
+    return sched
+
+
+def paper_diminishing(alpha0: float = 0.1, gamma: float = 1.0, theta: float = 0.5):
+    assert 0.5 <= theta <= 1.0
+    def sched(k):
+        return alpha0 / (1.0 + jnp.asarray(k, jnp.float32) / gamma) ** theta
+
+    return sched
+
+
+def cosine(peak: float, warmup: int, total: int, floor: float = 0.0):
+    def sched(k):
+        k = jnp.asarray(k, jnp.float32)
+        warm = peak * k / jnp.maximum(warmup, 1)
+        prog = jnp.clip((k - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = floor + 0.5 * (peak - floor) * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(k < warmup, warm, cos)
+
+    return sched

@@ -1,0 +1,24 @@
+"""Perf-variant switches (EXPERIMENTS.md §Perf hillclimbing).
+
+Read once from REPRO_VARIANT (comma-separated tokens).  Kept deliberately
+tiny: variants are *hypothesis knobs* for the hillclimb driver, not a
+config system - permanent winners get promoted into the real configs.
+"""
+from __future__ import annotations
+
+import os
+
+
+def _tokens() -> list[str]:
+    return [t.strip() for t in os.environ.get("REPRO_VARIANT", "").split(",") if t.strip()]
+
+
+def active(name: str) -> bool:
+    return name in _tokens()
+
+
+def value(name: str, default=None):
+    for t in _tokens():
+        if t.startswith(name + "="):
+            return t.split("=", 1)[1]
+    return default

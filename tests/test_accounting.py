@@ -1,0 +1,74 @@
+"""Communication-savings accounting (core/accounting.py)."""
+import numpy as np
+
+from repro.core.accounting import savings_report
+
+
+def _ring(m):
+    a = np.zeros((m, m), bool)
+    idx = np.arange(m)
+    a[idx, (idx + 1) % m] = True
+    a[(idx + 1) % m, idx] = True
+    return a
+
+
+def test_zero_triggers_zero_event_bytes():
+    t, m = 10, 6
+    v = np.zeros((t, m), bool)
+    adj = np.broadcast_to(_ring(m), (t, m, m))
+    rep = savings_report(v, adj, n_bytes=1000)
+    assert rep.event_bytes == 0.0
+    assert rep.dense_bytes > 0
+    assert rep.trigger_rate == 0.0
+    assert rep.link_utilization == 0.0
+
+
+def test_all_triggers_match_dense():
+    t, m = 10, 6
+    v = np.ones((t, m), bool)
+    adj = np.broadcast_to(_ring(m), (t, m, m))
+    rep = savings_report(v, adj, n_bytes=1000)
+    assert abs(rep.event_bytes - rep.dense_bytes) < 1e-6
+    assert rep.link_utilization == 1.0
+
+
+def test_partial_triggers_between_bounds_and_every_k():
+    rng = np.random.default_rng(0)
+    t, m = 50, 8
+    v = rng.random((t, m)) < 0.3
+    adj = np.broadcast_to(_ring(m), (t, m, m))
+    rep = savings_report(v, adj, n_bytes=10_000, every_k=5)
+    assert 0.0 < rep.event_bytes < rep.dense_bytes
+    assert abs(rep.every_k_bytes - rep.dense_bytes / 5) < 1e-6
+    assert 0.2 < rep.trigger_rate < 0.45
+    assert "dense" in rep.summary()
+
+
+def test_heterogeneous_bandwidth_tx_time():
+    t, m = 20, 4
+    v = np.ones((t, m), bool)
+    adj = np.broadcast_to(_ring(m), (t, m, m))
+    slow = savings_report(v, adj, 1000, bandwidths=np.asarray([10.0, 1e6, 1e6, 1e6]))
+    fast = savings_report(v, adj, 1000, bandwidths=np.full(m, 1e6))
+    assert slow.tx_time_event > fast.tx_time_event
+
+
+def test_simulator_trace_roundtrip():
+    """Report composes with real simulator traces."""
+    from repro.core.topology import make_process
+    from repro.data.loader import FederatedBatches
+    from repro.data.partition import by_labels
+    from repro.data.synthetic import image_dataset
+    from repro.fl.simulator import SimConfig, make_eval_fn, run
+
+    x, y = image_dataset(600, seed=0)
+    xt, yt = image_dataset(200, seed=1)
+    parts = by_labels(y, 6, 2)
+    graph = make_process(6, "rgg", seed=0)
+    sim = SimConfig(m=6, iters=30, policy="efhc", r=50.0)
+    res = run(sim, graph, FederatedBatches(x, y, parts, 8, seed=1),
+              make_eval_fn(sim, xt, yt), eval_every=10)
+    rep = savings_report(res.v, res.adj, n_bytes=res.model_dim * 4,
+                         bandwidths=res.bandwidths)
+    assert rep.event_bytes <= rep.dense_bytes + 1e-9
+    assert 0.0 <= rep.trigger_rate <= 1.0

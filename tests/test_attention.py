@@ -1,0 +1,132 @@
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import attention as A
+from repro.models.common import ArchConfig, MLAConfig
+
+
+def _cfg(**kw):
+    base = dict(name="t", family="dense", source="t", n_layers=1, d_model=64,
+                n_heads=4, n_kv_heads=2, d_ff=0, vocab=11,
+                layer_plan=((("attn",), 1),), dtype="float32", attn_chunk=16)
+    base.update(kw)
+    return ArchConfig(**base)
+
+
+def test_chunked_equals_dense():
+    cfg = _cfg()
+    key = jax.random.PRNGKey(0)
+    p = A.init_attention(cfg, key, jnp.float32)
+    x = jax.random.normal(key, (2, 64, 64))
+    pos = jnp.arange(64)
+    dense = A.attention_seq(dataclasses.replace(cfg, attn_impl="xla"), p, x, pos,
+                            layer_window=None)
+    chunk = A.attention_seq(dataclasses.replace(cfg, attn_impl="chunked"), p, x, pos,
+                            layer_window=None)
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(chunk), atol=2e-5)
+
+
+def test_chunked_equals_dense_with_window_and_prefix():
+    cfg = _cfg(causal=True)
+    key = jax.random.PRNGKey(1)
+    p = A.init_attention(cfg, key, jnp.float32)
+    x = jax.random.normal(key, (1, 48, 64))
+    pos = jnp.arange(48)
+    for window, prefix in [(8, None), (None, jnp.asarray(8)), (16, jnp.asarray(4))]:
+        dense = A.attention_seq(dataclasses.replace(cfg, attn_impl="xla"), p, x, pos,
+                                layer_window=window, prefix_len=prefix)
+        chunk = A.attention_seq(dataclasses.replace(cfg, attn_impl="chunked"), p, x,
+                                pos, layer_window=window, prefix_len=prefix)
+        np.testing.assert_allclose(np.asarray(dense), np.asarray(chunk), atol=2e-5)
+
+
+def test_noncausal_attends_everywhere():
+    cfg = _cfg(causal=False)
+    key = jax.random.PRNGKey(2)
+    p = A.init_attention(cfg, key, jnp.float32)
+    x = jax.random.normal(key, (1, 16, 64))
+    y_full = A.attention_seq(cfg, p, x, jnp.arange(16), layer_window=None)
+    # causal output at position 0 only sees token 0; non-causal differs
+    y_causal = A.attention_seq(dataclasses.replace(cfg, causal=True), p, x,
+                               jnp.arange(16), layer_window=None)
+    assert np.abs(np.asarray(y_full[:, 0]) - np.asarray(y_causal[:, 0])).max() > 1e-4
+
+
+def test_window_masks_old_tokens():
+    cfg = _cfg()
+    key = jax.random.PRNGKey(3)
+    p = A.init_attention(cfg, key, jnp.float32)
+    x = jax.random.normal(key, (1, 32, 64))
+    # with window=4, output at position 31 must not depend on token 0
+    x2 = x.at[0, 0].add(100.0)
+    y1 = A.attention_seq(cfg, p, x, jnp.arange(32), layer_window=4)
+    y2 = A.attention_seq(cfg, p, x2, jnp.arange(32), layer_window=4)
+    np.testing.assert_allclose(np.asarray(y1[0, 31]), np.asarray(y2[0, 31]), atol=1e-5)
+    assert np.abs(np.asarray(y1[0, 2]) - np.asarray(y2[0, 2])).max() > 1e-3
+
+
+def test_decode_ring_buffer_window():
+    """Sliding-window decode with cache shorter than the sequence."""
+    cfg = _cfg()
+    key = jax.random.PRNGKey(4)
+    p = A.init_attention(cfg, key, jnp.float32)
+    s, win = 24, 8
+    x = jax.random.normal(key, (1, s, 64))
+    pos = jnp.arange(s)
+    ref = A.attention_seq(cfg, p, x, pos, layer_window=win)
+    cache = A.init_kv_cache(cfg, 1, win, jnp.float32)
+    outs = []
+    for t in range(s):
+        y, cache = A.attention_decode(cfg, p, x[:, t : t + 1], cache,
+                                      jnp.asarray(t), layer_window=win)
+        outs.append(y)
+    got = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=1e-4)
+
+
+def test_mla_decode_matches_seq():
+    cfg = _cfg(n_kv_heads=4,
+               mla=MLAConfig(q_lora_rank=32, kv_lora_rank=16,
+                             qk_nope_head_dim=16, qk_rope_head_dim=8, v_head_dim=16))
+    key = jax.random.PRNGKey(5)
+    p = A.init_mla(cfg, key, jnp.float32)
+    s = 12
+    x = jax.random.normal(key, (2, s, 64))
+    ref = A.mla_seq(cfg, p, x, jnp.arange(s))
+    cache = A.init_mla_cache(cfg, 2, s, jnp.float32)
+    outs = []
+    for t in range(s):
+        y, cache = A.mla_decode(cfg, p, x[:, t : t + 1], cache, jnp.asarray(t))
+        outs.append(y)
+    got = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=1e-4)
+
+
+def test_gqa_reduces_to_mha_when_groups_equal():
+    cfg_mha = _cfg(n_kv_heads=4)
+    key = jax.random.PRNGKey(6)
+    p = A.init_attention(cfg_mha, key, jnp.float32)
+    x = jax.random.normal(key, (1, 8, 64))
+    y = A.attention_seq(cfg_mha, p, x, jnp.arange(8), layer_window=None)
+    assert y.shape == (1, 8, 64)
+    assert np.isfinite(np.asarray(y)).all()
+
+
+def test_banded_equals_dense_sliding_window():
+    import dataclasses as dc
+
+    cfg = _cfg(attn_impl="banded")
+    key = jax.random.PRNGKey(7)
+    p = A.init_attention(cfg, key, jnp.float32)
+    for s, win in [(64, 16), (48, 8), (64, 32)]:
+        x = jax.random.normal(jax.random.fold_in(key, s), (2, s, 64))
+        pos = jnp.arange(s)
+        dense = A.attention_seq(dc.replace(cfg, attn_impl="xla"), p, x, pos,
+                                layer_window=win)
+        banded = A.attention_seq(cfg, p, x, pos, layer_window=win)
+        np.testing.assert_allclose(np.asarray(banded), np.asarray(dense),
+                                   atol=2e-5)

@@ -1,0 +1,127 @@
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint
+from repro.data.loader import FederatedBatches, lm_batches
+from repro.data.partition import by_labels, dirichlet, heterogeneity_delta
+from repro.data.synthetic import image_dataset, token_dataset
+from repro.optim import adam, clip_by_global_norm, momentum, sgd
+from repro.optim.schedules import constant, cosine, paper_diminishing
+
+
+# ------------------------------------------------------------------- data ---
+
+def test_image_dataset_consistent_prototypes():
+    x1, y1 = image_dataset(200, seed=0)
+    x2, y2 = image_dataset(200, seed=99)  # different sampling, same task
+    assert x1.shape == (200, 784) and x1.dtype == np.float32
+    assert 0.0 <= x1.min() and x1.max() <= 1.0
+    # same class prototypes => class means correlate across splits
+    for c in range(3):
+        m1, m2 = x1[y1 == c].mean(0), x2[y2 == c].mean(0)
+        corr = np.corrcoef(m1, m2)[0, 1]
+        assert corr > 0.6, "class means must correlate across splits (shared protos)"
+
+
+def test_by_labels_partition_covers_and_restricts():
+    x, y = image_dataset(2000, seed=0)
+    parts = by_labels(y, 10, 1)
+    all_idx = np.concatenate(parts)
+    assert len(np.unique(all_idx)) == len(all_idx), "no duplicates"
+    for p in parts:
+        assert len(np.unique(y[p])) == 1, "1 label/device (paper FMNIST)"
+    d = heterogeneity_delta(x, y, parts, 10)
+    assert d > 0.8, "1 label/device is extreme heterogeneity"
+
+
+def test_dirichlet_partition_alpha_controls_skew():
+    _, y = image_dataset(3000, seed=1)
+    skew_low = heterogeneity_delta(None, y, dirichlet(y, 10, 100.0, seed=0), 10)
+    skew_high = heterogeneity_delta(None, y, dirichlet(y, 10, 0.05, seed=0), 10)
+    assert skew_high > skew_low
+
+
+def test_federated_batches_shapes_and_determinism():
+    x, y = image_dataset(500, seed=0)
+    parts = by_labels(y, 5, 2)
+    b1 = FederatedBatches(x, y, parts, 8, seed=3)
+    b2 = FederatedBatches(x, y, parts, 8, seed=3)
+    xb1, yb1 = b1.next()
+    xb2, yb2 = b2.next()
+    assert xb1.shape == (5, 8, 784)
+    np.testing.assert_array_equal(xb1, xb2)
+
+
+def test_lm_batches():
+    stream = token_dataset(5000, vocab=64, seed=0)
+    it = lm_batches(stream, 4, 16, seed=1)
+    b = next(it)
+    assert b["tokens"].shape == (4, 16)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["targets"][:, :-1])
+
+
+# ------------------------------------------------------------------ optim ---
+
+@pytest.mark.parametrize("opt_name", ["sgd", "momentum", "adam"])
+def test_optimizers_minimize_quadratic(opt_name):
+    opt = {"sgd": sgd, "momentum": momentum, "adam": adam}[opt_name]()
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = opt.init(params)
+    for _ in range(500):
+        g = {"w": 2 * params["w"]}
+        params, state = opt.update(g, state, params, jnp.asarray(0.05))
+    assert float(jnp.abs(params["w"]).max()) < 5e-2
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((10,), 10.0)}
+    clipped, gn = clip_by_global_norm(g, 1.0)
+    assert abs(float(gn) - np.sqrt(1000.0)) < 1e-3
+    norm_after = float(jnp.sqrt(jnp.sum(clipped["a"] ** 2)))
+    assert abs(norm_after - 1.0) < 1e-4
+
+
+def test_paper_diminishing_schedule_properties():
+    """Assumption 7-(b): alpha -> 0, sum alpha = inf, sum alpha^2 < inf."""
+    sched = paper_diminishing(0.1, gamma=1.0, theta=0.5)
+    ks = np.arange(0, 10_000)
+    a = np.asarray([float(sched(k)) for k in ks[:100]])
+    assert a[0] == pytest.approx(0.1)
+    assert np.all(np.diff(a) < 0)
+    # alpha^(k) = 0.1/sqrt(1+k) exactly (paper Sec. IV-A)
+    np.testing.assert_allclose(a, 0.1 / np.sqrt(1 + ks[:100]), rtol=1e-6)
+
+
+def test_cosine_schedule():
+    sched = cosine(1.0, warmup=10, total=100)
+    assert float(sched(0)) == 0.0
+    assert float(sched(10)) == pytest.approx(1.0)
+    assert float(sched(100)) == pytest.approx(0.0, abs=1e-6)
+
+
+# ------------------------------------------------------------- checkpoint ---
+
+def test_checkpoint_roundtrip_and_rotation(tmp_path):
+    d = str(tmp_path / "ckpt")
+    tree = {"params": {"w": np.arange(6, dtype=np.float32).reshape(2, 3)},
+            "step": 7, "name": "x"}
+    for s in (1, 2, 3, 4, 5):
+        checkpoint.save(d, s, tree, keep=3)
+    assert checkpoint.latest_step(d) == 5
+    assert sorted(os.listdir(d)) == ["step_3.msgpack", "step_4.msgpack", "step_5.msgpack"]
+    back = checkpoint.restore(d)
+    np.testing.assert_array_equal(back["params"]["w"], tree["params"]["w"])
+    assert back["step"] == 7 and back["name"] == "x"
+
+
+def test_checkpoint_jax_arrays_and_bf16(tmp_path):
+    d = str(tmp_path / "c2")
+    tree = {"w": jnp.ones((3, 3), jnp.bfloat16), "k": jnp.asarray(2, jnp.int32)}
+    checkpoint.save(d, 0, tree)
+    back = checkpoint.restore(d, 0)
+    assert back["w"].dtype == np.dtype("bfloat16") or str(back["w"].dtype) == "bfloat16"
+    np.testing.assert_array_equal(np.asarray(back["w"], np.float32), np.ones((3, 3)))

@@ -1,0 +1,30 @@
+import numpy as np
+
+from repro.core import flow
+
+
+def test_union_connectivity_simple():
+    # two alternating halves of a 4-ring: each alone disconnected, union is not
+    a = np.zeros((2, 4, 4), bool)
+    a[0, 0, 1] = a[0, 1, 0] = a[0, 2, 3] = a[0, 3, 2] = True
+    a[1, 1, 2] = a[1, 2, 1] = a[1, 3, 0] = a[1, 0, 3] = True
+    assert flow.union_connectivity(a) == 2
+    assert flow.union_connectivity(a[:1]) == -1
+
+
+def test_trigger_bound():
+    v = np.zeros((10, 3), bool)
+    v[0] = True
+    v[4, :] = True
+    v[9, :] = True
+    assert flow.trigger_bound(v) == 5  # longest gap between fires (incl. tail)
+    v2 = np.zeros((5, 2), bool)
+    v2[:, 0] = True  # device 1 never fires
+    assert flow.trigger_bound(v2) == -1
+
+
+def test_predicted_b_formula():
+    # l~ B1 <= B2 <= (l~+1) B1 - 1 ; B = (l~+2) B1
+    assert flow.predicted_b(1, 1) == 3  # l~=1
+    assert flow.predicted_b(2, 3) == 6  # l~=1 (2<=3<=3)
+    assert flow.predicted_b(3, 7) == 12  # l~=2 (6<=7<=8)

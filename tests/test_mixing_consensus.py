@@ -1,0 +1,102 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import consensus, mixing, triggers
+from repro.core.topology import make_process
+from repro.launch.steps import mix_neighbor_permute
+
+
+def _random_graph_comm(m, seed):
+    rng = np.random.default_rng(seed)
+    a = np.triu(rng.random((m, m)) < 0.5, 1)
+    adj = jnp.asarray(a | a.T)
+    v = jnp.asarray(rng.random(m) < 0.6)
+    comm = triggers.communication_matrix(v, adj)
+    return adj, comm
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=st.integers(2, 12), seed=st.integers(0, 10_000))
+def test_transition_matrix_doubly_stochastic(m, seed):
+    adj, comm = _random_graph_comm(m, seed)
+    p = mixing.build_p(adj, comm)
+    mixing.assert_doubly_stochastic(p)
+
+
+def test_metropolis_weights_symmetric_and_bounded():
+    g = make_process(9, "rgg", seed=2)
+    adj = g.adjacency(0)
+    beta = np.asarray(mixing.metropolis_weights(adj))
+    assert (beta == beta.T).all()
+    assert (beta >= 0).all() and (beta <= 0.5 + 1e-6).all()
+    assert not beta.diagonal().any()
+
+
+def test_mixing_preserves_mean_and_contracts():
+    m, n = 8, 5
+    g = make_process(m, "complete", seed=0)
+    adj = g.adjacency(0)
+    comm = triggers.communication_matrix(jnp.ones(m, bool), adj)
+    p = mixing.build_p(adj, comm)
+    w = {"a": jax.random.normal(jax.random.PRNGKey(0), (m, n))}
+    mixed = consensus.mix_dense(p, w)
+    np.testing.assert_allclose(np.asarray(mixed["a"].mean(0)),
+                               np.asarray(w["a"].mean(0)), atol=1e-5)
+    def disp(x):
+        return float(((x - x.mean(0)) ** 2).sum())
+    assert disp(np.asarray(mixed["a"])) < disp(np.asarray(w["a"]))
+
+
+def test_mix_delta_equals_dense():
+    m, n = 6, 7
+    adj, comm = _random_graph_comm(m, 3)
+    p = mixing.build_p(adj, comm)
+    w = {"x": jax.random.normal(jax.random.PRNGKey(1), (m, n))}
+    a = consensus.mix_dense(p, w)["x"]
+    b = consensus.mix_delta_dense(p, w)["x"]
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_repeated_mixing_reaches_consensus():
+    m, n = 8, 3
+    g = make_process(m, "ring", seed=0)
+    adj = g.adjacency(0)
+    comm = triggers.communication_matrix(jnp.ones(m, bool), adj)
+    p = mixing.build_p(adj, comm)
+    w = jax.random.normal(jax.random.PRNGKey(0), (m, n))
+    x = {"w": w}
+    for _ in range(300):
+        x = consensus.mix_dense(p, x)
+    err = float(((x["w"] - x["w"].mean(0)) ** 2).sum())
+    assert err < 1e-6
+
+
+def test_edge_coloring_is_proper_and_covers():
+    g = make_process(10, "rgg", seed=5)
+    adj = np.asarray(g.adjacency(0))
+    rounds = consensus.edge_coloring(adj)
+    seen = set()
+    for matching in rounds:
+        nodes = [u for e in matching for u in e]
+        assert len(nodes) == len(set(nodes)), "matching must be vertex-disjoint"
+        seen.update(frozenset(e) for e in matching)
+    expect = {frozenset((i, j)) for i in range(10) for j in range(i + 1, 10) if adj[i, j]}
+    assert seen == expect
+    assert len(rounds) <= int(adj.sum(1).max()) + 1, "Vizing bound"
+
+
+def test_neighbor_permute_matches_dense():
+    m, n = 8, 11
+    g = make_process(m, "rgg", seed=7)
+    adj = np.asarray(g.adjacency(0))
+    comm = triggers.communication_matrix(
+        jnp.asarray(np.random.default_rng(0).random(m) < 0.7), jnp.asarray(adj))
+    p = mixing.build_p(jnp.asarray(adj), comm)
+    rounds = consensus.edge_coloring(adj)
+    w = {"x": jax.random.normal(jax.random.PRNGKey(2), (m, n))}
+    dense = consensus.mix_dense(p, w)["x"]
+    perm = mix_neighbor_permute(p, w, rounds)["x"]
+    np.testing.assert_allclose(np.asarray(perm), np.asarray(dense), atol=1e-5)

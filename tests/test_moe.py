@@ -1,0 +1,95 @@
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import moe
+from repro.models.common import ArchConfig, MoEConfig
+
+
+def _cfg(impl="dense", **moe_kw):
+    m = dict(n_experts=4, top_k=2, d_expert=16, n_shared=1, capacity_factor=4.0)
+    m.update(moe_kw)
+    return ArchConfig(name="t", family="moe", source="t", n_layers=1, d_model=32,
+                      n_heads=4, n_kv_heads=4, d_ff=0, vocab=11,
+                      layer_plan=((("moe",), 1),), dtype="float32",
+                      moe=MoEConfig(impl=impl, **m))
+
+
+def test_dispatch_matches_dense_with_ample_capacity():
+    cfg_d = _cfg("dense")
+    cfg_s = _cfg("dispatch")
+    key = jax.random.PRNGKey(0)
+    p = moe.init_moe(cfg_d, key, jnp.float32)
+    x = jax.random.normal(key, (2, 8, 32))
+    yd, aux_d = moe.moe_ffn(cfg_d, p, x)
+    ys, aux_s = moe.moe_ffn(cfg_s, p, x)
+    np.testing.assert_allclose(np.asarray(yd), np.asarray(ys), atol=1e-4)
+    np.testing.assert_allclose(float(aux_d), float(aux_s), atol=1e-6)
+
+
+def test_capacity_drops_tokens_gracefully():
+    cfg = _cfg("dispatch", capacity_factor=0.25)
+    key = jax.random.PRNGKey(1)
+    p = moe.init_moe(cfg, key, jnp.float32)
+    x = jax.random.normal(key, (1, 32, 32))
+    y, _ = moe.moe_ffn(cfg, p, x)
+    assert np.isfinite(np.asarray(y)).all()
+
+
+def test_router_probs_normalized_topk():
+    cfg = _cfg()
+    key = jax.random.PRNGKey(2)
+    p = moe.init_moe(cfg, key, jnp.float32)
+    x = jax.random.normal(key, (6, 32))
+    vals, idx, aux = moe.router_probs(cfg.moe, p, x)
+    np.testing.assert_allclose(np.asarray(vals.sum(-1)), 1.0, atol=1e-5)
+    assert idx.shape == (6, 2)
+    assert float(aux) >= 1.0 - 1e-3, "balanced aux loss >= 1 in expectation"
+
+
+def test_aux_loss_detects_imbalance():
+    cfg = _cfg()
+    m = cfg.moe
+    key = jax.random.PRNGKey(3)
+    p = moe.init_moe(cfg, key, jnp.float32)
+    # force router collapse onto expert 0 (positive inputs + positive column)
+    p = dict(p)
+    p["router"] = jnp.zeros_like(p["router"]).at[:, 0].set(10.0)
+    x = jnp.abs(jax.random.normal(key, (64, 32)))
+    _, _, aux = moe.router_probs(m, p, x)
+    assert float(aux) > 2.0, "collapsed routing must inflate the aux loss"
+
+
+def test_shared_expert_always_contributes():
+    cfg = _cfg("dense", n_shared=1)
+    key = jax.random.PRNGKey(4)
+    p = moe.init_moe(cfg, key, jnp.float32)
+    x = jax.random.normal(key, (1, 4, 32))
+    y1, _ = moe.moe_ffn(cfg, p, x)
+    p2 = dict(p)
+    p2["shared_out"] = p["shared_out"] * 0.0
+    y2, _ = moe.moe_ffn(cfg, p2, x)
+    assert np.abs(np.asarray(y1) - np.asarray(y2)).max() > 1e-5
+
+
+def test_scatter_matches_dense_with_ample_capacity():
+    cfg_d = _cfg("dense")
+    cfg_s = _cfg("scatter")
+    key = jax.random.PRNGKey(5)
+    p = moe.init_moe(cfg_d, key, jnp.float32)
+    x = jax.random.normal(key, (2, 16, 32))
+    yd, _ = moe.moe_ffn(cfg_d, p, x)
+    ys, _ = moe.moe_ffn(cfg_s, p, x)
+    np.testing.assert_allclose(np.asarray(yd), np.asarray(ys), atol=1e-4)
+
+
+def test_scatter_capacity_overflow_finite():
+    cfg = _cfg("scatter", capacity_factor=0.25)
+    key = jax.random.PRNGKey(6)
+    p = moe.init_moe(cfg, key, jnp.float32)
+    x = jax.random.normal(key, (1, 64, 32))
+    y, _ = moe.moe_ffn(cfg, p, x)
+    assert np.isfinite(np.asarray(y)).all()

@@ -1,0 +1,85 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import consensus, mixing, triggers
+from repro.core.efhc import _flatten_stack
+from repro.data.partition import by_labels, dirichlet
+from repro.data.synthetic import image_dataset
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=st.integers(2, 10), n=st.integers(1, 30), seed=st.integers(0, 999))
+def test_mixing_preserves_parameter_mean(m, n, seed):
+    """Column stochasticity of P => the average model is invariant under
+    Event 3 (the basis of Eq. 13)."""
+    rng = np.random.default_rng(seed)
+    a = np.triu(rng.random((m, m)) < 0.6, 1)
+    adj = jnp.asarray(a | a.T)
+    v = jnp.asarray(rng.random(m) < 0.5)
+    p = mixing.build_p(adj, triggers.communication_matrix(v, adj))
+    w = {"x": jnp.asarray(rng.normal(size=(m, n)), jnp.float32)}
+    mixed = consensus.mix_dense(p, w)
+    np.testing.assert_allclose(np.asarray(mixed["x"].mean(0)),
+                               np.asarray(w["x"].mean(0)), atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=st.integers(2, 10), seed=st.integers(0, 999))
+def test_mixing_is_contraction_in_disagreement(m, seed):
+    """rho(P - (1/m)11^T) <= 1: Event 3 never increases consensus error."""
+    rng = np.random.default_rng(seed)
+    a = np.triu(rng.random((m, m)) < 0.6, 1)
+    adj = jnp.asarray(a | a.T)
+    v = jnp.asarray(rng.random(m) < 0.8)
+    p = mixing.build_p(adj, triggers.communication_matrix(v, adj))
+    w = jnp.asarray(rng.normal(size=(m, 5)), jnp.float32)
+    before = float(((w - w.mean(0)) ** 2).sum())
+    after_w = consensus.mix_dense(p, {"x": w})["x"]
+    after = float(((after_w - after_w.mean(0)) ** 2).sum())
+    assert after <= before + 1e-5
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=st.integers(2, 20), labels=st.integers(1, 5), seed=st.integers(0, 99))
+def test_partition_no_loss_no_duplication(m, labels, seed):
+    _, y = image_dataset(600, seed=seed)
+    parts = by_labels(y, m, labels, seed=seed)
+    idx = np.concatenate([p for p in parts if len(p)])
+    assert len(np.unique(idx)) == len(idx)
+    for p in parts:
+        if len(p):
+            assert len(np.unique(y[p])) <= labels
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 500), scale=st.floats(0.0, 10.0))
+def test_trigger_threshold_scale_invariance(seed, scale):
+    """Scaling r and the deviation identically leaves events unchanged."""
+    key = jax.random.PRNGKey(seed)
+    m, n = 5, 20
+    w = jax.random.normal(key, (m, n))
+    w_hat = jnp.zeros_like(w)
+    bw = triggers.sample_bandwidths(jax.random.fold_in(key, 1), m)
+    c1 = triggers.TriggerConfig(policy="efhc", r=1.0)
+    c2 = triggers.TriggerConfig(policy="efhc", r=1.0 + scale)
+    v1 = triggers.broadcast_events(c1, w=w * (1.0 + scale), w_hat=w_hat,
+                                   bandwidths=bw, gamma_k=jnp.asarray(1.0 + scale),
+                                   key=key)
+    v2 = triggers.broadcast_events(c2, w=w * (1.0 + scale), w_hat=w_hat,
+                                   bandwidths=bw,
+                                   gamma_k=jnp.asarray(1.0), key=key)
+    assert (np.asarray(v1) >= np.asarray(v2)).all() or \
+        (np.asarray(v1) == np.asarray(v2)).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.integers(1, 6), seed=st.integers(0, 99))
+def test_flatten_stack_shape(m, seed):
+    rng = np.random.default_rng(seed)
+    tree = {"a": jnp.asarray(rng.normal(size=(m, 3, 4)), jnp.float32),
+            "b": jnp.asarray(rng.normal(size=(m, 7)), jnp.float32)}
+    flat = _flatten_stack(tree)
+    assert flat.shape == (m, 19)

@@ -1,0 +1,100 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import ssm
+from repro.models.common import ArchConfig
+
+
+def _cfg(**kw):
+    base = dict(name="t", family="ssm", source="t", n_layers=1, d_model=32,
+                n_heads=4, n_kv_heads=4, d_ff=0, vocab=11, ssm_state=8,
+                ssm_expand=2, mlstm_chunk=4, layer_plan=((("mamba",), 1),),
+                dtype="float32")
+    base.update(kw)
+    return ArchConfig(**base)
+
+
+def test_mamba_seq_matches_decode():
+    cfg = _cfg()
+    key = jax.random.PRNGKey(0)
+    p = ssm.init_mamba(cfg, key, jnp.float32)
+    s = 12
+    x = jax.random.normal(key, (2, s, 32))
+    ref = ssm.mamba_seq(cfg, p, x)
+    cache = ssm.init_mamba_cache(cfg, 2, cfg.ssm_expand * 32, jnp.float32)
+    outs = []
+    for t in range(s):
+        y, cache = ssm.mamba_decode(cfg, p, x[:, t : t + 1], cache)
+        outs.append(y)
+    got = jnp.concatenate(outs, 1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=1e-4)
+
+
+def test_mamba_is_causal():
+    cfg = _cfg()
+    key = jax.random.PRNGKey(1)
+    p = ssm.init_mamba(cfg, key, jnp.float32)
+    x = jax.random.normal(key, (1, 10, 32))
+    x2 = x.at[0, 9].add(50.0)
+    y1 = ssm.mamba_seq(cfg, p, x)
+    y2 = ssm.mamba_seq(cfg, p, x2)
+    np.testing.assert_allclose(np.asarray(y1[0, :9]), np.asarray(y2[0, :9]), atol=1e-4)
+
+
+def test_mlstm_chunk_size_invariance():
+    """Chunkwise-parallel form must not depend on the chunk size."""
+    key = jax.random.PRNGKey(2)
+    x = jax.random.normal(key, (2, 16, 32))
+    outs = []
+    for chunk in (1, 2, 4, 16):
+        cfg = _cfg(mlstm_chunk=chunk)
+        p = ssm.init_mlstm(_cfg(mlstm_chunk=4), key, jnp.float32)
+        outs.append(np.asarray(ssm.mlstm_seq(cfg, p, x)))
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], atol=1e-4)
+
+
+def test_mlstm_seq_matches_decode():
+    cfg = _cfg(mlstm_chunk=4)
+    key = jax.random.PRNGKey(3)
+    p = ssm.init_mlstm(cfg, key, jnp.float32)
+    s = 8
+    x = jax.random.normal(key, (1, s, 32))
+    ref = ssm.mlstm_seq(cfg, p, x)
+    cache = ssm.init_mlstm_cache(cfg, 1, jnp.float32)
+    outs = []
+    for t in range(s):
+        y, cache = ssm.mlstm_decode(cfg, p, x[:, t : t + 1], cache)
+        outs.append(y)
+    got = jnp.concatenate(outs, 1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=1e-4)
+
+
+def test_slstm_seq_matches_decode():
+    cfg = _cfg()
+    key = jax.random.PRNGKey(4)
+    p = ssm.init_slstm(cfg, key, jnp.float32)
+    s = 8
+    x = jax.random.normal(key, (2, s, 32))
+    ref = ssm.slstm_seq(cfg, p, x)
+    st = ssm.init_slstm_cache(cfg, 2, jnp.float32)
+    outs = []
+    for t in range(s):
+        y, st = ssm.slstm_decode(cfg, p, x[:, t : t + 1], st)
+        outs.append(y)
+    got = jnp.concatenate(outs, 1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=1e-4)
+
+
+def test_mlstm_long_range_memory():
+    """Exponential gating should retain information across chunks."""
+    cfg = _cfg(mlstm_chunk=4)
+    key = jax.random.PRNGKey(5)
+    p = ssm.init_mlstm(cfg, key, jnp.float32)
+    x = jax.random.normal(key, (1, 16, 32))
+    x2 = x.at[0, 0].add(10.0)
+    y1 = ssm.mlstm_seq(cfg, p, x)
+    y2 = ssm.mlstm_seq(cfg, p, x2)
+    assert np.abs(np.asarray(y1[0, -1]) - np.asarray(y2[0, -1])).max() > 1e-5

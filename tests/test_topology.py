@@ -1,0 +1,41 @@
+import numpy as np
+import pytest
+
+from repro.core import flow
+from repro.core.topology import (GraphProcess, complete_adjacency, erdos_renyi_adjacency,
+                                 make_process, random_geometric_adjacency, ring_adjacency)
+
+
+@pytest.mark.parametrize("topology", ["rgg", "er", "ring", "complete"])
+def test_base_graphs_connected_symmetric(topology):
+    g = make_process(8, topology, seed=3)
+    a = np.asarray(g.adjacency(0))
+    assert a.shape == (8, 8)
+    assert not a.diagonal().any(), "no self loops"
+    assert (a == a.T).all(), "symmetric"
+    assert flow.union_connectivity(a[None]) == 1, "base graph connected"
+
+
+def test_edge_dropout_is_subgraph_and_varies():
+    g = make_process(10, "complete", time_varying="edge_dropout", drop=0.5, seed=0)
+    base = complete_adjacency(10)
+    a0 = np.asarray(g.adjacency(0))
+    a1 = np.asarray(g.adjacency(1))
+    assert (a0 <= base).all()
+    assert (a0 == a0.T).all()
+    assert (a0 != a1).any(), "time-varying"
+    # deterministic given k
+    assert (np.asarray(g.adjacency(1)) == a1).all()
+
+
+def test_partition_cycle_union_connected():
+    g = make_process(8, "ring", time_varying="partition_cycle", cycle_len=2, seed=0)
+    adjs = np.stack([np.asarray(g.adjacency(k)) for k in range(8)])
+    b1 = flow.union_connectivity(adjs)
+    assert 1 <= b1 <= 2, "union over cycle_len windows must reconnect"
+
+
+def test_degrees_match_adjacency():
+    g = make_process(6, "rgg", seed=1)
+    a = np.asarray(g.adjacency(0))
+    assert (np.asarray(g.degrees(0)) == a.sum(1)).all()

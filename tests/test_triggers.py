@@ -1,0 +1,81 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import triggers
+
+
+def _setup(m=6, n=40, scale=1.0, seed=0):
+    key = jax.random.PRNGKey(seed)
+    w = jax.random.normal(key, (m, n)) * scale
+    w_hat = jnp.zeros((m, n))
+    bw = triggers.sample_bandwidths(jax.random.PRNGKey(1), m)
+    return w, w_hat, bw
+
+
+def test_zero_threshold_always_fires():
+    w, w_hat, bw = _setup()
+    cfg = triggers.TriggerConfig(policy="zero")
+    v = triggers.broadcast_events(cfg, w=w, w_hat=w_hat, bandwidths=bw,
+                                  gamma_k=jnp.asarray(1.0), key=jax.random.PRNGKey(0))
+    assert bool(v.all())
+
+
+def test_gossip_rate_close_to_1_over_m():
+    m = 8
+    w, w_hat, bw = _setup(m=m)
+    cfg = triggers.TriggerConfig(policy="gossip")
+    fires = []
+    for k in range(500):
+        v = triggers.broadcast_events(cfg, w=w, w_hat=w_hat, bandwidths=bw,
+                                      gamma_k=jnp.asarray(1.0), key=jax.random.PRNGKey(k))
+        fires.append(np.asarray(v))
+    rate = np.mean(fires)
+    assert abs(rate - 1.0 / m) < 0.03
+
+
+def test_efhc_monotone_in_deviation():
+    w, w_hat, bw = _setup(scale=0.0)
+    cfg = triggers.TriggerConfig(policy="efhc", r=1.0)
+    v0 = triggers.broadcast_events(cfg, w=w, w_hat=w_hat, bandwidths=bw,
+                                   gamma_k=jnp.asarray(0.1), key=jax.random.PRNGKey(0))
+    assert not bool(v0.any()), "zero deviation never fires (threshold > 0)"
+    w2 = w + 100.0
+    v2 = triggers.broadcast_events(cfg, w=w2, w_hat=w_hat, bandwidths=bw,
+                                   gamma_k=jnp.asarray(0.1), key=jax.random.PRNGKey(0))
+    assert bool(v2.all()), "large deviation always fires"
+
+
+def test_personalized_thresholds_inverse_bandwidth():
+    m = 4
+    bw = jnp.asarray([100.0, 1000.0, 5000.0, 10000.0])
+    cfg = triggers.TriggerConfig(policy="efhc", r=1.0)
+    thr = triggers.thresholds(cfg, bw, jnp.asarray(1.0))
+    assert np.all(np.diff(np.asarray(thr)) < 0), "lower bandwidth => higher threshold"
+    gt = triggers.thresholds(triggers.TriggerConfig(policy="global", r=1.0, b_mean=5000.0),
+                             bw, jnp.asarray(1.0))
+    assert np.allclose(np.asarray(gt), 1.0 / 5000.0)
+
+
+def test_communication_matrix_respects_graph_and_symmetry():
+    m = 5
+    adj = jnp.asarray(np.array([
+        [0, 1, 0, 0, 1],
+        [1, 0, 1, 0, 0],
+        [0, 1, 0, 1, 0],
+        [0, 0, 1, 0, 1],
+        [1, 0, 0, 1, 0]], bool))
+    v = jnp.asarray([True, False, False, False, False])
+    comm = np.asarray(triggers.communication_matrix(v, adj))
+    assert (comm == comm.T).all()
+    assert comm[0, 1] and comm[0, 4], "broadcaster reaches neighbors"
+    assert not comm[2, 3], "silent pair does not communicate"
+    assert not (comm & ~np.asarray(adj)).any(), "no communication outside edges"
+
+
+def test_bandwidth_sampling_range():
+    bw = np.asarray(triggers.sample_bandwidths(jax.random.PRNGKey(0), 1000, 5000.0, 0.9))
+    assert bw.min() >= 0.1 * 5000.0 - 1e-3
+    assert bw.max() <= 1.9 * 5000.0 + 1e-3
+    assert abs(bw.mean() - 5000.0) < 200
