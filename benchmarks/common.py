@@ -16,6 +16,11 @@ from repro.fl.simulator import SimConfig, make_eval_fn
 
 def paper_setup(m=10, iters=200, labels_per_device=1, r=50.0, seed=0,
                 radius=0.4, drop=0.3):
+    """Returns (sim, graph, batches_factory, eval_fn).
+
+    ``batches_factory(seed=...)`` accepts an optional sampling seed so the
+    sweep layer can vmap multi-seed grids; calling it with no argument gives
+    the legacy single-seed sampler."""
     x, y = image_dataset(4000, seed=seed)
     xt, yt = image_dataset(800, seed=seed + 1)
     parts = by_labels(y, m, labels_per_device, seed=seed)
@@ -23,7 +28,11 @@ def paper_setup(m=10, iters=200, labels_per_device=1, r=50.0, seed=0,
                          drop=drop, seed=seed)
     sim = SimConfig(m=m, iters=iters, r=r, seed=seed)
     eval_fn = make_eval_fn(sim, xt, yt)
-    return sim, graph, (lambda: FederatedBatches(x, y, parts, sim.batch, seed=seed + 2)), eval_fn
+
+    def batches_factory(s=seed):
+        return FederatedBatches(x, y, parts, sim.batch, seed=s + 2)
+
+    return sim, graph, batches_factory, eval_fn
 
 
 def run_comparison(iters=200, seed=0, radius=0.4, eval_every=20):

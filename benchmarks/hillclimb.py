@@ -1,18 +1,31 @@
-"""§Perf hillclimbing driver: run one (arch x shape) combo under a named
-variant, derive the roofline terms, and print the before/after diff against
-the stored baseline artifact.
+"""§Perf hillclimbing driver.
 
-Variants are config/step-level switches (the hypothesis knobs):
-  baseline          - as shipped
-  neighbor          - neighbor-permute consensus instead of dense P@W
-  moe_bf16          - bf16 expert-combine accumulation (vs f32)
-  moe_groups=<n>    - override MoE dispatch group target size
-  no_remat          - disable scan remat (memory for FLOPs trade)
-  mix_bf16          - consensus mixing in bf16 (vs f32 tensordot)
+Two modes:
 
-Usage:
-  PYTHONPATH=src python -m benchmarks.hillclimb --arch deepseek-v3-671b \
-      --shape train_4k --variant moe_bf16
+* arch mode (default): run one (arch x shape) combo under a named variant,
+  derive the roofline terms, and print the before/after diff against the
+  stored baseline artifact.  Variants are config/step-level switches:
+
+    baseline          - as shipped
+    neighbor          - neighbor-permute consensus instead of dense P@W
+    moe_bf16          - bf16 expert-combine accumulation (vs f32)
+    moe_groups=<n>    - override MoE dispatch group target size
+    no_remat          - disable scan remat (memory for FLOPs trade)
+    mix_bf16          - consensus mixing in bf16 (vs f32 tensordot)
+
+  Usage:
+    PYTHONPATH=src python -m benchmarks.hillclimb --arch deepseek-v3-671b \
+        --shape train_4k --variant moe_bf16
+
+* FL mode (``--fl-sweep``): hillclimb the EF-HC trigger threshold r on the
+  paper's simulation task.  Each candidate r runs a full seeds x policies
+  grid as ONE compiled program on the scan engine (repro.fl.sweep), and the
+  objective is the seed-averaged accuracy-per-cumulative-transmission-time
+  AUC (the robust Fig. 2-(iii) metric).
+
+  Usage:
+    PYTHONPATH=src python -m benchmarks.hillclimb --fl-sweep \
+        --r-grid 10,25,50,100,200 --seeds 0,1,2 --iters 150
 """
 import argparse
 import json
@@ -20,15 +33,30 @@ import os
 import sys
 
 
-def main() -> int:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--shape", required=True)
-    ap.add_argument("--variant", default="baseline")
-    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
-    ap.add_argument("--out", default="artifacts/hillclimb")
-    args = ap.parse_args()
+def fl_sweep_mode(args) -> int:
+    from benchmarks.common import paper_setup
+    from repro.fl.sweep import policy_auc_table, run_sweep
 
+    seeds = tuple(int(s) for s in args.seeds.split(","))
+    r_grid = [float(r) for r in args.r_grid.split(",")]
+    print("r,auc_efhc_mean,auc_efhc_std,auc_zt_mean,auc_rg_mean,trigger_rate")
+    best = (None, -1.0)
+    for r in r_grid:
+        sim, graph, bf, ef = paper_setup(iters=args.iters, r=r)
+        res = run_sweep(sim, graph, bf, ef, seeds=seeds, eval_every=args.eval_every)
+        auc = policy_auc_table(res)
+        ef_auc = auc["efhc"]
+        p = res.policies.index("efhc")
+        rate = float(res.v[:, p].mean())
+        print(f"{r},{ef_auc.mean():.4f},{ef_auc.std():.4f},"
+              f"{auc['zero'].mean():.4f},{auc['gossip'].mean():.4f},{rate:.3f}")
+        if ef_auc.mean() > best[1]:
+            best = (r, float(ef_auc.mean()))
+    print(f"best_r={best[0]} auc={best[1]:.4f}")
+    return 0
+
+
+def arch_mode(args) -> int:
     os.environ.setdefault("REPRO_VARIANT", args.variant)
     from repro.launch import dryrun
 
@@ -59,6 +87,28 @@ def main() -> int:
             delta = (d[k] / b[k] - 1) * 100 if b[k] else float("nan")
             print(f"  vs baseline {k}: {b[k]:.4e} -> {d[k]:.4e} ({delta:+.1f}%)")
     return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fl-sweep", action="store_true",
+                    help="hillclimb the EF-HC threshold r on the FL sim task")
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--out", default="artifacts/hillclimb")
+    ap.add_argument("--r-grid", default="10,25,50,100,200")
+    ap.add_argument("--seeds", default="0,1,2")
+    ap.add_argument("--iters", type=int, default=150)
+    ap.add_argument("--eval-every", type=int, default=25)
+    args = ap.parse_args()
+
+    if args.fl_sweep:
+        return fl_sweep_mode(args)
+    if not args.arch or not args.shape:
+        ap.error("--arch and --shape are required unless --fl-sweep is given")
+    return arch_mode(args)
 
 
 if __name__ == "__main__":

@@ -1,6 +1,7 @@
 """Faithful reproduction of the paper's Sec. IV FMNIST experiment
 (synthetic stand-in dataset; offline container), comparing EF-HC against
 the three baselines ZT / GT / RG and printing the Fig. 2 panel metrics.
+All four policies run as one compiled policy-vmapped scan program.
 
     PYTHONPATH=src python examples/paper_fmnist.py [--iters 300]
 """

@@ -2,7 +2,9 @@
 
 Ten devices with non-iid data cooperatively train an SVM with NO central
 server: each device broadcasts its model to graph neighbors only when its
-personalized threshold (paper Eq. 3) fires.
+personalized threshold (paper Eq. 3) fires.  The whole run executes as one
+compiled chunked-scan program on device (see examples/policy_seed_sweep.py
+for vmapping it over seeds and trigger policies).
 
     PYTHONPATH=src python examples/quickstart.py
 """

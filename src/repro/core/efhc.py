@@ -65,12 +65,18 @@ def _flatten_stack(w_stack) -> jax.Array:
 
 
 class StepAux(NamedTuple):
+    """Everything the paper's plots need, emitted per iteration so a
+    ``lax.scan`` over ``step`` accumulates full trajectories on device
+    (no per-step host copies - see DESIGN.md "Scan engine")."""
+
     v: jax.Array  # (m,) broadcast events fired
     comm: jax.Array  # (m, m) links used (information-flow edges E'^(k))
     p: jax.Array  # (m, m) transition matrix
     loss: jax.Array  # (m,) per-device minibatch loss
     tx_time: jax.Array  # scalar: avg transmission time this iteration
     util: jax.Array  # scalar: resource utilization score
+    adj: jax.Array  # (m, m) physical adjacency G^(k) (B-connectivity checks)
+    consensus_err: jax.Array  # scalar: ||W - 1 w_bar||_F^2 after the update
 
 
 def step(
@@ -82,11 +88,16 @@ def step(
     batch,
     alpha_k: jax.Array,
     model_dim: int,
+    policy_idx: jax.Array | None = None,
 ) -> tuple[EFHCState, StepAux]:
     """One universal iteration of Alg. 1 across all m devices.
 
     grad_fn(w_i, key, batch_i) -> (loss_i, grad_i) for a single device;
     it is vmapped over the leading device axis here.
+
+    ``policy_idx``: optional traced index into ``triggers.POLICIES``; when
+    given, the trigger policy is dispatched via ``lax.switch`` so the same
+    compiled step serves every policy (vmap-able policy axis).
     """
     m = state.bandwidths.shape[0]
     key, k_trig, k_grad = jax.random.split(state.key, 3)
@@ -100,6 +111,7 @@ def step(
     v = triggers.broadcast_events(
         cfg.trigger, w=w_flat, w_hat=w_hat_flat,
         bandwidths=state.bandwidths, gamma_k=gamma_k, key=k_trig,
+        policy_idx=policy_idx,
     )
 
     # ---- Event 1: neighbor connection ------------------------------------
@@ -134,8 +146,13 @@ def step(
     tx_time = jnp.mean(frac * model_dim / state.bandwidths)
     util = jnp.mean(frac * (1.0 / state.bandwidths) * model_dim)
 
+    # consensus error on the post-update stack (the paper's ||W - 1 w_bar||_F^2)
+    w_new_flat = _flatten_stack(w_new)
+    consensus_err = jnp.sum((w_new_flat - w_new_flat.mean(0)) ** 2)
+
     new_state = EFHCState(
         w=w_new, w_hat=w_hat_new, k=state.k + 1, prev_adj=adj,
         bandwidths=state.bandwidths, key=key, opt_state=state.opt_state,
     )
-    return new_state, StepAux(v=v, comm=comm, p=p, loss=loss, tx_time=tx_time, util=util)
+    return new_state, StepAux(v=v, comm=comm, p=p, loss=loss, tx_time=tx_time,
+                              util=util, adj=adj, consensus_err=consensus_err)

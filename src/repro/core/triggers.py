@@ -14,6 +14,12 @@ Baselines from Sec. IV-B:
 
 All policies are expressed as pure functions of the flattened per-device
 model deltas so they can be jit'd and vmapped over devices.
+
+Dispatch: every policy is an entry in ``POLICY_TABLE`` with a uniform pure
+signature, so a *traced* policy index can select the policy via
+``jax.lax.switch`` (see ``broadcast_events`` with ``policy_idx=...``).  This
+is what lets ``repro.fl.sweep`` batch all four policies into one compiled
+program (DESIGN.md "Policy dispatch table").
 """
 from __future__ import annotations
 
@@ -22,6 +28,16 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+
+# canonical policy order; indices are the lax.switch branch numbers
+POLICIES: tuple[str, ...] = ("efhc", "zero", "global", "gossip")
+POLICY_INDEX: dict[str, int] = {name: i for i, name in enumerate(POLICIES)}
+
+
+def policy_index(policy: str) -> int:
+    if policy not in POLICY_INDEX:
+        raise ValueError(f"unknown trigger policy {policy!r}; known: {POLICIES}")
+    return POLICY_INDEX[policy]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -39,18 +55,50 @@ def rms_deviation(w: jax.Array, w_hat: jax.Array) -> jax.Array:
     return jnp.sqrt(jnp.sum(diff * diff, axis=-1) / n)
 
 
+# rho_i per policy (threshold personalization); uniform pure signature so the
+# table is lax.switch-able
+_RHO_TABLE = {
+    "efhc": lambda cfg, bw: 1.0 / bw,
+    "global": lambda cfg, bw: jnp.full_like(bw, 1.0 / cfg.b_mean),
+    "zero": lambda cfg, bw: jnp.zeros_like(bw),
+    "gossip": lambda cfg, bw: jnp.zeros_like(bw),
+}
+
+
 def thresholds(cfg: TriggerConfig, bandwidths: jax.Array, gamma_k: jax.Array) -> jax.Array:
     """Per-device threshold r * rho_i * gamma^(k); rho_i = 1/b_i (EF-HC) or
     1/b_M (GT). Shape (m,)."""
-    if cfg.policy == "efhc":
-        rho = 1.0 / bandwidths
-    elif cfg.policy == "global":
-        rho = jnp.full_like(bandwidths, 1.0 / cfg.b_mean)
-    elif cfg.policy in ("zero", "gossip"):
-        rho = jnp.zeros_like(bandwidths)
-    else:
+    if cfg.policy not in _RHO_TABLE:
         raise ValueError(f"unknown trigger policy {cfg.policy}")
+    rho = _RHO_TABLE[cfg.policy](cfg, bandwidths)
     return cfg.r * rho * gamma_k
+
+
+def policy_branches(cfg: TriggerConfig):
+    """The four trigger policies as pure functions with one shared signature
+
+        f(w, w_hat, bandwidths, gamma_k, key) -> v (m,) bool
+
+    in ``POLICIES`` order, ready for ``jax.lax.switch``.  Static scalars
+    (r, b_mean, gossip_p) come from ``cfg``; everything else is traced."""
+
+    def _threshold_policy(policy: str):
+        pcfg = dataclasses.replace(cfg, policy=policy)
+
+        def fire(w, w_hat, bandwidths, gamma_k, key):
+            dev = rms_deviation(w, w_hat)
+            return dev > thresholds(pcfg, bandwidths, gamma_k)  # strict: Eq. 7
+
+        return fire
+
+    def zero(w, w_hat, bandwidths, gamma_k, key):
+        return jnp.ones((w.shape[0],), dtype=bool)
+
+    def gossip(w, w_hat, bandwidths, gamma_k, key):
+        p = cfg.gossip_p if cfg.gossip_p is not None else 1.0 / w.shape[0]
+        return jax.random.uniform(key, (w.shape[0],)) < p
+
+    return (_threshold_policy("efhc"), zero, _threshold_policy("global"), gossip)
 
 
 def broadcast_events(
@@ -61,17 +109,18 @@ def broadcast_events(
     bandwidths: jax.Array,  # (m,)
     gamma_k: jax.Array,  # scalar decaying factor
     key: jax.Array,  # PRNG for randomized gossip
+    policy_idx: jax.Array | None = None,  # traced index into POLICIES
 ) -> jax.Array:
-    """v_i^(k) in {0, 1}: whether device i broadcasts at iteration k (Eq. 7)."""
-    m = w.shape[0]
-    if cfg.policy == "zero":
-        return jnp.ones((m,), dtype=bool)
-    if cfg.policy == "gossip":
-        p = cfg.gossip_p if cfg.gossip_p is not None else 1.0 / m
-        return jax.random.uniform(key, (m,)) < p
-    dev = rms_deviation(w, w_hat)
-    thr = thresholds(cfg, bandwidths, gamma_k)
-    return dev > thr  # strict: paper Eq. 7
+    """v_i^(k) in {0, 1}: whether device i broadcasts at iteration k (Eq. 7).
+
+    With ``policy_idx=None`` the policy is ``cfg.policy`` (static dispatch).
+    With a (possibly traced/vmapped) ``policy_idx``, dispatch goes through
+    ``lax.switch`` over ``policy_branches(cfg)`` so one compiled program can
+    serve all policies - the sweep layer's policy axis."""
+    branches = policy_branches(cfg)
+    if policy_idx is None:
+        return branches[policy_index(cfg.policy)](w, w_hat, bandwidths, gamma_k, key)
+    return jax.lax.switch(policy_idx, branches, w, w_hat, bandwidths, gamma_k, key)
 
 
 def communication_matrix(v: jax.Array, adjacency: jax.Array) -> jax.Array:

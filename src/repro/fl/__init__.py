@@ -1,1 +1,1 @@
-from repro.fl import baselines, simulator
+from repro.fl import baselines, simulator, sweep

@@ -1,7 +1,10 @@
 """Baseline runners (paper Sec. IV-B): ZT, GT, RG vs EF-HC.
 
 ``compare`` runs all four policies on identical data/graph/seed and returns
-{policy: SimResult} for the benchmark figures.
+{policy: SimResult} for the benchmark figures.  On the scan engine the
+whole comparison is ONE compiled program: the policy axis is vmapped via
+the ``lax.switch`` dispatch table (see ``repro.fl.sweep``), so adding a
+policy costs a batch lane, not a recompile-and-rerun.
 """
 from __future__ import annotations
 
@@ -10,7 +13,8 @@ from typing import Callable
 
 from repro.core.topology import GraphProcess
 from repro.data.loader import FederatedBatches
-from repro.fl.simulator import SimConfig, SimResult, run
+from repro.fl.simulator import EvalFn, SimConfig, SimResult, run
+from repro.fl.sweep import run_sweep
 
 POLICIES = {
     "EF-HC": "efhc",
@@ -28,9 +32,18 @@ def compare(
     *,
     policies: dict[str, str] | None = None,
     eval_every: int = 10,
+    engine: str = "scan",
 ) -> dict[str, SimResult]:
+    table = policies or POLICIES
+    if engine == "scan" and (eval_fn is None or isinstance(eval_fn, EvalFn)):
+        res = run_sweep(
+            sim, graph, lambda _seed: batches_factory(), eval_fn,
+            seeds=(sim.seed,), policies=tuple(table.values()),
+            eval_every=eval_every)
+        return {name: res.result(sim.seed, pol) for name, pol in table.items()}
     out = {}
-    for name, policy in (policies or POLICIES).items():
+    for name, policy in table.items():
         cfg = dataclasses.replace(sim, policy=policy)
-        out[name] = run(cfg, graph, batches_factory(), eval_fn, eval_every=eval_every)
+        out[name] = run(cfg, graph, batches_factory(), eval_fn,
+                        eval_every=eval_every, engine=engine)
     return out

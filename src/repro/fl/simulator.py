@@ -5,6 +5,18 @@ device axis, collecting the paper's metrics per iteration: per-device loss,
 average accuracy, transmission time, utilization, trigger trace, and the
 information-flow edges for B-connectivity checks.
 
+Two engines produce the same ``SimResult`` (see DESIGN.md "Scan engine"):
+
+* ``engine="scan"`` (default) - device-resident: batches are pre-staged as
+  index arrays (``FederatedBatches.stage``), the T iterations run as a
+  chunked ``jax.lax.scan`` (chunk = ``eval_every``) with evaluation folded
+  into the compiled program, and every T x m metric is accumulated in scan
+  ys.  One host<->device sync per run (the final ``device_get``) instead of
+  ~8 per iteration.  ``make_engine`` exposes the underlying pure function,
+  which ``repro.fl.sweep`` vmaps over seeds and trigger policies.
+* ``engine="python"`` - the legacy per-step host loop, kept as the reference
+  for the scan-parity test and for custom host-side eval callables.
+
 Models: ``svm`` - linear multi-class SVM with multi-margin loss (paper's
 convex model); ``mlp`` - small non-convex classifier standing in for LeNet5
 (Appendix J) without conv dependencies.
@@ -12,6 +24,7 @@ convex model); ``mlp`` - small non-convex classifier standing in for LeNet5
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 from typing import Callable
 
 import jax
@@ -64,6 +77,13 @@ def xent_loss(logits, y):
     return -jnp.take_along_axis(jax.nn.log_softmax(logits, -1), y[..., None], -1).mean()
 
 
+def model_fns(sim: "SimConfig"):
+    """(init_fn, logits_fn, loss_base) for sim.model."""
+    if sim.model == "svm":
+        return init_svm, svm_logits, multi_margin_loss
+    return init_mlp, mlp_logits, xent_loss
+
+
 # ---------------------------------------------------------------------------
 # runner
 # ---------------------------------------------------------------------------
@@ -103,28 +123,36 @@ class SimResult:
         return np.cumsum(self.tx_time)
 
 
-def run(
-    sim: SimConfig,
-    graph: GraphProcess,
-    batches: FederatedBatches,
-    eval_fn: Callable[[np.ndarray], float],
-    *,
-    eval_every: int = 10,
-) -> SimResult:
-    key = jax.random.PRNGKey(sim.seed)
-    k_bw, k_init, k_state = jax.random.split(key, 3)
-    m = sim.m
-    bw = triggers.sample_bandwidths(k_bw, m, sim.b_mean, sim.sigma_n)
+class EvalFn:
+    """Accuracy evaluation with both host and device entry points.
 
-    if sim.model == "svm":
-        init_fn, logits_fn, loss_base = init_svm, svm_logits, multi_margin_loss
-    else:
-        init_fn, logits_fn, loss_base = init_mlp, mlp_logits, xent_loss
+    ``device(w_stack)`` is a pure jittable function (mean test accuracy over
+    devices) that the scan engine folds into its compiled program;
+    ``__call__`` wraps it for the legacy host loop.
+    """
 
-    keys = jax.random.split(k_init, m)
-    w0 = jax.vmap(lambda k: init_fn(k, sim.dim, sim.n_classes))(keys)
-    model_dim = sum(int(np.prod(l.shape[1:])) for l in jax.tree.leaves(w0))
+    def __init__(self, logits_fn, x_test: np.ndarray, y_test: np.ndarray):
+        self._logits_fn = logits_fn
+        self.x_test = jnp.asarray(x_test)
+        self.y_test = jnp.asarray(y_test)
+        self._jit = jax.jit(self.device)
 
+    def device(self, w_stack) -> jax.Array:
+        def one(w):
+            return (self._logits_fn(w, self.x_test).argmax(-1) == self.y_test).mean()
+
+        return jax.vmap(one)(w_stack).mean()
+
+    def __call__(self, w_stack) -> float:
+        return float(self._jit(jax.tree.map(jnp.asarray, w_stack)))
+
+
+def make_eval_fn(sim: SimConfig, x_test: np.ndarray, y_test: np.ndarray) -> EvalFn:
+    logits_fn = svm_logits if sim.model == "svm" else mlp_logits
+    return EvalFn(logits_fn, x_test, y_test)
+
+
+def _grad_fn(logits_fn, loss_base):
     def grad_fn(w, key, batch):
         x, y = batch
 
@@ -134,11 +162,213 @@ def run(
         loss, g = jax.value_and_grad(lo)(w)
         return loss, g
 
-    cfg = efhc.EFHCConfig(
+    return grad_fn
+
+
+def _efhc_cfg(sim: SimConfig) -> efhc.EFHCConfig:
+    return efhc.EFHCConfig(
         trigger=triggers.TriggerConfig(policy=sim.policy, r=sim.r, b_mean=sim.b_mean),
         gamma=None,
         mix_impl=sim.mix_impl,
     )
+
+
+def _model_dim(sim: SimConfig) -> int:
+    init_fn, _, _ = model_fns(sim)
+    shapes = jax.eval_shape(lambda k: init_fn(k, sim.dim, sim.n_classes),
+                            jax.random.PRNGKey(0))
+    return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(shapes))
+
+
+def make_engine(
+    sim: SimConfig,
+    graph: GraphProcess,
+    *,
+    T: int,
+    eval_every: int = 10,
+    x: np.ndarray,
+    y: np.ndarray,
+    eval_fn: EvalFn | None = None,
+):
+    """Builds the device-resident simulation engine: a pure function
+
+        engine(policy_idx, seed, idx) -> dict of full trajectories
+
+    with ``policy_idx`` a (traced) index into ``triggers.POLICIES``, ``seed``
+    a (traced) int, and ``idx`` the (T, m, batch) staged dataset indices from
+    ``FederatedBatches.stage``.  The T iterations run as a chunked
+    ``lax.scan`` (chunk = ``eval_every``); evaluation happens on device at
+    the same iterations the legacy loop evaluates (k = 0 mod eval_every, and
+    k = T-1), so both engines emit identical ``SimResult`` trajectories.
+
+    The function is jit-able and vmap-able over both ``policy_idx`` and
+    ``(seed, idx)`` - ``repro.fl.sweep`` builds the policy x seed grid from
+    exactly this function.
+    """
+    E = max(1, int(eval_every))
+    m = sim.m
+    init_fn, logits_fn, loss_base = model_fns(sim)
+    grad_fn = _grad_fn(logits_fn, loss_base)
+    cfg = _efhc_cfg(sim)
+    sched = paper_diminishing(sim.alpha0, gamma=1.0, theta=0.5)
+    model_dim = _model_dim(sim)
+    x_all, y_all = jnp.asarray(x), jnp.asarray(y)
+    eval_dev = eval_fn.device if isinstance(eval_fn, EvalFn) else eval_fn
+
+    def engine(policy_idx, seed, idx):
+        policy_idx = jnp.asarray(policy_idx, jnp.int32)
+        key = jax.random.PRNGKey(seed)
+        k_bw, k_init, k_state = jax.random.split(key, 3)
+        bw = triggers.sample_bandwidths(k_bw, m, sim.b_mean, sim.sigma_n)
+        keys = jax.random.split(k_init, m)
+        w0 = jax.vmap(lambda k: init_fn(k, sim.dim, sim.n_classes))(keys)
+        state = efhc.init_state(w0, bw, graph.adjacency(0), k_state)
+        alphas = sched(jnp.arange(T))
+
+        def one_step(st, per):
+            ix, alpha = per  # ix: (m, batch) dataset rows for this iteration
+            batch = (x_all[ix], y_all[ix])
+            st, aux = efhc.step(cfg, graph, st, grad_fn=grad_fn, batch=batch,
+                                alpha_k=alpha, model_dim=model_dim,
+                                policy_idx=policy_idx)
+            # drop the (m, m) float P matrix from the ys: SimResult never
+            # carries it and it dominates trajectory memory at large T
+            return st, aux._replace(p=jnp.zeros((), jnp.float32))
+
+        def eval_acc(st):
+            if eval_dev is None:
+                return jnp.asarray(0.0, jnp.float32)
+            return eval_dev(st.w).astype(jnp.float32)
+
+        def chunk_body(st, chunk):
+            # eval after the chunk's first step = iterations 0, E, 2E, ...
+            # (the legacy loop's schedule), then scan the remaining E-1 steps
+            st, aux0 = one_step(st, jax.tree.map(lambda a: a[0], chunk))
+            acc = eval_acc(st)
+            st, auxr = jax.lax.scan(one_step, st, jax.tree.map(lambda a: a[1:], chunk))
+            aux = jax.tree.map(lambda a, b: jnp.concatenate([a[None], b], 0), aux0, auxr)
+            return st, (aux, acc)
+
+        per = (idx, alphas)
+        n_full, rem = divmod(T, E)
+        head = jax.tree.map(
+            lambda a: a[: n_full * E].reshape((n_full, E) + a.shape[1:]), per)
+        state, (aux_h, accs) = jax.lax.scan(chunk_body, state, head)
+        aux = jax.tree.map(lambda a: a.reshape((n_full * E,) + a.shape[2:]), aux_h)
+        acc_t = jnp.repeat(accs, E, total_repeat_length=n_full * E)
+        if rem:
+            tail = jax.tree.map(lambda a: a[n_full * E:], per)
+            state, (aux_r, acc_r) = chunk_body(state, tail)
+            aux = jax.tree.map(lambda a, b: jnp.concatenate([a, b], 0), aux, aux_r)
+            acc_t = jnp.concatenate([acc_t, jnp.full((rem,), acc_r)])
+        acc_t = acc_t.at[T - 1].set(eval_acc(state))  # legacy's k == T-1 eval
+
+        return {
+            "loss": aux.loss, "acc": acc_t, "tx_time": aux.tx_time,
+            "util": aux.util, "v": aux.v, "comm": aux.comm, "adj": aux.adj,
+            "consensus_err": aux.consensus_err, "bandwidths": bw,
+        }
+
+    return engine, model_dim
+
+
+# Compiled-engine cache for run(): the engine is policy- and seed-agnostic
+# (both enter as traced arguments), so sequential runs over policies/seeds -
+# the compare() fallback, parity tests, notebook loops - share ONE compile
+# per (config, graph, data, eval) combination instead of recompiling the
+# full horizon each call.  id()-keyed entries keep their referents alive so
+# a recycled id cannot alias a stale entry; the cache is a small LRU.
+_ENGINE_CACHE: "OrderedDict[tuple, tuple]" = OrderedDict()
+_ENGINE_CACHE_SIZE = 8
+
+
+def _cached_engine(sim: SimConfig, graph: GraphProcess, *, T: int,
+                   eval_every: int, x, y, eval_fn):
+    key = (sim.m, sim.model, sim.n_classes, sim.dim, sim.batch, sim.r,
+           sim.b_mean, sim.sigma_n, sim.alpha0, sim.mix_impl,
+           T, max(1, int(eval_every)), id(graph), id(x), id(y), id(eval_fn))
+    hit = _ENGINE_CACHE.get(key)
+    if hit is None:
+        eng, model_dim = make_engine(sim, graph, T=T, eval_every=eval_every,
+                                     x=x, y=y, eval_fn=eval_fn)
+        hit = (jax.jit(eng), model_dim, (graph, x, y, eval_fn))
+        _ENGINE_CACHE[key] = hit
+        while len(_ENGINE_CACHE) > _ENGINE_CACHE_SIZE:
+            _ENGINE_CACHE.popitem(last=False)
+    else:
+        _ENGINE_CACHE.move_to_end(key)
+    return hit[0], hit[1]
+
+
+def _result_from_device(out: dict, model_dim: int) -> SimResult:
+    host = jax.device_get(out)  # the run's single host<->device sync
+    return SimResult(
+        loss=np.asarray(host["loss"], np.float32),
+        acc=np.asarray(host["acc"], np.float32),
+        tx_time=np.asarray(host["tx_time"], np.float32),
+        util=np.asarray(host["util"], np.float32),
+        v=np.asarray(host["v"], bool),
+        comm=np.asarray(host["comm"], bool),
+        adj=np.asarray(host["adj"], bool),
+        consensus_err=np.asarray(host["consensus_err"], np.float32),
+        model_dim=model_dim,
+        bandwidths=np.asarray(host["bandwidths"], np.float32),
+    )
+
+
+def run(
+    sim: SimConfig,
+    graph: GraphProcess,
+    batches: FederatedBatches,
+    eval_fn: Callable[[np.ndarray], float] | EvalFn | None = None,
+    *,
+    eval_every: int = 10,
+    engine: str = "scan",
+) -> SimResult:
+    """Simulates ``sim.iters`` universal iterations; returns ``SimResult``.
+
+    ``engine="scan"`` stages the batch indices up front and runs the whole
+    horizon as one compiled chunked-scan program (device-resident metrics,
+    on-device eval).  ``engine="python"`` is the legacy per-step loop; it is
+    also used automatically when ``eval_fn`` is a plain host callable that
+    the compiled program cannot invoke.
+    """
+    if engine == "scan" and (eval_fn is None or isinstance(eval_fn, EvalFn)):
+        eng, model_dim = _cached_engine(
+            sim, graph, T=sim.iters, eval_every=eval_every,
+            x=batches.x, y=batches.y, eval_fn=eval_fn)
+        idx = batches.stage(sim.iters)
+        out = eng(triggers.policy_index(sim.policy),
+                  jnp.asarray(sim.seed, jnp.int32), jnp.asarray(idx))
+        return _result_from_device(out, model_dim)
+    return _run_python(sim, graph, batches, eval_fn, eval_every=eval_every)
+
+
+def _run_python(
+    sim: SimConfig,
+    graph: GraphProcess,
+    batches: FederatedBatches,
+    eval_fn,
+    *,
+    eval_every: int = 10,
+) -> SimResult:
+    """Reference engine: per-step host loop with per-iteration host copies.
+
+    Kept for the scan-parity test and for custom host-side eval callables;
+    new code should prefer ``engine="scan"``."""
+    key = jax.random.PRNGKey(sim.seed)
+    k_bw, k_init, k_state = jax.random.split(key, 3)
+    m = sim.m
+    bw = triggers.sample_bandwidths(k_bw, m, sim.b_mean, sim.sigma_n)
+
+    init_fn, logits_fn, loss_base = model_fns(sim)
+    grad_fn = _grad_fn(logits_fn, loss_base)
+
+    keys = jax.random.split(k_init, m)
+    w0 = jax.vmap(lambda k: init_fn(k, sim.dim, sim.n_classes))(keys)
+    model_dim = sum(int(np.prod(l.shape[1:])) for l in jax.tree.leaves(w0))
+
+    cfg = _efhc_cfg(sim)
     sched = paper_diminishing(sim.alpha0, gamma=1.0, theta=0.5)
     state = efhc.init_state(w0, bw, graph.adjacency(0), k_state)
 
@@ -161,16 +391,15 @@ def run(
     last_acc = 0.0
     for k in range(T):
         xb, yb = batches.next()
-        adj_t[k] = np.asarray(graph.adjacency(k))
         state, aux = step_jit(state, (jnp.asarray(xb), jnp.asarray(yb)), sched(k))
         loss_t[k] = np.asarray(aux.loss)
         tx_t[k] = float(aux.tx_time)
         util_t[k] = float(aux.util)
         v_t[k] = np.asarray(aux.v)
         comm_t[k] = np.asarray(aux.comm)
-        flat = efhc._flatten_stack(state.w)
-        cons_t[k] = float(((flat - flat.mean(0)) ** 2).sum())
-        if k % eval_every == 0 or k == T - 1:
+        adj_t[k] = np.asarray(aux.adj)
+        cons_t[k] = float(aux.consensus_err)
+        if eval_fn is not None and (k % eval_every == 0 or k == T - 1):
             last_acc = eval_fn(jax.device_get(state.w))
         acc_t[k] = last_acc
 
@@ -179,20 +408,3 @@ def run(
         comm=comm_t, adj=adj_t, consensus_err=cons_t, model_dim=model_dim,
         bandwidths=np.asarray(bw),
     )
-
-
-def make_eval_fn(sim: SimConfig, x_test: np.ndarray, y_test: np.ndarray):
-    logits_fn = svm_logits if sim.model == "svm" else mlp_logits
-    xt, yt = jnp.asarray(x_test), jnp.asarray(y_test)
-
-    @jax.jit
-    def batch_acc(w_stack):
-        def one(w):
-            return (logits_fn(w, xt).argmax(-1) == yt).mean()
-
-        return jax.vmap(one)(w_stack).mean()
-
-    def eval_fn(w_stack) -> float:
-        return float(batch_acc(jax.tree.map(jnp.asarray, w_stack)))
-
-    return eval_fn

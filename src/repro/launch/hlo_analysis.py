@@ -160,7 +160,9 @@ def parse(text: str) -> dict[str, _Comp]:
         cur.bytes += float(operand_bytes + out_bytes)
         if op == "dot":
             # k = product of lhs contracting dims
-            lhs_ref = re.match(r"\s*%?([\w.\-]+)", args)
+            # operands may carry inline types ("f32[64,64]{1,0} %ref"): take
+            # the first %-prefixed name, not the leading token
+            lhs_ref = re.search(r"%([\w.\-]+)", args)
             k = 1
             cd = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
             if lhs_ref and cd and cd.group(1):

@@ -10,7 +10,10 @@ import jax
 
 
 def _mk(shape, axes):
-    from jax.sharding import AxisType
+    try:  # jax >= 0.5
+        from jax.sharding import AxisType
+    except ImportError:  # older jax: meshes are Auto-typed by default
+        return jax.make_mesh(shape, axes)
 
     return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
 

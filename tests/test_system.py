@@ -1,6 +1,8 @@
 """End-to-end behaviour: the paper's Sec. IV claims, qualitatively, on the
-synthetic FMNIST-like task (offline container).  One shared comparison run
-(module-scoped) keeps the suite fast."""
+synthetic FMNIST-like task (offline container).  One shared seeds x policies
+sweep - a single compiled vmapped program on the scan engine - feeds every
+test: single-seed tests read the seed-0 slice, the robustness test averages
+across seeds."""
 import numpy as np
 import pytest
 
@@ -9,24 +11,33 @@ from repro.core.topology import make_process
 from repro.data.loader import FederatedBatches
 from repro.data.partition import by_labels
 from repro.data.synthetic import image_dataset
-from repro.fl.baselines import compare
+from repro.fl.baselines import POLICIES
 from repro.fl.simulator import SimConfig, make_eval_fn
+from repro.fl.sweep import policy_auc_table, run_sweep
 
 M_DEV = 10
 ITERS = 200
+SEEDS = (0, 1, 2)
 
 
 @pytest.fixture(scope="module")
-def results():
+def sweep_res():
     x, y = image_dataset(4000, seed=0)
     xt, yt = image_dataset(800, seed=1)
     parts = by_labels(y, M_DEV, 1)  # paper FMNIST: 1 label/device
     graph = make_process(M_DEV, "rgg", time_varying="edge_dropout", drop=0.3, seed=0)
     sim = SimConfig(m=M_DEV, iters=ITERS, r=50.0, seed=0)
     eval_fn = make_eval_fn(sim, xt, yt)
-    return compare(sim, graph,
-                   lambda: FederatedBatches(x, y, parts, sim.batch, seed=2),
-                   eval_fn, eval_every=25)
+    return run_sweep(
+        sim, graph,
+        lambda s: FederatedBatches(x, y, parts, sim.batch, seed=2 + s),
+        eval_fn, seeds=SEEDS, eval_every=10)
+
+
+@pytest.fixture(scope="module")
+def results(sweep_res):
+    """Seed-0 slice as the legacy {name: SimResult} comparison dict."""
+    return {name: sweep_res.result(0, pol) for name, pol in POLICIES.items()}
 
 
 def test_all_policies_learn(results):
@@ -44,15 +55,19 @@ def test_efhc_saves_communication_vs_zt(results):
     assert zt.v.mean() == 1.0
 
 
-def test_efhc_beats_rg_accuracy_per_budget(results):
-    """Paper Fig. 2-(iii): accuracy per transmission time."""
-    ef, rg = results["EF-HC"], results["RG"]
-    budget = min(ef.cum_tx_time[-1], rg.cum_tx_time[-1]) * 0.9
-    def acc_at(res, b):
-        k = int(np.searchsorted(res.cum_tx_time, b))
-        return res.acc[min(k, len(res.acc) - 1)]
-    assert acc_at(ef, budget) > acc_at(rg, budget), \
-        "EF-HC must dominate RG at the shared transmission budget"
+def test_efhc_beats_rg_accuracy_per_budget(sweep_res):
+    """Paper Fig. 2-(iii): accuracy per transmission time.
+
+    Robust form: instead of comparing accuracies at a single shared budget
+    point on one seed (flaky - one eval step can flip it), integrate the
+    accuracy-vs-cumulative-tx-time curve up to the shared budget (AUC) and
+    average across seeds."""
+    auc = policy_auc_table(sweep_res)
+    ef, rg = auc["efhc"], auc["gossip"]
+    assert ef.mean() > rg.mean(), \
+        f"EF-HC must dominate RG on seed-averaged acc-per-tx AUC: {ef} vs {rg}"
+    assert (ef > rg).sum() >= 2, \
+        f"EF-HC must win on most seeds: {ef} vs {rg}"
 
 
 def test_consensus_error_decreases(results):
