@@ -1,0 +1,132 @@
+"""Fleet-scaling benchmark: iters/sec and trajectory memory vs fleet size.
+
+Measures the scan engine across m (devices) and trace modes, writing
+``BENCH_fleet.json``:
+
+* ``iters_per_sec``  - steady-state compiled throughput (compile excluded
+  via a warm-up call);
+* ``traj_bytes``     - exact bytes of the engine's output trajectories per
+  trace mode, from ``jax.eval_shape`` (no allocation), i.e. the scan-ys
+  memory that capped fleets at m ~ 64 when ``full`` was the only layout.
+
+Default grid walks the trace ladder the sizes require: dense traces at
+m=16, bit-packed at m=64/256, count-summaries at m=1024.  The checked-in
+``BENCH_fleet.json`` is a pinned CPU-container reference; CI regenerates
+and uploads a fresh one per run (smoke grid).
+
+    PYTHONPATH=src python benchmarks/fleet_scale.py [--smoke] [--out BENCH_fleet.json]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import triggers
+from repro.core.topology import make_process
+from repro.data.loader import FederatedBatches
+from repro.data.synthetic import image_dataset
+from repro.fl import simulator
+from repro.fl.trace import TRACE_MODES, link_bytes_per_iter
+
+# (m, trace mode actually timed); every entry also reports analytic bytes
+# for all three modes
+DEFAULT_GRID: tuple[tuple[int, str], ...] = (
+    (16, "full"), (64, "packed"), (256, "packed"), (1024, "summary"))
+
+
+def _setup(m: int, iters: int, dim: int, seed: int = 0):
+    x, y = image_dataset(4000, seed=seed, dim=dim)
+    rng = np.random.default_rng(seed)
+    # iid split: partition skew is irrelevant to throughput/memory and an
+    # even split keeps every device non-empty at any m
+    parts = [np.sort(p) for p in np.array_split(rng.permutation(len(y)), m)]
+    radius = 0.4 if m <= 64 else 0.15
+    graph = make_process(m, "rgg", radius=radius, time_varying="edge_dropout",
+                         drop=0.3, seed=seed)
+    sim = simulator.SimConfig(m=m, iters=iters, dim=dim, r=50.0, seed=seed)
+    batches = FederatedBatches(x, y, parts, sim.batch, seed=seed + 2)
+    return sim, graph, batches, x, y
+
+
+def _traj_bytes(sim, graph, x, y, idx, iters: int) -> int:
+    """Exact output-trajectory bytes for sim's trace mode, shape-only."""
+    engine, _ = simulator.make_engine(sim, graph, T=iters, eval_every=iters,
+                                      x=x, y=y, eval_fn=None)
+    shapes = jax.eval_shape(engine, jnp.asarray(0, jnp.int32),
+                            jnp.asarray(0, jnp.int32),
+                            jax.ShapeDtypeStruct(idx.shape, jnp.int32))
+    return sum(int(np.prod(l.shape)) * l.dtype.itemsize
+               for l in jax.tree.leaves(shapes))
+
+
+def bench_fleet(m: int, trace: str, *, iters: int, dim: int) -> dict:
+    sim, graph, batches, x, y = _setup(m, iters, dim)
+    idx = jnp.asarray(batches.stage(iters))
+
+    traj = {mode: _traj_bytes(dataclasses.replace(sim, trace=mode),
+                              graph, x, y, idx, iters)
+            for mode in TRACE_MODES}
+
+    sim = dataclasses.replace(sim, trace=trace)
+    engine, model_dim = simulator.make_engine(sim, graph, T=iters,
+                                              eval_every=iters,
+                                              x=x, y=y, eval_fn=None)
+    eng = jax.jit(engine)
+    pol = triggers.policy_index("efhc")
+    seed = jnp.asarray(0, jnp.int32)
+    jax.block_until_ready(eng(pol, seed, idx))  # compile + warm up
+    t0 = time.perf_counter()
+    jax.block_until_ready(eng(pol, seed, idx))
+    wall = time.perf_counter() - t0
+
+    return {
+        "m": m, "trace": trace, "iters": iters, "model_dim": model_dim,
+        "sec_per_iter": wall / iters, "iters_per_sec": iters / wall,
+        "traj_bytes": traj,
+        "link_bytes_per_iter": {mode: link_bytes_per_iter(m, mode)
+                                for mode in TRACE_MODES},
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: single m=128 packed-trace entry")
+    ap.add_argument("--iters", type=int, default=12)
+    ap.add_argument("--dim", type=int, default=32)
+    ap.add_argument("--sizes", type=str, default=None,
+                    help="comma list m:trace, e.g. 16:full,1024:summary")
+    ap.add_argument("--out", default="BENCH_fleet.json")
+    args = ap.parse_args()
+
+    if args.smoke:
+        grid = ((128, "packed"),)
+    elif args.sizes:
+        grid = tuple((int(s.split(":")[0]), s.split(":")[1])
+                     for s in args.sizes.split(","))
+    else:
+        grid = DEFAULT_GRID
+
+    entries = []
+    for m, trace in grid:
+        e = bench_fleet(m, trace, iters=args.iters, dim=args.dim)
+        entries.append(e)
+        print(f"m={m:5d} trace={trace:8s} {e['iters_per_sec']:8.2f} iters/s  "
+              f"traj {e['traj_bytes'][trace] / 1e6:8.2f} MB "
+              f"(full would be {e['traj_bytes']['full'] / 1e6:.2f} MB)")
+
+    doc = {"benchmark": "fleet_scale", "backend": jax.default_backend(),
+           "dim": args.dim, "entries": entries}
+    with open(args.out, "w") as f:
+        json.dump(doc, f, indent=2)
+    print(f"wrote {args.out} ({len(entries)} entries)")
+
+
+if __name__ == "__main__":
+    main()

@@ -25,6 +25,8 @@ import jax.numpy as jnp
 
 from repro.core import consensus, mixing, triggers
 from repro.core.topology import GraphProcess
+from repro.kernels.mixing import ops as mixing_ops
+from repro.kernels.trigger import ops as trigger_ops
 
 
 class EFHCState(NamedTuple):
@@ -37,12 +39,25 @@ class EFHCState(NamedTuple):
     opt_state: Any = None
 
 
+MIX_IMPLS: tuple[str, ...] = ("dense", "delta", "pallas")
+
+
 @dataclasses.dataclass(frozen=True)
 class EFHCConfig:
     trigger: triggers.TriggerConfig = dataclasses.field(default_factory=triggers.TriggerConfig)
     # gamma^(k): decaying factor; paper Sec. IV-A sets gamma^(k) = alpha^(k)
     gamma: Callable[[jax.Array], jax.Array] = None  # type: ignore[assignment]
-    mix_impl: str = "dense"  # dense | delta
+    # "pallas" routes Event-3 aggregation through the fused mixing kernel and
+    # the Event-2 deviation through the fused trigger kernel (DESIGN.md
+    # "Pallas hot path"); "dense"/"delta" are the pure-jnp references.
+    mix_impl: str = "dense"  # dense | delta | pallas
+    # Pallas interpret mode: None = auto (interpret off only on TPU)
+    interpret: bool | None = None
+
+    def pallas_interpret(self) -> bool:
+        if self.interpret is not None:
+            return bool(self.interpret)
+        return jax.default_backend() != "tpu"
 
 
 def init_state(w_stack, bandwidths: jax.Array, adjacency0: jax.Array, key: jax.Array, opt_state=None) -> EFHCState:
@@ -99,6 +114,8 @@ def step(
     given, the trigger policy is dispatched via ``lax.switch`` so the same
     compiled step serves every policy (vmap-able policy axis).
     """
+    if cfg.mix_impl not in MIX_IMPLS:
+        raise ValueError(f"unknown mix_impl {cfg.mix_impl!r}; known: {MIX_IMPLS}")
     m = state.bandwidths.shape[0]
     key, k_trig, k_grad = jax.random.split(state.key, 3)
 
@@ -108,8 +125,17 @@ def step(
     w_flat = _flatten_stack(state.w)
     w_hat_flat = _flatten_stack(state.w_hat)
     gamma_k = cfg.gamma(state.k) if cfg.gamma is not None else alpha_k
+    if cfg.mix_impl == "pallas":
+        # fused deviation kernel: streams (w, w_hat) tiles through VMEM
+        # without materializing the delta in HBM
+        n_model = w_flat.shape[1]
+        sq = trigger_ops.trigger_sq(w_flat, w_hat_flat,
+                                    interpret=cfg.pallas_interpret())
+        dev = jnp.sqrt(sq / n_model)
+    else:
+        dev = triggers.rms_deviation(w_flat, w_hat_flat)
     v = triggers.broadcast_events(
-        cfg.trigger, w=w_flat, w_hat=w_hat_flat,
+        cfg.trigger, dev=dev,
         bandwidths=state.bandwidths, gamma_k=gamma_k, key=k_trig,
         policy_idx=policy_idx,
     )
@@ -121,7 +147,9 @@ def step(
     # ---- Event 3: aggregation over the information-flow edges ------------
     comm = jnp.logical_or(triggers.communication_matrix(v, adj), new_links)
     p = mixing.build_p(adj, comm)
-    if cfg.mix_impl == "delta":
+    if cfg.mix_impl == "pallas":
+        w_mixed = mixing_ops.mix_tree(p, state.w, interpret=cfg.pallas_interpret())
+    elif cfg.mix_impl == "delta":
         w_mixed = consensus.mix_delta_dense(p, state.w)
     else:
         w_mixed = consensus.mix_dense(p, state.w)
@@ -144,7 +172,13 @@ def step(
     used = comm.sum(axis=1).astype(jnp.float32)
     frac = jnp.where(deg > 0, used / jnp.maximum(deg, 1.0), 0.0)
     tx_time = jnp.mean(frac * model_dim / state.bandwidths)
-    util = jnp.mean(frac * (1.0 / state.bandwidths) * model_dim)
+    # resource utilization (Sec. IV-A): fraction of the network's aggregate
+    # one-hop link capacity consumed this iteration -- bits pushed over the
+    # activated links vs. the capacity of every physical link.  A ratio of
+    # sums, NOT the mean of per-device ratios (that would collapse back into
+    # tx_time): heterogeneous bandwidths weight the two differently.
+    capacity = jnp.sum(deg * state.bandwidths)
+    util = jnp.sum(used * model_dim) / jnp.maximum(capacity, 1e-12)
 
     # consensus error on the post-update stack (the paper's ||W - 1 w_bar||_F^2)
     w_new_flat = _flatten_stack(w_new)

@@ -77,26 +77,30 @@ def thresholds(cfg: TriggerConfig, bandwidths: jax.Array, gamma_k: jax.Array) ->
 def policy_branches(cfg: TriggerConfig):
     """The four trigger policies as pure functions with one shared signature
 
-        f(w, w_hat, bandwidths, gamma_k, key) -> v (m,) bool
+        f(dev, bandwidths, gamma_k, key) -> v (m,) bool
 
-    in ``POLICIES`` order, ready for ``jax.lax.switch``.  Static scalars
-    (r, b_mean, gossip_p) come from ``cfg``; everything else is traced."""
+    in ``POLICIES`` order, ready for ``jax.lax.switch``.  ``dev`` is the
+    precomputed rms deviation (m,) -- hoisted out of the branches so it is
+    evaluated once per step regardless of dispatch (under vmap the switch
+    computes *all* branches) and so the Pallas trigger kernel can supply it
+    (``efhc.step`` with ``mix_impl="pallas"``).  Static scalars (r, b_mean,
+    gossip_p) come from ``cfg``; everything else is traced."""
 
     def _threshold_policy(policy: str):
         pcfg = dataclasses.replace(cfg, policy=policy)
 
-        def fire(w, w_hat, bandwidths, gamma_k, key):
-            dev = rms_deviation(w, w_hat)
+        def fire(dev, bandwidths, gamma_k, key):
             return dev > thresholds(pcfg, bandwidths, gamma_k)  # strict: Eq. 7
 
         return fire
 
-    def zero(w, w_hat, bandwidths, gamma_k, key):
-        return jnp.ones((w.shape[0],), dtype=bool)
+    def zero(dev, bandwidths, gamma_k, key):
+        return jnp.ones(bandwidths.shape, dtype=bool)
 
-    def gossip(w, w_hat, bandwidths, gamma_k, key):
-        p = cfg.gossip_p if cfg.gossip_p is not None else 1.0 / w.shape[0]
-        return jax.random.uniform(key, (w.shape[0],)) < p
+    def gossip(dev, bandwidths, gamma_k, key):
+        m = bandwidths.shape[0]
+        p = cfg.gossip_p if cfg.gossip_p is not None else 1.0 / m
+        return jax.random.uniform(key, (m,)) < p
 
     return (_threshold_policy("efhc"), zero, _threshold_policy("global"), gossip)
 
@@ -104,23 +108,31 @@ def policy_branches(cfg: TriggerConfig):
 def broadcast_events(
     cfg: TriggerConfig,
     *,
-    w: jax.Array,  # (m, n) instantaneous models (flat)
-    w_hat: jax.Array,  # (m, n) last-broadcast models
+    w: jax.Array | None = None,  # (m, n) instantaneous models (flat)
+    w_hat: jax.Array | None = None,  # (m, n) last-broadcast models
     bandwidths: jax.Array,  # (m,)
     gamma_k: jax.Array,  # scalar decaying factor
     key: jax.Array,  # PRNG for randomized gossip
     policy_idx: jax.Array | None = None,  # traced index into POLICIES
+    dev: jax.Array | None = None,  # (m,) precomputed rms deviation
 ) -> jax.Array:
     """v_i^(k) in {0, 1}: whether device i broadcasts at iteration k (Eq. 7).
 
     With ``policy_idx=None`` the policy is ``cfg.policy`` (static dispatch).
     With a (possibly traced/vmapped) ``policy_idx``, dispatch goes through
     ``lax.switch`` over ``policy_branches(cfg)`` so one compiled program can
-    serve all policies - the sweep layer's policy axis."""
+    serve all policies - the sweep layer's policy axis.
+
+    ``dev`` lets the caller supply the rms deviation from a fused kernel
+    (``repro.kernels.trigger``); otherwise it is computed from (w, w_hat)."""
+    if dev is None:
+        if w is None or w_hat is None:
+            raise ValueError("broadcast_events needs either dev or (w, w_hat)")
+        dev = rms_deviation(w, w_hat)
     branches = policy_branches(cfg)
     if policy_idx is None:
-        return branches[policy_index(cfg.policy)](w, w_hat, bandwidths, gamma_k, key)
-    return jax.lax.switch(policy_idx, branches, w, w_hat, bandwidths, gamma_k, key)
+        return branches[policy_index(cfg.policy)](dev, bandwidths, gamma_k, key)
+    return jax.lax.switch(policy_idx, branches, dev, bandwidths, gamma_k, key)
 
 
 def communication_matrix(v: jax.Array, adjacency: jax.Array) -> jax.Array:

@@ -34,6 +34,7 @@ import numpy as np
 from repro.core import efhc, triggers
 from repro.core.topology import GraphProcess
 from repro.data.loader import FederatedBatches
+from repro.fl import trace as trace_mod
 from repro.optim.schedules import paper_diminishing
 
 
@@ -102,21 +103,50 @@ class SimConfig:
     sigma_n: float = 0.9
     alpha0: float = 0.1
     seed: int = 0
-    mix_impl: str = "dense"
+    mix_impl: str = "dense"  # dense | delta | pallas (fused kernels)
+    # link-matrix trajectory storage: "full" (T, m, m) bool, "packed"
+    # bit-packed uint32 words (8x smaller, lossless), "summary" per-device
+    # counts only (O(T m); required for m >~ 512 horizons) -- DESIGN.md
+    # "Trace modes"
+    trace: str = "full"
 
 
 @dataclasses.dataclass
 class SimResult:
+    """Host-side trajectory contract (stable across engines and trace modes).
+
+    The link matrices ``comm``/``adj`` are *accessors*: storage follows
+    ``trace`` -- dense bool (``full``), bit-packed uint32 (``packed``,
+    unpacked losslessly on access), or absent (``summary``, access raises).
+    The per-device row sums ``comm_count``/``deg`` are recorded in every
+    mode and are what the tx-time / utilization / B-connectivity-count
+    metrics consume."""
+
     loss: np.ndarray  # (T, m)
     acc: np.ndarray  # (T,)
     tx_time: np.ndarray  # (T,)
     util: np.ndarray  # (T,)
     v: np.ndarray  # (T, m)
-    comm: np.ndarray  # (T, m, m)
-    adj: np.ndarray  # (T, m, m)
+    comm_count: np.ndarray  # (T, m) int32: info-flow links used per device
+    deg: np.ndarray  # (T, m) int32: physical degree per device
     consensus_err: np.ndarray  # (T,)
     model_dim: int
     bandwidths: np.ndarray
+    trace: str = "full"
+    _comm: np.ndarray | None = None  # (T,m,m) bool | (T,m,W) uint32 | None
+    _adj: np.ndarray | None = None
+
+    @property
+    def m(self) -> int:
+        return int(self.bandwidths.shape[-1])
+
+    @property
+    def comm(self) -> np.ndarray:  # (T, m, m) bool
+        return trace_mod.stored_links(self._comm, self.trace, self.m, "comm")
+
+    @property
+    def adj(self) -> np.ndarray:  # (T, m, m) bool
+        return trace_mod.stored_links(self._adj, self.trace, self.m, "adj")
 
     @property
     def cum_tx_time(self) -> np.ndarray:
@@ -207,6 +237,7 @@ def make_engine(
     """
     E = max(1, int(eval_every))
     m = sim.m
+    trace = trace_mod.check_trace_mode(sim.trace)
     init_fn, logits_fn, loss_base = model_fns(sim)
     grad_fn = _grad_fn(logits_fn, loss_base)
     cfg = _efhc_cfg(sim)
@@ -225,15 +256,29 @@ def make_engine(
         state = efhc.init_state(w0, bw, graph.adjacency(0), k_state)
         alphas = sched(jnp.arange(T))
 
+        def trace_ys(aux: efhc.StepAux) -> dict:
+            """Per-iteration scan ys: the (m, m) float P matrix is never
+            carried (SimResult doesn't expose it) and the bool link matrices
+            are stored per ``sim.trace`` -- dense, bit-packed uint32 words,
+            or row-sum summaries only (DESIGN.md "Trace modes")."""
+            ys = {"loss": aux.loss, "tx_time": aux.tx_time, "util": aux.util,
+                  "v": aux.v, "consensus_err": aux.consensus_err,
+                  "comm_count": aux.comm.sum(-1).astype(jnp.int32),
+                  "deg": aux.adj.sum(-1).astype(jnp.int32)}
+            if trace == "full":
+                ys["comm"], ys["adj"] = aux.comm, aux.adj
+            elif trace == "packed":
+                ys["comm"] = trace_mod.pack_links(aux.comm)
+                ys["adj"] = trace_mod.pack_links(aux.adj)
+            return ys
+
         def one_step(st, per):
             ix, alpha = per  # ix: (m, batch) dataset rows for this iteration
             batch = (x_all[ix], y_all[ix])
             st, aux = efhc.step(cfg, graph, st, grad_fn=grad_fn, batch=batch,
                                 alpha_k=alpha, model_dim=model_dim,
                                 policy_idx=policy_idx)
-            # drop the (m, m) float P matrix from the ys: SimResult never
-            # carries it and it dominates trajectory memory at large T
-            return st, aux._replace(p=jnp.zeros((), jnp.float32))
+            return st, trace_ys(aux)
 
         def eval_acc(st):
             if eval_dev is None:
@@ -263,11 +308,7 @@ def make_engine(
             acc_t = jnp.concatenate([acc_t, jnp.full((rem,), acc_r)])
         acc_t = acc_t.at[T - 1].set(eval_acc(state))  # legacy's k == T-1 eval
 
-        return {
-            "loss": aux.loss, "acc": acc_t, "tx_time": aux.tx_time,
-            "util": aux.util, "v": aux.v, "comm": aux.comm, "adj": aux.adj,
-            "consensus_err": aux.consensus_err, "bandwidths": bw,
-        }
+        return {**aux, "acc": acc_t, "bandwidths": bw}
 
     return engine, model_dim
 
@@ -276,17 +317,28 @@ def make_engine(
 # (both enter as traced arguments), so sequential runs over policies/seeds -
 # the compare() fallback, parity tests, notebook loops - share ONE compile
 # per (config, graph, data, eval) combination instead of recompiling the
-# full horizon each call.  id()-keyed entries keep their referents alive so
-# a recycled id cannot alias a stale entry; the cache is a small LRU.
+# full horizon each call.  The graph enters the key BY VALUE (dataclass
+# fields + base-adjacency bytes): two structurally identical GraphProcess
+# instances must share a compile.  Data/eval stay id()-keyed; those entries
+# keep their referents alive so a recycled id cannot alias a stale entry.
+# The cache is a small LRU.
 _ENGINE_CACHE: "OrderedDict[tuple, tuple]" = OrderedDict()
 _ENGINE_CACHE_SIZE = 8
+
+
+def _graph_cache_key(graph: GraphProcess) -> tuple:
+    """Value key for a GraphProcess: every field that shapes the compiled
+    adjacency stream, with the base adjacency by content, not identity."""
+    return (graph.kind, float(graph.drop), int(graph.cycle_len),
+            int(graph.seed), graph.base.shape, graph.base.tobytes())
 
 
 def _cached_engine(sim: SimConfig, graph: GraphProcess, *, T: int,
                    eval_every: int, x, y, eval_fn):
     key = (sim.m, sim.model, sim.n_classes, sim.dim, sim.batch, sim.r,
-           sim.b_mean, sim.sigma_n, sim.alpha0, sim.mix_impl,
-           T, max(1, int(eval_every)), id(graph), id(x), id(y), id(eval_fn))
+           sim.b_mean, sim.sigma_n, sim.alpha0, sim.mix_impl, sim.trace,
+           T, max(1, int(eval_every)), _graph_cache_key(graph),
+           id(x), id(y), id(eval_fn))
     hit = _ENGINE_CACHE.get(key)
     if hit is None:
         eng, model_dim = make_engine(sim, graph, T=T, eval_every=eval_every,
@@ -300,7 +352,7 @@ def _cached_engine(sim: SimConfig, graph: GraphProcess, *, T: int,
     return hit[0], hit[1]
 
 
-def _result_from_device(out: dict, model_dim: int) -> SimResult:
+def _result_from_device(out: dict, model_dim: int, trace: str) -> SimResult:
     host = jax.device_get(out)  # the run's single host<->device sync
     return SimResult(
         loss=np.asarray(host["loss"], np.float32),
@@ -308,11 +360,16 @@ def _result_from_device(out: dict, model_dim: int) -> SimResult:
         tx_time=np.asarray(host["tx_time"], np.float32),
         util=np.asarray(host["util"], np.float32),
         v=np.asarray(host["v"], bool),
-        comm=np.asarray(host["comm"], bool),
-        adj=np.asarray(host["adj"], bool),
+        comm_count=np.asarray(host["comm_count"], np.int32),
+        deg=np.asarray(host["deg"], np.int32),
         consensus_err=np.asarray(host["consensus_err"], np.float32),
         model_dim=model_dim,
         bandwidths=np.asarray(host["bandwidths"], np.float32),
+        trace=trace,
+        _comm=(np.asarray(host["comm"], trace_mod.link_dtype(trace))
+               if "comm" in host else None),
+        _adj=(np.asarray(host["adj"], trace_mod.link_dtype(trace))
+              if "adj" in host else None),
     )
 
 
@@ -340,7 +397,7 @@ def run(
         idx = batches.stage(sim.iters)
         out = eng(triggers.policy_index(sim.policy),
                   jnp.asarray(sim.seed, jnp.int32), jnp.asarray(idx))
-        return _result_from_device(out, model_dim)
+        return _result_from_device(out, model_dim, sim.trace)
     return _run_python(sim, graph, batches, eval_fn, eval_every=eval_every)
 
 
@@ -403,8 +460,17 @@ def _run_python(
             last_acc = eval_fn(jax.device_get(state.w))
         acc_t[k] = last_acc
 
+    trace = trace_mod.check_trace_mode(sim.trace)
+    if trace == "packed":
+        comm_s, adj_s = trace_mod.pack_links_np(comm_t), trace_mod.pack_links_np(adj_t)
+    elif trace == "summary":
+        comm_s = adj_s = None
+    else:
+        comm_s, adj_s = comm_t, adj_t
     return SimResult(
         loss=loss_t, acc=acc_t, tx_time=tx_t, util=util_t, v=v_t,
-        comm=comm_t, adj=adj_t, consensus_err=cons_t, model_dim=model_dim,
-        bandwidths=np.asarray(bw),
+        comm_count=comm_t.sum(-1).astype(np.int32),
+        deg=adj_t.sum(-1).astype(np.int32),
+        consensus_err=cons_t, model_dim=model_dim,
+        bandwidths=np.asarray(bw), trace=trace, _comm=comm_s, _adj=adj_s,
     )

@@ -31,6 +31,7 @@ from repro.core import triggers
 from repro.core.topology import GraphProcess
 from repro.data.loader import FederatedBatches
 from repro.fl import simulator
+from repro.fl import trace as trace_mod
 from repro.fl.simulator import EvalFn, SimConfig, SimResult
 
 
@@ -40,6 +41,10 @@ class SweepResult:
 
     Metric arrays lead with (S, P) = (len(seeds), len(policies)); the
     remaining axes match ``SimResult`` (T per-iteration, m per-device).
+    Like ``SimResult``, the ``comm``/``adj`` link matrices are accessors
+    over ``trace``-dependent storage (dense / bit-packed / absent); slicing
+    via ``result()`` keeps the storage mode, so a packed sweep stays packed
+    until a cell's matrices are actually read.
     """
 
     seeds: tuple[int, ...]
@@ -49,11 +54,26 @@ class SweepResult:
     tx_time: np.ndarray  # (S, P, T)
     util: np.ndarray  # (S, P, T)
     v: np.ndarray  # (S, P, T, m)
-    comm: np.ndarray  # (S, P, T, m, m)
-    adj: np.ndarray  # (S, P, T, m, m)
+    comm_count: np.ndarray  # (S, P, T, m) int32
+    deg: np.ndarray  # (S, P, T, m) int32
     consensus_err: np.ndarray  # (S, P, T)
     bandwidths: np.ndarray  # (S, P, m) (policy axis is redundant but cheap)
     model_dim: int
+    trace: str = "full"
+    _comm: np.ndarray | None = None  # (S,P,T,m,m) bool | (S,P,T,m,W) uint32
+    _adj: np.ndarray | None = None
+
+    @property
+    def m(self) -> int:
+        return int(self.bandwidths.shape[-1])
+
+    @property
+    def comm(self) -> np.ndarray:  # (S, P, T, m, m) bool
+        return trace_mod.stored_links(self._comm, self.trace, self.m, "comm")
+
+    @property
+    def adj(self) -> np.ndarray:  # (S, P, T, m, m) bool
+        return trace_mod.stored_links(self._adj, self.trace, self.m, "adj")
 
     def result(self, seed: int, policy: str) -> SimResult:
         """Slice one grid cell back out as a standard ``SimResult``."""
@@ -61,9 +81,13 @@ class SweepResult:
         p = self.policies.index(policy)
         return SimResult(
             loss=self.loss[s, p], acc=self.acc[s, p], tx_time=self.tx_time[s, p],
-            util=self.util[s, p], v=self.v[s, p], comm=self.comm[s, p],
-            adj=self.adj[s, p], consensus_err=self.consensus_err[s, p],
+            util=self.util[s, p], v=self.v[s, p],
+            comm_count=self.comm_count[s, p], deg=self.deg[s, p],
+            consensus_err=self.consensus_err[s, p],
             model_dim=self.model_dim, bandwidths=self.bandwidths[s, p],
+            trace=self.trace,
+            _comm=None if self._comm is None else self._comm[s, p],
+            _adj=None if self._adj is None else self._adj[s, p],
         )
 
     @property
@@ -121,6 +145,8 @@ def run_sweep(
     grid = jax.jit(jax.vmap(over_policies, in_axes=(None, 0, 0)))
     out = jax.device_get(grid(policy_idx, seed_arr, idx))
 
+    trace = trace_mod.check_trace_mode(sim.trace)
+    link_dtype = trace_mod.link_dtype(trace)
     return SweepResult(
         seeds=seeds, policies=policies,
         loss=np.asarray(out["loss"], np.float32),
@@ -128,11 +154,14 @@ def run_sweep(
         tx_time=np.asarray(out["tx_time"], np.float32),
         util=np.asarray(out["util"], np.float32),
         v=np.asarray(out["v"], bool),
-        comm=np.asarray(out["comm"], bool),
-        adj=np.asarray(out["adj"], bool),
+        comm_count=np.asarray(out["comm_count"], np.int32),
+        deg=np.asarray(out["deg"], np.int32),
         consensus_err=np.asarray(out["consensus_err"], np.float32),
         bandwidths=np.asarray(out["bandwidths"], np.float32),
         model_dim=model_dim,
+        trace=trace,
+        _comm=(np.asarray(out["comm"], link_dtype) if "comm" in out else None),
+        _adj=(np.asarray(out["adj"], link_dtype) if "adj" in out else None),
     )
 
 

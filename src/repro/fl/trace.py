@@ -1,0 +1,117 @@
+"""Trace-mode storage for per-iteration link matrices (DESIGN.md "Trace
+modes").
+
+The scan engine emits the Event-1/2/3 link matrices -- ``comm`` (activated
+information-flow edges) and ``adj`` (physical adjacency) -- once per
+iteration.  Stored dense they are (T, m, m) bool = T*m*m bytes per matrix,
+which is what capped fleets at m~64: a m=1024, T=1000 run would carry
+~2 GB of bool trajectory in the scan ys alone.  Three storage modes bound
+that:
+
+* ``full``    - dense (T, m, m) bool, the legacy layout.
+* ``packed``  - each length-m bool row is bit-packed little-endian into
+                ceil(m/32) uint32 words on device, inside the scan ys:
+                word w, bit b  <->  column w*32 + b.  8x smaller than bool
+                (1 bit vs 1 byte per link), losslessly unpacked on the host
+                by the ``SimResult``/``SweepResult`` accessors.
+* ``summary`` - the matrices are dropped entirely; only the per-device row
+                sums survive (links used / physical degree, O(T*m) int32),
+                which is all the paper's tx-time / utilization /
+                B-connectivity-count metrics need.
+
+Packing runs under jit/vmap (pure jnp); unpacking is host-side numpy.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+TRACE_MODES: tuple[str, ...] = ("full", "packed", "summary")
+WORD = 32  # bits per packed word
+
+
+def check_trace_mode(trace: str) -> str:
+    if trace not in TRACE_MODES:
+        raise ValueError(f"unknown trace mode {trace!r}; known: {TRACE_MODES}")
+    return trace
+
+
+def packed_words(m: int) -> int:
+    """Number of uint32 words per length-m bit row."""
+    return -(-m // WORD)
+
+
+def pack_links(b: jnp.ndarray) -> jnp.ndarray:
+    """(..., m) bool -> (..., ceil(m/32)) uint32, little-endian bit order.
+
+    Pure jnp so it runs inside the scanned step (and under the sweep vmap);
+    the zero-padding of the last partial word is lossless."""
+    m = b.shape[-1]
+    w = packed_words(m)
+    pad = w * WORD - m
+    if pad:
+        b = jnp.pad(b, [(0, 0)] * (b.ndim - 1) + [(0, pad)])
+    words = b.reshape(b.shape[:-1] + (w, WORD)).astype(jnp.uint32)
+    shifts = jnp.arange(WORD, dtype=jnp.uint32)
+    return jnp.sum(words << shifts, axis=-1).astype(jnp.uint32)
+
+
+def pack_links_np(b: np.ndarray) -> np.ndarray:
+    """Host-side twin of ``pack_links`` (same word/bit layout).
+
+    Uses ``np.packbits`` + a little-endian uint32 view: no intermediate
+    larger than the output."""
+    b = np.asarray(b, bool)
+    m = b.shape[-1]
+    w = packed_words(m)
+    by = np.packbits(b, axis=-1, bitorder="little")  # (..., ceil(m/8)) uint8
+    pad = w * 4 - by.shape[-1]
+    if pad:
+        by = np.concatenate(
+            [by, np.zeros(by.shape[:-1] + (pad,), np.uint8)], axis=-1)
+    return np.ascontiguousarray(by).view("<u4")
+
+
+def unpack_links(packed: np.ndarray, m: int) -> np.ndarray:
+    """(..., ceil(m/32)) uint32 -> (..., m) bool; exact inverse of packing.
+
+    Word-to-byte view + ``np.unpackbits``: the only transient is the uint8
+    bit array, the same size as the bool result (a naive shift-and-mask
+    expansion would allocate 4-byte-per-bit intermediates, an 8x host-memory
+    spike over the dense trace this mode exists to avoid)."""
+    p = np.ascontiguousarray(np.asarray(packed)).astype("<u4", copy=False)
+    by = p.view(np.uint8)  # (..., W*4) little-endian bytes
+    bits = np.unpackbits(by, axis=-1, bitorder="little")  # (..., W*32) uint8
+    return bits[..., :m].astype(bool)
+
+
+def link_dtype(trace: str):
+    """Host dtype of the stored link trajectories for a trace mode."""
+    return np.uint32 if trace == "packed" else bool
+
+
+def stored_links(stored: np.ndarray | None, trace: str, m: int, name: str) -> np.ndarray:
+    """Resolve a result object's stored link trajectory to dense bool.
+
+    ``full`` passes through, ``packed`` unpacks, ``summary`` raises (the
+    matrices were never recorded -- use the per-device counts instead)."""
+    if trace == "summary":
+        raise ValueError(
+            f"{name} link matrices were not recorded with trace='summary' "
+            "(only per-device counts survive: comm_count / deg); rerun with "
+            "trace='full' or trace='packed' to get the full matrices")
+    assert stored is not None, f"{name} missing from a {trace!r}-trace result"
+    if trace == "packed":
+        return unpack_links(stored, m)
+    return stored
+
+
+def link_bytes_per_iter(m: int, trace: str) -> int:
+    """Trajectory bytes ONE iteration of comm+adj storage costs per mode
+    (the benchmark's analytic memory model; counts survive in every mode)."""
+    counts = 2 * m * 4  # comm_count + deg, int32
+    if trace == "full":
+        return 2 * m * m + counts
+    if trace == "packed":
+        return 2 * m * packed_words(m) * 4 + counts
+    return counts

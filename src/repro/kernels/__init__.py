@@ -3,3 +3,12 @@
   trigger/ - fused ||w - w_hat||^2 reduction      (paper Event 2)
   swa/     - sliding-window causal flash attention (long_500k path)
 """
+
+LANES = 128  # TPU lane width: last-dim tiles must be multiples of this
+
+
+def aligned_block(n: int, block_n: int) -> int:
+    """Streaming block size for a length-n minor axis: the configured block,
+    shrunk to the 128-lane-aligned cover of n so narrow inputs (small model
+    leaves) pad to lane alignment rather than a full default block."""
+    return min(block_n, max(LANES, -(-n // LANES) * LANES))

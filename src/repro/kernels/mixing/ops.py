@@ -5,6 +5,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import aligned_block
 from repro.kernels.mixing.kernel import mix_pallas
 
 
@@ -12,6 +13,7 @@ def mix(p: jax.Array, w: jax.Array, *, block_n: int = 512,
         interpret: bool = False) -> jax.Array:
     """p (m, m); w (m, n) -> (m, n); pads n up to a block multiple."""
     m, n = w.shape
+    block_n = aligned_block(n, block_n)
     pad = (-n) % block_n
     wp = jnp.pad(w, ((0, 0), (0, pad))) if pad else w
     out = mix_pallas(p, wp, block_n=block_n, interpret=interpret)

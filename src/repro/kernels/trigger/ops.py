@@ -4,6 +4,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import aligned_block
 from repro.kernels.trigger.kernel import trigger_sq_pallas
 
 
@@ -11,6 +12,7 @@ def trigger_sq(w: jax.Array, w_hat: jax.Array, *, block_n: int = 1024,
                interpret: bool = False) -> jax.Array:
     """(m, n) x2 -> (m,) squared deviation; pads n (zero pad -> no effect)."""
     m, n = w.shape
+    block_n = aligned_block(n, block_n)
     pad = (-n) % block_n
     if pad:
         w = jnp.pad(w, ((0, 0), (0, pad)))
@@ -32,4 +34,7 @@ def trigger_sq_tree(w_tree, h_tree, *, interpret: bool = False) -> jax.Array:
 def events(w, w_hat, *, n_model: int, r: float, rho: jax.Array,
            gamma_k: jax.Array, interpret: bool = False) -> jax.Array:
     dev = jnp.sqrt(trigger_sq(w, w_hat, interpret=interpret) / n_model)
-    return dev >= r * rho * gamma_k
+    # strict inequality: Eq. 7 fires only when the deviation *exceeds* the
+    # threshold, matching triggers.policy_branches (dev == threshold, e.g.
+    # a zero threshold with w == w_hat, must NOT fire)
+    return dev > r * rho * gamma_k

@@ -8,6 +8,7 @@ def trigger_sq_ref(w, w_hat):
 
 
 def events_ref(w, w_hat, *, n_model, r, rho, gamma_k):
-    """v_i = 1{ sqrt(sq_i / n) >= r * rho_i * gamma_k }  (paper Eq. 3/7)."""
+    """v_i = 1{ sqrt(sq_i / n) > r * rho_i * gamma_k }  (paper Eq. 3/7,
+    strict -- matches triggers.policy_branches)."""
     dev = jnp.sqrt(trigger_sq_ref(w, w_hat) / n_model)
-    return dev >= r * rho * gamma_k
+    return dev > r * rho * gamma_k

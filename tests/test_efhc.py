@@ -118,3 +118,36 @@ def test_transmission_time_favors_efhc_over_zt():
     assert ef["v"].mean() < 1.0, "EF-HC must skip some broadcasts"
     # per-iteration tx time proxy: fraction of used links
     assert ef["comm"].mean() <= zt["comm"].mean() + 1e-9
+
+
+def test_util_diverges_from_tx_time_on_heterogeneous_bandwidths():
+    """Regression: util was algebraically identical to tx_time.  Utilization
+    is bits-over-aggregate-capacity (ratio of sums); tx_time is the mean of
+    per-device times (mean of ratios).  They agree only when bandwidths are
+    homogeneous."""
+    m, n = 4, 3
+    graph = make_process(m, "complete", seed=0)
+    cfg = efhc.EFHCConfig(trigger=triggers.TriggerConfig(policy="zero"))
+
+    def grad_fn(w, key, batch):
+        return jnp.asarray(0.0), {"w": jnp.zeros_like(w["w"])}
+
+    def metrics(bw):
+        w0 = {"w": jnp.ones((m, n))}
+        st = efhc.init_state(w0, bw, graph.adjacency(0), jax.random.PRNGKey(0))
+        _, aux = efhc.step(cfg, graph, st, grad_fn=grad_fn, batch=None,
+                           alpha_k=jnp.asarray(0.1), model_dim=n)
+        return float(aux.tx_time), float(aux.util)
+
+    tx_het, util_het = metrics(jnp.asarray([1000.0, 2000.0, 4000.0, 8000.0]))
+    assert not np.isclose(tx_het, util_het), \
+        f"util must differ from tx_time on heterogeneous bandwidths: {tx_het}"
+    # mean-of-ratios vs ratio-of-sums: full broadcast on a complete graph
+    # gives tx = n * mean(1/b), util = n / mean(b)
+    bw = np.asarray([1000.0, 2000.0, 4000.0, 8000.0])
+    np.testing.assert_allclose(tx_het, n * (1.0 / bw).mean(), rtol=1e-5)
+    np.testing.assert_allclose(util_het, n / bw.mean(), rtol=1e-5)
+
+    # sanity: homogeneous bandwidths collapse the two to the same number
+    tx_hom, util_hom = metrics(jnp.full((m,), 4000.0))
+    np.testing.assert_allclose(tx_hom, util_hom, rtol=1e-5)

@@ -1,11 +1,15 @@
 """Refactor guard: the device-resident chunked-scan engine must reproduce
 the legacy per-step Python loop's ``SimResult`` trajectory-for-trajectory,
 for every trigger policy - and the vmapped sweep grid must match the
-engine's single runs cell-for-cell.
+engine's single runs cell-for-cell.  The Pallas hot path (interpret mode on
+CPU) and the packed/summary trace modes must match the dense/full reference
+the same way.
 
 T is chosen non-divisible by eval_every to exercise the remainder chunk,
 and the graph is time-varying so the folded-in adjacency is nontrivial.
 """
+import dataclasses
+
 import numpy as np
 import pytest
 
@@ -13,6 +17,7 @@ from repro.core.topology import make_process
 from repro.data.loader import FederatedBatches
 from repro.data.partition import by_labels
 from repro.data.synthetic import image_dataset
+from repro.fl import simulator
 from repro.fl.simulator import SimConfig, make_eval_fn, run
 from repro.fl.sweep import run_sweep
 
@@ -36,8 +41,6 @@ def setup():
 @pytest.mark.parametrize("policy", ["efhc", "zero", "global", "gossip"])
 def test_scan_matches_python_loop(setup, policy):
     sim, graph, batches, eval_fn = setup
-    import dataclasses
-
     cfg = dataclasses.replace(sim, policy=policy)
     scan = run(cfg, graph, batches(), eval_fn, eval_every=EVAL_EVERY, engine="scan")
     ref = run(cfg, graph, batches(), eval_fn, eval_every=EVAL_EVERY, engine="python")
@@ -56,8 +59,6 @@ def test_scan_matches_python_loop(setup, policy):
 def test_sweep_grid_matches_single_runs(setup):
     """Each (seed, policy) cell of the vmapped grid == a standalone run."""
     sim, graph, batches, eval_fn = setup
-    import dataclasses
-
     res = run_sweep(sim, graph, lambda s: batches(), eval_fn,
                     seeds=(0,), policies=("efhc", "gossip"),
                     eval_every=EVAL_EVERY)
@@ -73,3 +74,90 @@ def test_sweep_grid_matches_single_runs(setup):
         for field in BOOL_FIELDS:
             assert (getattr(cell, field) == getattr(single, field)).all(), \
                 f"sweep cell {policy} != single run on {field}"
+
+
+def _assert_results_match(got, want, *, atol=1e-4, link_fields=BOOL_FIELDS):
+    assert got.model_dim == want.model_dim
+    np.testing.assert_allclose(got.bandwidths, want.bandwidths, atol=1e-5)
+    for field in FLOAT_FIELDS:
+        np.testing.assert_allclose(getattr(got, field), getattr(want, field),
+                                   atol=atol, err_msg=f"diverged on {field}")
+    for field in link_fields:
+        assert (np.asarray(getattr(got, field))
+                == np.asarray(getattr(want, field))).all(), \
+            f"diverged on {field}"
+    for field in ("comm_count", "deg"):
+        assert (getattr(got, field) == getattr(want, field)).all(), \
+            f"diverged on {field}"
+
+
+@pytest.mark.parametrize("policy", ["efhc", "zero"])
+def test_pallas_hot_path_matches_dense(setup, policy):
+    """mix_impl='pallas' (interpret mode on CPU) must reproduce the dense
+    reference full-trajectory: fused mixing + trigger kernels on the hot
+    path change the arithmetic schedule, not the semantics."""
+    sim, graph, batches, eval_fn = setup
+    cfg = dataclasses.replace(sim, policy=policy)
+    dense = run(cfg, graph, batches(), eval_fn, eval_every=EVAL_EVERY)
+    pallas = run(dataclasses.replace(cfg, mix_impl="pallas"), graph,
+                 batches(), eval_fn, eval_every=EVAL_EVERY)
+    _assert_results_match(pallas, dense)
+
+
+def test_packed_trace_roundtrips_to_full(setup):
+    """trace='packed' stores bit-packed uint32 link words in the scan ys and
+    must unpack to the exact full-trace matrices; every other trajectory is
+    untouched by the storage mode."""
+    sim, graph, batches, eval_fn = setup
+    full = run(sim, graph, batches(), eval_fn, eval_every=EVAL_EVERY)
+    packed = run(dataclasses.replace(sim, trace="packed"), graph, batches(),
+                 eval_fn, eval_every=EVAL_EVERY)
+    assert packed.trace == "packed" and packed._comm.dtype == np.uint32
+    assert packed._comm.shape == (T, M, -(-M // 32))
+    _assert_results_match(packed, full)
+
+
+def test_summary_trace_keeps_counts_only(setup):
+    sim, graph, batches, eval_fn = setup
+    full = run(sim, graph, batches(), eval_fn, eval_every=EVAL_EVERY)
+    summ = run(dataclasses.replace(sim, trace="summary"), graph, batches(),
+               eval_fn, eval_every=EVAL_EVERY)
+    _assert_results_match(summ, full, link_fields=())
+    assert (summ.comm_count == full.comm.sum(-1)).all()
+    assert (summ.deg == full.adj.sum(-1)).all()
+    assert summ._comm is None and summ._adj is None
+    with pytest.raises(ValueError, match="summary"):
+        summ.comm
+    with pytest.raises(ValueError, match="summary"):
+        summ.adj
+
+
+def test_sweep_packed_matches_full(setup):
+    """The vmapped grid packs inside the scan too; cells must round-trip."""
+    sim, graph, batches, eval_fn = setup
+    kw = dict(seeds=(0,), policies=("efhc", "gossip"), eval_every=EVAL_EVERY)
+    full = run_sweep(sim, graph, lambda s: batches(), eval_fn, **kw)
+    packed = run_sweep(dataclasses.replace(sim, trace="packed"), graph,
+                       lambda s: batches(), eval_fn, **kw)
+    assert packed.trace == "packed"
+    assert (packed.comm == full.comm).all() and (packed.adj == full.adj).all()
+    for policy in full.policies:
+        _assert_results_match(packed.result(0, policy), full.result(0, policy))
+
+
+def test_engine_cache_shares_equal_valued_graphs(setup):
+    """Two structurally identical GraphProcess instances (frozen dataclass,
+    equal fields + base bytes) must hit ONE cache entry - the old id(graph)
+    key recompiled the full horizon per instance."""
+    sim, _, batches, _ = setup
+    b = batches()
+    g1 = make_process(M, "rgg", time_varying="edge_dropout", drop=0.3, seed=0)
+    g2 = make_process(M, "rgg", time_varying="edge_dropout", drop=0.3, seed=0)
+    assert g1 is not g2 and (g1.base == g2.base).all()
+    simulator._ENGINE_CACHE.clear()
+    eng1, _ = simulator._cached_engine(sim, g1, T=T, eval_every=EVAL_EVERY,
+                                       x=b.x, y=b.y, eval_fn=None)
+    eng2, _ = simulator._cached_engine(sim, g2, T=T, eval_every=EVAL_EVERY,
+                                       x=b.x, y=b.y, eval_fn=None)
+    assert eng1 is eng2, "equal-valued graphs must share a compiled engine"
+    assert len(simulator._ENGINE_CACHE) == 1

@@ -1,0 +1,80 @@
+"""Trace-mode subsystem: bit-packing round trips (device jnp and host numpy
+twins must agree bit-for-bit) and the m=256 acceptance run -- packed-trace
+trajectories at fleet scale must equal the full-trace reference after
+unpacking, at a fraction of the scan-ys memory."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.topology import make_process
+from repro.data.loader import FederatedBatches
+from repro.data.synthetic import image_dataset
+from repro.fl import trace
+from repro.fl.simulator import SimConfig, run
+
+
+@pytest.mark.parametrize("m", [1, 5, 31, 32, 33, 64, 100])
+def test_pack_unpack_roundtrip(m):
+    rng = np.random.default_rng(m)
+    b = rng.random((7, m)) < 0.3
+    w = trace.packed_words(m)
+    packed = np.asarray(trace.pack_links(jnp.asarray(b)))
+    assert packed.shape == (7, w) and packed.dtype == np.uint32
+    assert (trace.unpack_links(packed, m) == b).all()
+
+
+@pytest.mark.parametrize("m", [5, 32, 77])
+def test_device_and_host_packing_agree(m):
+    rng = np.random.default_rng(100 + m)
+    b = rng.random((3, m, m)) < 0.5
+    dev = np.asarray(trace.pack_links(jnp.asarray(b)))
+    host = trace.pack_links_np(b)
+    assert (dev == host).all()
+
+
+def test_packed_word_count_and_bytes():
+    assert trace.packed_words(1) == 1
+    assert trace.packed_words(32) == 1
+    assert trace.packed_words(33) == 2
+    assert trace.packed_words(1024) == 32
+    # the 8x claim: bool (1 byte/link) vs 1 bit/link at word granularity
+    full = trace.link_bytes_per_iter(1024, "full")
+    packed = trace.link_bytes_per_iter(1024, "packed")
+    summary = trace.link_bytes_per_iter(1024, "summary")
+    assert full / packed == pytest.approx(8.0, rel=0.05)
+    assert summary == 2 * 1024 * 4
+
+
+def test_stored_links_summary_raises():
+    with pytest.raises(ValueError, match="summary"):
+        trace.stored_links(None, "summary", 4, "comm")
+
+
+def test_packed_trace_at_m256_matches_full():
+    """Acceptance: run() with trace='packed' at m=256 equals trace='full'
+    after unpacking (and the packed ys really are 8x smaller)."""
+    m, T, dim = 256, 6, 32
+    x, y = image_dataset(1024, seed=0, dim=dim)
+    rng = np.random.default_rng(0)
+    parts = [np.sort(p) for p in np.array_split(rng.permutation(len(y)), m)]
+    graph = make_process(m, "rgg", radius=0.15, time_varying="edge_dropout",
+                         drop=0.3, seed=0)
+    sim = SimConfig(m=m, iters=T, dim=dim, r=50.0, seed=0)
+    mk = lambda: FederatedBatches(x, y, parts, sim.batch, seed=2)
+
+    full = run(sim, graph, mk(), None, eval_every=T)
+    packed = run(dataclasses.replace(sim, trace="packed"), graph, mk(), None,
+                 eval_every=T)
+
+    assert packed._comm.shape == (T, m, 8) and packed._comm.dtype == np.uint32
+    assert packed._comm.nbytes * 8 == full._comm.nbytes
+    assert (packed.comm == full.comm).all()
+    assert (packed.adj == full.adj).all()
+    assert (packed.v == full.v).all()
+    assert (packed.comm_count == full.comm_count).all()
+    assert (packed.deg == full.deg).all()
+    for field in ("loss", "tx_time", "util", "consensus_err"):
+        np.testing.assert_allclose(getattr(packed, field),
+                                   getattr(full, field), atol=1e-6)

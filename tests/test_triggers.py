@@ -79,3 +79,46 @@ def test_bandwidth_sampling_range():
     assert bw.min() >= 0.1 * 5000.0 - 1e-3
     assert bw.max() <= 1.9 * 5000.0 + 1e-3
     assert abs(bw.mean() - 5000.0) < 200
+
+
+def test_trigger_strict_at_exact_threshold_kernel_vs_reference():
+    """Eq. 7 is a STRICT inequality: dev == threshold must not fire.  Pins
+    the kernel <-> reference parity at the boundary (the kernel used to fire
+    on >=, diverging from policy_branches on exact-threshold deviations)."""
+    from repro.kernels.trigger.ops import events
+    from repro.kernels.trigger.ref import events_ref
+
+    m, n = 4, 128
+    ones = jnp.ones((m,))
+    gamma = jnp.asarray(1.0)
+    key = jax.random.PRNGKey(0)
+    w_hat = jnp.zeros((m, n))
+
+    # dev == threshold == 2.0, both fp32-exact: sqrt(sum(2^2)/n) = 2
+    w = jnp.full((m, n), 2.0)
+    kw = dict(n_model=n, r=2.0, rho=ones, gamma_k=gamma)
+    cfg = triggers.TriggerConfig(policy="efhc", r=2.0)  # bw=1 -> rho=1
+    fired_kernel = np.asarray(events(w, w_hat, interpret=True, **kw))
+    fired_ref = np.asarray(events_ref(w, w_hat, **kw))
+    fired_policy = np.asarray(triggers.broadcast_events(
+        cfg, w=w, w_hat=w_hat, bandwidths=ones, gamma_k=gamma, key=key))
+    assert not fired_kernel.any(), "kernel must not fire at dev == threshold"
+    assert (fired_kernel == fired_ref).all()
+    assert (fired_kernel == fired_policy).all()
+
+    # zero deviation at zero threshold: the degenerate boundary
+    kw0 = dict(n_model=n, r=0.0, rho=ones, gamma_k=gamma)
+    cfg0 = triggers.TriggerConfig(policy="efhc", r=0.0)
+    assert not np.asarray(events(w_hat, w_hat, interpret=True, **kw0)).any()
+    assert not np.asarray(events_ref(w_hat, w_hat, **kw0)).any()
+    assert not np.asarray(triggers.broadcast_events(
+        cfg0, w=w_hat, w_hat=w_hat, bandwidths=ones, gamma_k=gamma,
+        key=key)).any()
+
+    # just past the boundary every implementation fires
+    w_hi = jnp.full((m, n), 2.001)
+    assert np.asarray(events(w_hi, w_hat, interpret=True, **kw)).all()
+    assert np.asarray(events_ref(w_hi, w_hat, **kw)).all()
+    assert np.asarray(triggers.broadcast_events(
+        cfg, w=w_hi, w_hat=w_hat, bandwidths=ones, gamma_k=gamma,
+        key=key)).all()
