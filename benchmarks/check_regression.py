@@ -1,0 +1,135 @@
+"""Benchmark-regression gate over ``BENCH_fleet.json``.
+
+Compares a freshly measured fleet-scale benchmark against the pinned
+reference checked into the repo, matching entries on
+``(m, trace, mix_impl)``:
+
+* fresh entries **slower than the reference by more than the threshold**
+  (default 35%, i.e. ``new < 0.65 * ref`` iters/s) are regressions and the
+  gate exits non-zero -- the throughput curve cannot silently collapse the
+  way the dense m=1024 path once did;
+* reference entries the fresh run did not measure are skipped (CI smoke
+  reruns a subset of the pinned grid);
+* fresh entries without a pinned counterpart are reported as ``new``.
+
+A markdown delta table is written to ``--summary`` (defaulting to
+``$GITHUB_STEP_SUMMARY`` when set) so every CI run shows the per-m
+throughput drift next to the uploaded benchmark artifact.
+
+The pinned reference is measured on the dev container (best-of-3, see
+``fleet_scale.py``); a CI runner of a different hardware class shifts
+every entry by a common factor, so if the gate trips uniformly across all
+m the right response is to re-pin by running the *full* default grid on
+that runner class (``python benchmarks/fleet_scale.py --out
+BENCH_fleet.json`` -- NOT the 4-entry CI smoke artifact, which lacks the
+m >= 1024 points the pinned file must keep) or to widen ``--threshold``;
+a single-m trip is a real regression in that configuration.
+
+    PYTHONPATH=src python benchmarks/check_regression.py \
+        --ref BENCH_fleet.json --new BENCH_fresh.json [--threshold 0.35]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def entry_key(e: dict) -> tuple:
+    # older benchmark files predate the mix_impl column; they measured dense
+    return (int(e["m"]), str(e["trace"]), str(e.get("mix_impl", "dense")))
+
+
+def compare(ref_doc: dict, new_doc: dict, threshold: float = 0.35) -> tuple[list[dict], list[dict]]:
+    """Match fresh entries against the pinned reference.
+
+    Returns ``(rows, regressions)``: one row per fresh entry with the
+    reference throughput, the relative slowdown (positive = slower), and a
+    status; ``regressions`` is the subset with ``slowdown > threshold``.
+    """
+    ref = {entry_key(e): e for e in ref_doc.get("entries", [])}
+    rows, regressions = [], []
+    for e in new_doc.get("entries", []):
+        key = entry_key(e)
+        new_ips = float(e["iters_per_sec"])
+        row = {"m": key[0], "trace": key[1], "mix_impl": key[2],
+               "new_ips": new_ips, "ref_ips": None, "slowdown": None,
+               "status": "new"}
+        match = ref.get(key)
+        if match is not None:
+            ref_ips = float(match["iters_per_sec"])
+            slowdown = 1.0 - new_ips / ref_ips
+            row.update(ref_ips=ref_ips, slowdown=slowdown,
+                       status="regression" if slowdown > threshold else "ok")
+            if row["status"] == "regression":
+                regressions.append(row)
+        rows.append(row)
+    return rows, regressions
+
+
+def markdown_table(rows: list[dict], threshold: float) -> str:
+    lines = [
+        f"### Fleet-scale benchmark delta (fail above {threshold:.0%} slowdown)",
+        "",
+        "| m | trace | mix_impl | ref iters/s | new iters/s | delta | status |",
+        "|---:|---|---|---:|---:|---:|---|",
+    ]
+    for r in rows:
+        ref = "—" if r["ref_ips"] is None else f"{r['ref_ips']:.2f}"
+        delta = "—" if r["slowdown"] is None else f"{-r['slowdown']:+.1%}"
+        mark = {"ok": "✅ ok", "new": "🆕 new", "regression": "❌ regression"}[r["status"]]
+        lines.append(f"| {r['m']} | {r['trace']} | {r['mix_impl']} | {ref} "
+                     f"| {r['new_ips']:.2f} | {delta} | {mark} |")
+    return "\n".join(lines) + "\n"
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ref", default="BENCH_fleet.json",
+                    help="pinned reference benchmark file")
+    ap.add_argument("--new", dest="new_file", required=True,
+                    help="freshly measured benchmark file")
+    ap.add_argument("--threshold", type=float, default=0.35,
+                    help="relative slowdown that fails the gate (0.35 = 35%%)")
+    ap.add_argument("--summary", default=None,
+                    help="markdown delta-table path "
+                         "(default: $GITHUB_STEP_SUMMARY when set)")
+    args = ap.parse_args(argv)
+
+    with open(args.ref) as f:
+        ref_doc = json.load(f)
+    with open(args.new_file) as f:
+        new_doc = json.load(f)
+
+    rows, regressions = compare(ref_doc, new_doc, args.threshold)
+    table = markdown_table(rows, args.threshold)
+    print(table)
+
+    # the delta table goes to the artifact file AND the step summary, and is
+    # written before the exit code so a failing gate still shows its table
+    targets = {t for t in (args.summary, os.environ.get("GITHUB_STEP_SUMMARY"))
+               if t}
+    for target in targets:
+        with open(target, "a") as f:
+            f.write(table)
+
+    if not any(r["status"] != "new" for r in rows):
+        # a gate that compares nothing is a disabled gate: fail loudly so a
+        # grid typo / key rename cannot silently turn CI green
+        print("ERROR: no fresh entry matched the pinned reference grid "
+              "(m, trace, mix_impl) -- the gate compared nothing",
+              file=sys.stderr)
+        return 1
+    if regressions:
+        for r in regressions:
+            print(f"REGRESSION m={r['m']} trace={r['trace']} "
+                  f"mix_impl={r['mix_impl']}: {r['ref_ips']:.2f} -> "
+                  f"{r['new_ips']:.2f} iters/s "
+                  f"({r['slowdown']:.1%} slower)", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -4,17 +4,24 @@ Measures the scan engine across m (devices) and trace modes, writing
 ``BENCH_fleet.json``:
 
 * ``iters_per_sec``  - steady-state compiled throughput (compile excluded
-  via a warm-up call);
+  via a warm-up call; best of ``--repeats`` timed passes, since single-shot
+  walls on a shared host wobble far more than the CI gate's threshold);
 * ``traj_bytes``     - exact bytes of the engine's output trajectories per
   trace mode, from ``jax.eval_shape`` (no allocation), i.e. the scan-ys
   memory that capped fleets at m ~ 64 when ``full`` was the only layout.
 
 Default grid walks the trace ladder the sizes require: dense traces at
-m=16, bit-packed at m=64/256, count-summaries at m=1024.  The checked-in
-``BENCH_fleet.json`` is a pinned CPU-container reference; CI regenerates
-and uploads a fresh one per run (smoke grid).
+m=16, bit-packed at m=64/256, count-summaries at m>=1024 -- and at every
+m >= 256 it times the dense (m, m) Event-3 aggregation against the sparse
+neighbor-list engine (``mix_impl="sparse"``), whose per-iteration cost
+scales with edges instead of m^2; only the m=4096 dense point is
+deliberately absent (that is the regime the sparse engine exists for).
+The checked-in ``BENCH_fleet.json`` is a pinned
+CPU-container reference; CI regenerates a smoke subset per run and gates
+merges on ``benchmarks/check_regression.py`` against the pinned file.
 
     PYTHONPATH=src python benchmarks/fleet_scale.py [--smoke] [--out BENCH_fleet.json]
+        [--sizes 16:full:dense,4096:summary:sparse]
 """
 from __future__ import annotations
 
@@ -28,27 +35,33 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import triggers
-from repro.core.topology import make_process
+from repro.core.topology import fleet_radius, make_process, neighbor_list
 from repro.data.loader import FederatedBatches
 from repro.data.synthetic import image_dataset
 from repro.fl import simulator
 from repro.fl.trace import TRACE_MODES, link_bytes_per_iter
 
-# (m, trace mode actually timed); every entry also reports analytic bytes
-# for all three modes
-DEFAULT_GRID: tuple[tuple[int, str], ...] = (
-    (16, "full"), (64, "packed"), (256, "packed"), (1024, "summary"))
+# (m, trace mode actually timed, mix_impl actually timed); every entry also
+# reports analytic bytes for all three trace modes
+DEFAULT_GRID: tuple[tuple[int, str, str], ...] = (
+    (16, "full", "dense"),
+    (64, "packed", "dense"),
+    (256, "packed", "dense"), (256, "packed", "sparse"),
+    (1024, "summary", "dense"), (1024, "summary", "sparse"),
+    (2048, "summary", "dense"), (2048, "summary", "sparse"),
+    (4096, "summary", "sparse"),
+)
 
 
 def _setup(m: int, iters: int, dim: int, seed: int = 0):
-    x, y = image_dataset(4000, seed=seed, dim=dim)
+    # at least one sample per device (m=4096 outgrows the historical 4000)
+    x, y = image_dataset(max(4000, m), seed=seed, dim=dim)
     rng = np.random.default_rng(seed)
     # iid split: partition skew is irrelevant to throughput/memory and an
     # even split keeps every device non-empty at any m
     parts = [np.sort(p) for p in np.array_split(rng.permutation(len(y)), m)]
-    radius = 0.4 if m <= 64 else 0.15
-    graph = make_process(m, "rgg", radius=radius, time_varying="edge_dropout",
-                         drop=0.3, seed=seed)
+    graph = make_process(m, "rgg", radius=fleet_radius(m),
+                         time_varying="edge_dropout", drop=0.3, seed=seed)
     sim = simulator.SimConfig(m=m, iters=iters, dim=dim, r=50.0, seed=seed)
     batches = FederatedBatches(x, y, parts, sim.batch, seed=seed + 2)
     return sim, graph, batches, x, y
@@ -65,7 +78,8 @@ def _traj_bytes(sim, graph, x, y, idx, iters: int) -> int:
                for l in jax.tree.leaves(shapes))
 
 
-def bench_fleet(m: int, trace: str, *, iters: int, dim: int) -> dict:
+def bench_fleet(m: int, trace: str, mix_impl: str = "dense", *,
+                iters: int, dim: int, repeats: int = 3) -> dict:
     sim, graph, batches, x, y = _setup(m, iters, dim)
     idx = jnp.asarray(batches.stage(iters))
 
@@ -73,7 +87,7 @@ def bench_fleet(m: int, trace: str, *, iters: int, dim: int) -> dict:
                               graph, x, y, idx, iters)
             for mode in TRACE_MODES}
 
-    sim = dataclasses.replace(sim, trace=trace)
+    sim = dataclasses.replace(sim, trace=trace, mix_impl=mix_impl)
     engine, model_dim = simulator.make_engine(sim, graph, T=iters,
                                               eval_every=iters,
                                               x=x, y=y, eval_fn=None)
@@ -81,12 +95,14 @@ def bench_fleet(m: int, trace: str, *, iters: int, dim: int) -> dict:
     pol = triggers.policy_index("efhc")
     seed = jnp.asarray(0, jnp.int32)
     jax.block_until_ready(eng(pol, seed, idx))  # compile + warm up
-    t0 = time.perf_counter()
-    jax.block_until_ready(eng(pol, seed, idx))
-    wall = time.perf_counter() - t0
+    # best-of-N: throughput on a shared host wobbles ~2x single-shot, which
+    # would flake the 35% CI regression gate; the min wall is the stable
+    # estimate of what the program costs
+    wall = min(_timed(eng, pol, seed, idx) for _ in range(max(1, repeats)))
 
     return {
-        "m": m, "trace": trace, "iters": iters, "model_dim": model_dim,
+        "m": m, "trace": trace, "mix_impl": mix_impl, "iters": iters,
+        "model_dim": model_dim, "d_max": neighbor_list(graph.base).d_max,
         "sec_per_iter": wall / iters, "iters_per_sec": iters / wall,
         "traj_bytes": traj,
         "link_bytes_per_iter": {mode: link_bytes_per_iter(m, mode)
@@ -94,30 +110,50 @@ def bench_fleet(m: int, trace: str, *, iters: int, dim: int) -> dict:
     }
 
 
+def _timed(eng, pol, seed, idx) -> float:
+    t0 = time.perf_counter()
+    jax.block_until_ready(eng(pol, seed, idx))
+    return time.perf_counter() - t0
+
+
+def _parse_sizes(spec: str) -> tuple[tuple[int, str, str], ...]:
+    """m:trace[:mix_impl] comma list, e.g. 16:full,4096:summary:sparse."""
+    grid = []
+    for item in spec.split(","):
+        parts = item.split(":")
+        grid.append((int(parts[0]), parts[1],
+                     parts[2] if len(parts) > 2 else "dense"))
+    return tuple(grid)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="CI smoke: single m=128 packed-trace entry")
     ap.add_argument("--iters", type=int, default=12)
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="timed repeats per entry; best-of is reported")
     ap.add_argument("--dim", type=int, default=32)
     ap.add_argument("--sizes", type=str, default=None,
-                    help="comma list m:trace, e.g. 16:full,1024:summary")
+                    help="comma list m:trace[:mix_impl], e.g. "
+                         "16:full,1024:summary:sparse")
     ap.add_argument("--out", default="BENCH_fleet.json")
     args = ap.parse_args()
 
     if args.smoke:
-        grid = ((128, "packed"),)
+        grid = ((128, "packed", "dense"),)
     elif args.sizes:
-        grid = tuple((int(s.split(":")[0]), s.split(":")[1])
-                     for s in args.sizes.split(","))
+        grid = _parse_sizes(args.sizes)
     else:
         grid = DEFAULT_GRID
 
     entries = []
-    for m, trace in grid:
-        e = bench_fleet(m, trace, iters=args.iters, dim=args.dim)
+    for m, trace, mix_impl in grid:
+        e = bench_fleet(m, trace, mix_impl, iters=args.iters, dim=args.dim,
+                        repeats=args.repeats)
         entries.append(e)
-        print(f"m={m:5d} trace={trace:8s} {e['iters_per_sec']:8.2f} iters/s  "
+        print(f"m={m:5d} trace={trace:8s} impl={mix_impl:8s} "
+              f"{e['iters_per_sec']:8.2f} iters/s  "
               f"traj {e['traj_bytes'][trace] / 1e6:8.2f} MB "
               f"(full would be {e['traj_bytes']['full'] / 1e6:.2f} MB)")
 

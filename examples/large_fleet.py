@@ -9,22 +9,28 @@ kernels were dead code.  This example turns both knobs:
 * ``--trace packed``  bit-packs the link matrices inside the scan
   (8x smaller, losslessly unpacked on access) -- good to m ~ 512;
 * ``--trace summary`` keeps only per-device link counts and degrees
-  (O(T m)) -- the m = 1024+ mode; and
+  (O(T m)) -- the m = 1024+ mode;
 * ``--mix-impl pallas`` routes aggregation + trigger deviation through the
-  fused kernels (interpret mode off-TPU, compiled on TPU).
+  fused kernels (interpret mode off-TPU, compiled on TPU); and
+* ``--mix-impl sparse`` (or ``sparse_pallas``) aggregates over the padded
+  neighbor list instead of the dense (m, m) matrix -- O(m d n) per Event-3
+  instead of O(m^2 n), which is what opens m = 2048/4096 fleets
+  (DESIGN.md "Sparse mixing").
 
-    PYTHONPATH=src python examples/large_fleet.py [--m 512] [--iters 60]
-        [--trace summary] [--mix-impl dense]
+    PYTHONPATH=src python examples/large_fleet.py [--m 4096] [--iters 60]
+        [--trace summary] [--mix-impl sparse]
 """
 import argparse
 import time
 
 import numpy as np
 
-from repro.core.topology import make_process
+from repro.core.efhc import MIX_IMPLS
+from repro.core.topology import fleet_radius, make_process, neighbor_list
 from repro.data.loader import FederatedBatches
 from repro.data.partition import by_labels
 from repro.data.synthetic import image_dataset
+from repro.fl import trace as trace_mod
 from repro.fl.simulator import SimConfig, make_eval_fn, run
 from repro.fl.trace import link_bytes_per_iter
 
@@ -35,18 +41,19 @@ def main():
     ap.add_argument("--iters", type=int, default=60)
     ap.add_argument("--trace", default="summary",
                     choices=("full", "packed", "summary"))
-    ap.add_argument("--mix-impl", default="dense",
-                    choices=("dense", "delta", "pallas"))
+    ap.add_argument("--mix-impl", default="dense", choices=MIX_IMPLS)
     ap.add_argument("--dim", type=int, default=64,
                     help="input dimension (small keeps the demo CPU-friendly)")
     args = ap.parse_args()
 
     m = args.m
-    x, y = image_dataset(4000, seed=0, dim=args.dim)
+    # scale the pool with the fleet so the 3-labels-per-device partition
+    # leaves no device empty at m >= 2048
+    x, y = image_dataset(max(4000, 4 * m), seed=0, dim=args.dim)
     xt, yt = image_dataset(800, seed=1, dim=args.dim)
     parts = by_labels(y, m, 3)
-    graph = make_process(m, "rgg", radius=0.15, time_varying="edge_dropout",
-                         drop=0.3, seed=0)
+    graph = make_process(m, "rgg", radius=fleet_radius(m),
+                         time_varying="edge_dropout", drop=0.3, seed=0)
     sim = SimConfig(m=m, iters=args.iters, dim=args.dim, r=50.0,
                     trace=args.trace, mix_impl=args.mix_impl)
     eval_fn = make_eval_fn(sim, xt, yt)
@@ -54,8 +61,9 @@ def main():
 
     per_iter = link_bytes_per_iter(m, args.trace)
     full_iter = link_bytes_per_iter(m, "full")
+    nl = neighbor_list(graph.base)
     print(f"fleet: m={m}, T={args.iters}, trace={args.trace}, "
-          f"mix_impl={args.mix_impl}")
+          f"mix_impl={args.mix_impl}, base d_max={nl.d_max}")
     print(f"link-trace memory: {per_iter * args.iters / 1e6:.1f} MB "
           f"(dense would be {full_iter * args.iters / 1e6:.1f} MB)")
 
@@ -75,10 +83,13 @@ def main():
     print(f"consensus error         {res.consensus_err[0]:.3g} -> "
           f"{res.consensus_err[-1]:.3g}")
     if args.trace != "summary":
-        linked = res.comm.any(-1).all(-1)  # (T,): every device on >=1 link
+        # counts straight off the stored words: packed traces are popcounted,
+        # never unpacked (fl/trace.stored_link_counts)
+        counts = trace_mod.stored_link_counts(res._comm, res.trace, "comm")
+        linked = (counts > 0).all(-1)  # (T,): every device on >= 1 link
         note = (f"first all-devices-linked round {int(np.argmax(linked)) + 1}"
                 if linked.any() else "no round linked every device")
-        print(f"info-flow trace kept: comm {res.comm.shape} ({note})")
+        print(f"info-flow trace kept: comm stored {res._comm.shape} ({note})")
 
 
 if __name__ == "__main__":

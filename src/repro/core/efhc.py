@@ -23,7 +23,7 @@ from typing import Any, Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import consensus, mixing, triggers
+from repro.core import consensus, mixing, topology, triggers
 from repro.core.topology import GraphProcess
 from repro.kernels.mixing import ops as mixing_ops
 from repro.kernels.trigger import ops as trigger_ops
@@ -33,13 +33,20 @@ class EFHCState(NamedTuple):
     w: Any  # pytree, leaves (m, ...): per-device main models
     w_hat: Any  # pytree, leaves (m, ...): last-broadcast models
     k: jax.Array  # scalar int32 universal iteration
-    prev_adj: jax.Array  # (m, m) bool adjacency at k-1 (Event 1 detection)
+    # adjacency at k-1 for Event-1 detection: (m, m) bool dense, or the
+    # (m, d_max) ELL slot mask under a sparse mix_impl (same edge set)
+    prev_adj: jax.Array
     bandwidths: jax.Array  # (m,)
     key: jax.Array
     opt_state: Any = None
 
 
-MIX_IMPLS: tuple[str, ...] = ("dense", "delta", "pallas")
+MIX_IMPLS: tuple[str, ...] = ("dense", "delta", "pallas",
+                              "sparse", "sparse_delta", "sparse_pallas")
+# impls that run Events 1/3 in neighbor-list (ELL) layout; state.prev_adj
+# is the (m, d_max) slot mask and the (m, m) matrices exist only as
+# DCE-able debris for StepAux consumers (DESIGN.md "Sparse mixing")
+SPARSE_MIX_IMPLS: tuple[str, ...] = ("sparse", "sparse_delta", "sparse_pallas")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,7 +57,10 @@ class EFHCConfig:
     # "pallas" routes Event-3 aggregation through the fused mixing kernel and
     # the Event-2 deviation through the fused trigger kernel (DESIGN.md
     # "Pallas hot path"); "dense"/"delta" are the pure-jnp references.
-    mix_impl: str = "dense"  # dense | delta | pallas
+    # "sparse"/"sparse_delta" (pure-jnp gather) and "sparse_pallas" (fused
+    # gather-mix kernel) aggregate over the padded neighbor list instead of
+    # the (m, m) matrix -- the m >= 4096 path (DESIGN.md "Sparse mixing").
+    mix_impl: str = "dense"  # see MIX_IMPLS
     # Pallas interpret mode: None = auto (interpret off only on TPU)
     interpret: bool | None = None
 
@@ -92,6 +102,11 @@ class StepAux(NamedTuple):
     util: jax.Array  # scalar: resource utilization score
     adj: jax.Array  # (m, m) physical adjacency G^(k) (B-connectivity checks)
     consensus_err: jax.Array  # scalar: ||W - 1 w_bar||_F^2 after the update
+    # per-device row sums, first-class so summary-trace ys never touch the
+    # (m, m) matrices above (under a sparse mix_impl those are scatters
+    # that XLA dead-code-eliminates when nothing reads them)
+    comm_count: jax.Array  # (m,) int32: links used per device
+    deg: jax.Array  # (m,) int32: physical degree per device
 
 
 def step(
@@ -104,6 +119,7 @@ def step(
     alpha_k: jax.Array,
     model_dim: int,
     policy_idx: jax.Array | None = None,
+    nl: topology.NeighborList | None = None,
 ) -> tuple[EFHCState, StepAux]:
     """One universal iteration of Alg. 1 across all m devices.
 
@@ -113,13 +129,27 @@ def step(
     ``policy_idx``: optional traced index into ``triggers.POLICIES``; when
     given, the trigger policy is dispatched via ``lax.switch`` so the same
     compiled step serves every policy (vmap-able policy axis).
+
+    ``nl``: the base graph's neighbor list, required context under a sparse
+    mix_impl; callers that already built one (the engines) pass it so the
+    host-side construction isn't repeated per trace.
     """
     if cfg.mix_impl not in MIX_IMPLS:
         raise ValueError(f"unknown mix_impl {cfg.mix_impl!r}; known: {MIX_IMPLS}")
+    sparse = cfg.mix_impl in SPARSE_MIX_IMPLS
     m = state.bandwidths.shape[0]
     key, k_trig, k_grad = jax.random.split(state.key, 3)
 
-    adj = graph.adjacency(state.k)
+    if sparse:
+        if nl is None:
+            nl = graph.neighbors()  # setup-time numpy, traced in as constants
+        nbr_idx = jnp.asarray(nl.idx)
+        adj_ell = graph.adjacency_ell(state.k, nl)
+        # dense view for StepAux consumers only; dead code whenever the ys
+        # stick to the ELL-derived row sums (trace="summary")
+        adj = topology.scatter_ell(nbr_idx, adj_ell)
+    else:
+        adj = graph.adjacency(state.k)
 
     # ---- Event 2: broadcast triggers -------------------------------------
     w_flat = _flatten_stack(state.w)
@@ -142,17 +172,39 @@ def step(
 
     # ---- Event 1: neighbor connection ------------------------------------
     # Links that newly appeared vs k-1 exchange parameters unconditionally.
-    new_links = jnp.logical_and(adj, ~state.prev_adj)
-
     # ---- Event 3: aggregation over the information-flow edges ------------
-    comm = jnp.logical_or(triggers.communication_matrix(v, adj), new_links)
-    p = mixing.build_p(adj, comm)
-    if cfg.mix_impl == "pallas":
-        w_mixed = mixing_ops.mix_tree(p, state.w, interpret=cfg.pallas_interpret())
-    elif cfg.mix_impl == "delta":
-        w_mixed = consensus.mix_delta_dense(p, state.w)
+    if sparse:
+        # same event algebra, per neighbor-list slot: prev_adj is the ELL
+        # mask of G^(k-1), v_ij = v_i | v_j gathers the neighbor's trigger
+        new_links_ell = jnp.logical_and(adj_ell, ~state.prev_adj)
+        vv_ell = jnp.logical_or(v[:, None], v[nbr_idx])
+        comm_ell = jnp.logical_or(jnp.logical_and(vv_ell, adj_ell), new_links_ell)
+        p_diag, p_off = mixing.build_p_ell(nbr_idx, adj_ell, comm_ell)
+        if cfg.mix_impl == "sparse_pallas":
+            w_mixed = mixing_ops.mix_sparse_tree(nbr_idx, p_diag, p_off, state.w,
+                                                 interpret=cfg.pallas_interpret())
+        elif cfg.mix_impl == "sparse_delta":
+            w_mixed = consensus.mix_delta_sparse(nbr_idx, p_off, state.w)
+        else:
+            w_mixed = consensus.mix_sparse(nbr_idx, p_diag, p_off, state.w)
+        comm = topology.scatter_ell(nbr_idx, comm_ell)  # DCE-able, like adj
+        p = topology.scatter_ell(nbr_idx, p_off) + jnp.diag(p_diag)
+        used_i = comm_ell.sum(axis=1, dtype=jnp.int32)
+        deg_i = adj_ell.sum(axis=1, dtype=jnp.int32)
+        prev_adj_next = adj_ell
     else:
-        w_mixed = consensus.mix_dense(p, state.w)
+        new_links = jnp.logical_and(adj, ~state.prev_adj)
+        comm = jnp.logical_or(triggers.communication_matrix(v, adj), new_links)
+        p = mixing.build_p(adj, comm)
+        if cfg.mix_impl == "pallas":
+            w_mixed = mixing_ops.mix_tree(p, state.w, interpret=cfg.pallas_interpret())
+        elif cfg.mix_impl == "delta":
+            w_mixed = consensus.mix_delta_dense(p, state.w)
+        else:
+            w_mixed = consensus.mix_dense(p, state.w)
+        used_i = comm.sum(axis=1, dtype=jnp.int32)
+        deg_i = adj.sum(axis=1, dtype=jnp.int32)
+        prev_adj_next = adj
 
     # w_hat update: devices that broadcast snapshot their *pre-mix* model
     # (Alg. 1 line 12: w_hat^(k+1) = w^(k))
@@ -168,8 +220,8 @@ def step(
     w_new = jax.tree.map(lambda wm, g: (wm.astype(jnp.float32) - alpha_k * g.astype(jnp.float32)).astype(wm.dtype), w_mixed, grads)
 
     # ---- paper metrics (Sec. IV-A) ----------------------------------------
-    deg = adj.sum(axis=1).astype(jnp.float32)
-    used = comm.sum(axis=1).astype(jnp.float32)
+    deg = deg_i.astype(jnp.float32)
+    used = used_i.astype(jnp.float32)
     frac = jnp.where(deg > 0, used / jnp.maximum(deg, 1.0), 0.0)
     tx_time = jnp.mean(frac * model_dim / state.bandwidths)
     # resource utilization (Sec. IV-A): fraction of the network's aggregate
@@ -185,8 +237,9 @@ def step(
     consensus_err = jnp.sum((w_new_flat - w_new_flat.mean(0)) ** 2)
 
     new_state = EFHCState(
-        w=w_new, w_hat=w_hat_new, k=state.k + 1, prev_adj=adj,
+        w=w_new, w_hat=w_hat_new, k=state.k + 1, prev_adj=prev_adj_next,
         bandwidths=state.bandwidths, key=key, opt_state=state.opt_state,
     )
     return new_state, StepAux(v=v, comm=comm, p=p, loss=loss, tx_time=tx_time,
-                              util=util, adj=adj, consensus_err=consensus_err)
+                              util=util, adj=adj, consensus_err=consensus_err,
+                              comm_count=used_i, deg=deg_i)

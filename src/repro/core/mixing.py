@@ -40,6 +40,34 @@ def build_p(adjacency: jax.Array, comm: jax.Array) -> jax.Array:
     return transition_matrix(metropolis_weights(adjacency), comm)
 
 
+# ---------------------------------------------------------------------------
+# ELL (padded neighbor-list) forms.  The physical graph is sparse (degree
+# d << m), so the m >= 4096 engine never builds the (m, m) matrices: the
+# same Eq. 9/19 weights are computed per neighbor-list slot (see
+# ``repro.core.topology.NeighborList``; DESIGN.md "Sparse mixing").
+# ---------------------------------------------------------------------------
+
+def metropolis_weights_ell(nbr_idx: jax.Array, adj_ell: jax.Array) -> jax.Array:
+    """beta (Eq. 19) in ELL layout: (m, d_max) float32, zero on inactive
+    slots.  ``adj_ell`` is the per-iteration G^(k) slot mask; degrees are
+    its row sums, identical to the dense row sums by construction."""
+    deg = adj_ell.sum(axis=-1).astype(jnp.float32)  # d_i^(k)
+    inv = 1.0 / (1.0 + deg)
+    beta = jnp.minimum(inv[:, None], inv[nbr_idx])
+    return beta * adj_ell.astype(jnp.float32)
+
+
+def transition_ell(beta_ell: jax.Array, comm_ell: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """P^(k) (Eq. 9) in ELL layout: returns ``(p_diag (m,), p_off (m, d_max))``
+    with p_diag absorbing the off-diagonal complement."""
+    off = beta_ell * comm_ell.astype(beta_ell.dtype)
+    return 1.0 - off.sum(axis=-1), off
+
+
+def build_p_ell(nbr_idx: jax.Array, adj_ell: jax.Array, comm_ell: jax.Array) -> tuple[jax.Array, jax.Array]:
+    return transition_ell(metropolis_weights_ell(nbr_idx, adj_ell), comm_ell)
+
+
 def assert_doubly_stochastic(p: jax.Array, atol: float = 1e-6) -> None:
     import numpy as np
 

@@ -18,7 +18,7 @@ B1 and tests assert it.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -27,10 +27,84 @@ import numpy as np
 Adjacency = jax.Array  # (m, m) bool, symmetric, zero diagonal
 
 
+class NeighborList(NamedTuple):
+    """Padded (ELL-style) neighbor list of the static base graph.
+
+    ``idx``  - (m, d_max) int32: row i holds the sorted neighbor indices of
+               device i; unused slots are padded with i itself so gathers
+               stay in bounds (pad gathers read the device's own row, and
+               every consumer multiplies by ``mask`` so the value is inert).
+    ``mask`` - (m, d_max) bool: True on real neighbor slots.
+
+    Both arrays are host numpy (setup-time, like the base adjacency); they
+    enter jitted code as constants via ``jnp.asarray``.  Every time-varying
+    realization G^(k) is a subgraph of the base fabric, so a *static*
+    neighbor list plus a per-iteration slot mask (``GraphProcess.
+    adjacency_ell``) represents any G^(k) exactly.
+    """
+
+    idx: np.ndarray
+    mask: np.ndarray
+
+    @property
+    def m(self) -> int:
+        return int(self.idx.shape[0])
+
+    @property
+    def d_max(self) -> int:
+        return int(self.idx.shape[1])
+
+
+def neighbor_list(base: np.ndarray) -> NeighborList:
+    """Build the padded neighbor list of a symmetric base adjacency.
+
+    d_max is the base graph's maximum degree (>= 1 so the arrays are never
+    zero-width even on an edgeless graph)."""
+    base = np.asarray(base, bool)
+    m = base.shape[0]
+    degrees = base.sum(axis=1).astype(np.int64)
+    d_max = max(1, int(degrees.max()) if m else 1)
+    idx = np.tile(np.arange(m, dtype=np.int32)[:, None], (1, d_max))
+    mask = np.zeros((m, d_max), dtype=bool)
+    for i in range(m):
+        nbrs = np.nonzero(base[i])[0]
+        idx[i, : len(nbrs)] = nbrs
+        mask[i, : len(nbrs)] = True
+    return NeighborList(idx=idx, mask=mask)
+
+
+def scatter_ell(nbr_idx: jax.Array, vals: jax.Array) -> jax.Array:
+    """(m, d_max) ELL slot values -> dense (m, m) with zero diagonal.
+
+    Padded slots point at the row's own index and must carry zero/False
+    values (the ``NeighborList`` contract), so duplicate (i, i) updates are
+    no-ops: bool scatters via ``max``, numeric via ``add``."""
+    m = nbr_idx.shape[0]
+    rows = jnp.arange(m, dtype=nbr_idx.dtype)[:, None]
+    out = jnp.zeros((m, m), vals.dtype)
+    if vals.dtype == jnp.bool_:
+        return out.at[rows, nbr_idx].max(vals)
+    return out.at[rows, nbr_idx].add(vals)
+
+
 def _symmetrize(a: jax.Array) -> jax.Array:
     a = jnp.logical_or(a, a.T)
     m = a.shape[0]
     return jnp.logical_and(a, ~jnp.eye(m, dtype=bool))
+
+
+def _edge_uniforms(key: jax.Array, eids: jax.Array) -> jax.Array:
+    """Independent U[0,1) per canonical edge id, *random-access*: the value
+    is a pure function of (key, eid), so any layout -- the dense (m, m)
+    matrix, an ELL slot table, a single edge -- evaluates the identical
+    realization while paying only for the ids it asks for.  This is what
+    keeps the sparse engine's edge_dropout stream bit-for-bit equal to the
+    dense engine's at O(m d) instead of O(m^2) cost (a positional
+    ``uniform(key, (m, m))`` draw can only be subset via the full array)."""
+    flat = eids.reshape(-1)
+    keys = jax.vmap(jax.random.fold_in, in_axes=(None, 0))(key, flat)
+    u = jax.vmap(jax.random.uniform)(keys)
+    return u.reshape(eids.shape)
 
 
 def ring_adjacency(m: int) -> np.ndarray:
@@ -122,10 +196,11 @@ class GraphProcess:
             return base
         if self.kind == "edge_dropout":
             key = jax.random.fold_in(jax.random.PRNGKey(self.seed), jnp.asarray(k, jnp.uint32))
-            u = jax.random.uniform(key, base.shape)
-            u = jnp.triu(u, 1)
-            u = u + u.T  # symmetric uniforms
-            keep = u >= self.drop
+            m = self.m
+            i = jnp.arange(m, dtype=jnp.int32)[:, None]
+            j = jnp.arange(m, dtype=jnp.int32)[None, :]
+            eid = jnp.minimum(i, j) * m + jnp.maximum(i, j)  # symmetric id
+            keep = _edge_uniforms(key, eid) >= self.drop
             return _symmetrize(jnp.logical_and(base, keep))
         if self.kind == "partition_cycle":
             # deterministically keep edges whose (i + j) % cycle_len == k % cycle_len
@@ -139,6 +214,49 @@ class GraphProcess:
 
     def degrees(self, k: jax.Array | int) -> jax.Array:
         return self.adjacency(k).sum(axis=1).astype(jnp.int32)
+
+    def neighbors(self) -> NeighborList:
+        """Padded neighbor list of the base fabric (setup-time numpy)."""
+        return neighbor_list(self.base)
+
+    def adjacency_ell(self, k: jax.Array | int, nl: NeighborList) -> jax.Array:
+        """G^(k) as a (m, d_max) bool slot mask over the static neighbor
+        list: entry (i, s) is True iff the base edge (i, nl.idx[i, s]) is
+        present at iteration k.  Realization-exact vs ``adjacency`` (the
+        sparse engine's trajectories must match the dense engine's bit for
+        bit) at O(m d) cost for every kind: ``edge_dropout`` evaluates the
+        same random-access per-edge uniforms (``_edge_uniforms``) on the
+        slot ids only, never the (m, m) field.  Unknown future kinds fall
+        back to gathering the dense realization."""
+        mask = jnp.asarray(nl.mask)
+        if self.kind == "static":
+            return mask
+        idx = jnp.asarray(nl.idx)
+        i = jnp.arange(self.m, dtype=idx.dtype)[:, None]
+        if self.kind == "partition_cycle":
+            phase = jnp.asarray(k, jnp.int32) % self.cycle_len
+            keep = (i + idx) % self.cycle_len == phase
+            return jnp.logical_and(mask, keep)
+        if self.kind == "edge_dropout":
+            key = jax.random.fold_in(jax.random.PRNGKey(self.seed), jnp.asarray(k, jnp.uint32))
+            eid = jnp.minimum(i, idx) * self.m + jnp.maximum(i, idx)
+            keep = _edge_uniforms(key, eid) >= self.drop
+            return jnp.logical_and(mask, keep)
+        a = self.adjacency(k)
+        return jnp.logical_and(mask, a[i, idx])
+
+
+def fleet_radius(m: int) -> float:
+    """RGG radius ladder shared by the fleet benchmark and examples: the
+    paper's 0.4 for small fleets, 0.15 mid-scale, then degree-targeted
+    (expected degree m*pi*r^2 pinned at ~24, i.e. a fixed radio range) so
+    large fleets stay physically sparse instead of growing degree linearly
+    with m -- the regime where neighbor-list mixing pays."""
+    if m <= 64:
+        return 0.4
+    if m <= 256:
+        return 0.15
+    return float(np.sqrt(24.0 / (np.pi * m)))
 
 
 def make_process(

@@ -103,7 +103,10 @@ class SimConfig:
     sigma_n: float = 0.9
     alpha0: float = 0.1
     seed: int = 0
-    mix_impl: str = "dense"  # dense | delta | pallas (fused kernels)
+    # dense | delta | pallas (fused kernels) | sparse | sparse_delta |
+    # sparse_pallas (neighbor-list aggregation, the m >= 4096 path --
+    # DESIGN.md "Sparse mixing"); see efhc.MIX_IMPLS
+    mix_impl: str = "dense"
     # link-matrix trajectory storage: "full" (T, m, m) bool, "packed"
     # bit-packed uint32 words (8x smaller, lossless), "summary" per-device
     # counts only (O(T m); required for m >~ 512 horizons) -- DESIGN.md
@@ -245,6 +248,8 @@ def make_engine(
     model_dim = _model_dim(sim)
     x_all, y_all = jnp.asarray(x), jnp.asarray(y)
     eval_dev = eval_fn.device if isinstance(eval_fn, EvalFn) else eval_fn
+    # sparse impls carry Event-1 state as the ELL slot mask of G^(k-1)
+    nl = graph.neighbors() if cfg.mix_impl in efhc.SPARSE_MIX_IMPLS else None
 
     def engine(policy_idx, seed, idx):
         policy_idx = jnp.asarray(policy_idx, jnp.int32)
@@ -253,18 +258,21 @@ def make_engine(
         bw = triggers.sample_bandwidths(k_bw, m, sim.b_mean, sim.sigma_n)
         keys = jax.random.split(k_init, m)
         w0 = jax.vmap(lambda k: init_fn(k, sim.dim, sim.n_classes))(keys)
-        state = efhc.init_state(w0, bw, graph.adjacency(0), k_state)
+        adj0 = graph.adjacency(0) if nl is None else graph.adjacency_ell(0, nl)
+        state = efhc.init_state(w0, bw, adj0, k_state)
         alphas = sched(jnp.arange(T))
 
         def trace_ys(aux: efhc.StepAux) -> dict:
             """Per-iteration scan ys: the (m, m) float P matrix is never
             carried (SimResult doesn't expose it) and the bool link matrices
             are stored per ``sim.trace`` -- dense, bit-packed uint32 words,
-            or row-sum summaries only (DESIGN.md "Trace modes")."""
+            or row-sum summaries only (DESIGN.md "Trace modes").  The row
+            sums come from StepAux directly, so under trace="summary" the
+            ys never touch aux.comm/aux.adj at all -- which is what lets
+            the sparse mix impls dead-code-eliminate the dense scatters."""
             ys = {"loss": aux.loss, "tx_time": aux.tx_time, "util": aux.util,
                   "v": aux.v, "consensus_err": aux.consensus_err,
-                  "comm_count": aux.comm.sum(-1).astype(jnp.int32),
-                  "deg": aux.adj.sum(-1).astype(jnp.int32)}
+                  "comm_count": aux.comm_count, "deg": aux.deg}
             if trace == "full":
                 ys["comm"], ys["adj"] = aux.comm, aux.adj
             elif trace == "packed":
@@ -277,7 +285,7 @@ def make_engine(
             batch = (x_all[ix], y_all[ix])
             st, aux = efhc.step(cfg, graph, st, grad_fn=grad_fn, batch=batch,
                                 alpha_k=alpha, model_dim=model_dim,
-                                policy_idx=policy_idx)
+                                policy_idx=policy_idx, nl=nl)
             return st, trace_ys(aux)
 
         def eval_acc(st):
@@ -427,11 +435,14 @@ def _run_python(
 
     cfg = _efhc_cfg(sim)
     sched = paper_diminishing(sim.alpha0, gamma=1.0, theta=0.5)
-    state = efhc.init_state(w0, bw, graph.adjacency(0), k_state)
+    nl = graph.neighbors() if cfg.mix_impl in efhc.SPARSE_MIX_IMPLS else None
+    adj0 = graph.adjacency(0) if nl is None else graph.adjacency_ell(0, nl)
+    state = efhc.init_state(w0, bw, adj0, k_state)
 
     step_jit = jax.jit(
         lambda st, batch, alpha: efhc.step(
-            cfg, graph, st, grad_fn=grad_fn, batch=batch, alpha_k=alpha, model_dim=model_dim
+            cfg, graph, st, grad_fn=grad_fn, batch=batch, alpha_k=alpha,
+            model_dim=model_dim, nl=nl
         )
     )
 

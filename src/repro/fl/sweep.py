@@ -17,6 +17,12 @@ per seed on the host (numpy rng) and gathered on device inside the scan.
 ``run_sweep`` returns a ``SweepResult`` holding the (S, P, T, ...) metric
 stack; ``SweepResult.result(seed, policy)`` slices out a standard
 ``SimResult`` so downstream plotting/benchmark code is unchanged.
+
+Fleet scale rides the same two SimConfig knobs as single runs: sweeps at
+m >= 1024 want ``trace="summary"`` (the ys stay O(T m) per cell) and
+``mix_impl="sparse"`` (neighbor-list Event-3, O(m d n) per iteration --
+DESIGN.md "Sparse mixing"); the grid cells stay parity-exact with their
+dense single-run counterparts (tests/test_scan_parity.py).
 """
 from __future__ import annotations
 

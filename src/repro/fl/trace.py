@@ -19,7 +19,9 @@ that:
                 which is all the paper's tx-time / utilization /
                 B-connectivity-count metrics need.
 
-Packing runs under jit/vmap (pure jnp); unpacking is host-side numpy.
+Packing runs under jit/vmap (pure jnp); unpacking is host-side numpy, and
+``popcount_words``/``stored_link_counts`` serve per-row link counts straight
+from the packed uint32 words without ever unpacking.
 """
 from __future__ import annotations
 
@@ -83,6 +85,40 @@ def unpack_links(packed: np.ndarray, m: int) -> np.ndarray:
     by = p.view(np.uint8)  # (..., W*4) little-endian bytes
     bits = np.unpackbits(by, axis=-1, bitorder="little")  # (..., W*32) uint8
     return bits[..., :m].astype(bool)
+
+
+# 8-bit popcount lookup for numpy < 2.0 (no np.bitwise_count)
+_POP8 = np.unpackbits(np.arange(256, dtype=np.uint8)[:, None],
+                      axis=1).sum(axis=1).astype(np.int32)
+
+
+def popcount_words(packed: np.ndarray) -> np.ndarray:
+    """(..., W) uint32 packed rows -> (...,) int32 set-bit counts.
+
+    Counts straight on the words -- no lossless unpack, so the transient is
+    the word array itself (1/8 the bool expansion ``unpack_links`` would
+    allocate).  The zero-padded tail bits of the last partial word never
+    contribute.  Uses ``np.bitwise_count`` (numpy >= 2.0) with a uint8
+    table-lookup fallback."""
+    p = np.ascontiguousarray(np.asarray(packed)).astype("<u4", copy=False)
+    if hasattr(np, "bitwise_count"):
+        return np.bitwise_count(p).sum(axis=-1, dtype=np.int32)
+    return _POP8[p.view(np.uint8)].sum(axis=-1, dtype=np.int32)
+
+
+def stored_link_counts(stored: np.ndarray | None, trace: str, name: str) -> np.ndarray:
+    """Per-row link counts straight from a stored trajectory: ``full`` rows
+    are summed, ``packed`` rows are popcounted on the uint32 words (never
+    unpacked), ``summary`` raises -- use the recorded ``comm_count``/``deg``
+    trajectories instead (they exist in every mode)."""
+    if trace == "summary":
+        raise ValueError(
+            f"{name} link matrices were not recorded with trace='summary'; "
+            "the per-device counts are already first-class (comm_count/deg)")
+    assert stored is not None, f"{name} missing from a {trace!r}-trace result"
+    if trace == "packed":
+        return popcount_words(stored)
+    return np.asarray(stored, bool).sum(axis=-1, dtype=np.int32)
 
 
 def link_dtype(trace: str):

@@ -1,14 +1,17 @@
-"""Fused consensus-mixing Pallas kernel:  OUT = P @ W  (paper Eq. 8/10).
+"""Fused consensus-mixing Pallas kernels (paper Eq. 8/10).
 
-The per-step EF-HC aggregation multiplies the tiny doubly-stochastic
-transition matrix P (m x m, m = #FL devices <= 64) into the stacked flat
-parameter matrix W (m x n, n = model dim, huge).  On TPU this is a
-skinny-matmul streaming workload: W is tiled along n into MXU-aligned
+``mix_pallas`` - dense OUT = P @ W: the doubly-stochastic transition matrix
+P (m x m) into the stacked flat parameter matrix W (m x n).  On TPU this is
+a skinny-matmul streaming workload: W is tiled along n into MXU-aligned
 (m x bn) VMEM blocks; P stays resident in VMEM for every grid step.
 
-Grid: (n // bn,).  Arithmetic intensity is ~m flops/byte, so the kernel is
-HBM-bound; the point of fusing (vs XLA default) is to avoid materializing
-the (w_j - w_i) delta tensor in HBM for the delta form.
+``mix_sparse_pallas`` - the m >= 4096 path: P in padded neighbor-list (ELL)
+layout, a gather + slot-loop segment reduce costing O(m d_max) per element
+column instead of O(m^2) (DESIGN.md "Sparse mixing").
+
+Grid: (n // bn,).  Arithmetic intensity is ~m (dense) or ~d_max (sparse)
+flops/byte, so both kernels are HBM-bound; the point of fusing (vs XLA
+default) is to keep every intermediate out of HBM.
 """
 from __future__ import annotations
 
@@ -44,3 +47,56 @@ def mix_pallas(p: jax.Array, w: jax.Array, *, block_n: int = 512,
         out_shape=jax.ShapeDtypeStruct((m, n), w.dtype),
         interpret=interpret,
     )(p, w)
+
+
+def _mix_sparse_kernel(idx_ref, pd_ref, po_ref, w_ref, o_ref):
+    """Gather-mix over the padded neighbor list for one (m, bn) column
+    block of W.  The whole row set stays VMEM-resident (sparse fleets are
+    many small models: m * bn floats, bounded by block_n), and the slot
+    loop gathers one neighbor column at a time so the accumulator is the
+    only other (m, bn) live value -- the O(m d_max n) dense-gather
+    intermediate never exists."""
+    w = w_ref[...].astype(jnp.float32)    # (m, bn), all rows resident
+    idx = idx_ref[...]                    # (m, d_max) int32, self-padded
+    po = po_ref[...].astype(jnp.float32)  # (m, d_max), zero on pad slots
+    acc = pd_ref[...].astype(jnp.float32) * w  # (m, 1) diagonal term
+
+    def body(s, acc):
+        j = jax.lax.dynamic_slice_in_dim(idx, s, 1, axis=1)[:, 0]
+        ps = jax.lax.dynamic_slice_in_dim(po, s, 1, axis=1)
+        return acc + ps * jnp.take(w, j, axis=0)
+
+    acc = jax.lax.fori_loop(0, idx.shape[1], body, acc)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def mix_sparse_pallas(nbr_idx: jax.Array, p_diag: jax.Array, p_off: jax.Array,
+                      w: jax.Array, *, block_n: int = 256,
+                      interpret: bool = False) -> jax.Array:
+    """ELL consensus mixing: out = diag(p_diag) w + scatter(p_off) w.
+
+    nbr_idx (m, d_max) int32 neighbor list (padded with the own row index);
+    p_diag (m, 1) float32; p_off (m, d_max) float32 with zeros on padded /
+    inactive slots; w (m, n), n a multiple of block_n (the ops wrapper
+    pads).  The default block is half the dense kernel's: W appears twice
+    in VMEM (resident rows + accumulator), and m is large here.  Row
+    gathers lower through ``jnp.take``; validated in interpret mode off-TPU
+    like every kernel in this package."""
+    m, n = w.shape
+    assert n % block_n == 0, (n, block_n)
+    d_max = nbr_idx.shape[1]
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        _mix_sparse_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, d_max), lambda i: (0, 0)),  # neighbor ids resident
+            pl.BlockSpec((m, 1), lambda i: (0, 0)),      # diagonal resident
+            pl.BlockSpec((m, d_max), lambda i: (0, 0)),  # off-diag weights
+            pl.BlockSpec((m, block_n), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((m, block_n), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((m, n), w.dtype),
+        interpret=interpret,
+    )(nbr_idx, p_diag, p_off, w)

@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import aligned_block
-from repro.kernels.mixing.kernel import mix_pallas
+from repro.kernels.mixing.kernel import mix_pallas, mix_sparse_pallas
 
 
 def mix(p: jax.Array, w: jax.Array, *, block_n: int = 512,
@@ -27,5 +27,33 @@ def mix_tree(p: jax.Array, tree, *, block_n: int = 512, interpret: bool = False)
         m = leaf.shape[0]
         flat = leaf.reshape(m, -1)
         return mix(p, flat, block_n=block_n, interpret=interpret).reshape(leaf.shape)
+
+    return jax.tree.map(one, tree)
+
+
+def mix_sparse(nbr_idx: jax.Array, p_diag: jax.Array, p_off: jax.Array,
+               w: jax.Array, *, block_n: int = 256,
+               interpret: bool = False) -> jax.Array:
+    """ELL gather-mix: nbr_idx/p_off (m, d_max), p_diag (m,), w (m, n);
+    pads n up to a block multiple."""
+    m, n = w.shape
+    block_n = aligned_block(n, block_n)
+    pad = (-n) % block_n
+    wp = jnp.pad(w, ((0, 0), (0, pad))) if pad else w
+    out = mix_sparse_pallas(nbr_idx.astype(jnp.int32),
+                            p_diag.astype(jnp.float32).reshape(m, 1),
+                            p_off.astype(jnp.float32), wp,
+                            block_n=block_n, interpret=interpret)
+    return out[:, :n] if pad else out
+
+
+def mix_sparse_tree(nbr_idx: jax.Array, p_diag: jax.Array, p_off: jax.Array,
+                    tree, *, block_n: int = 256, interpret: bool = False):
+    """Leaf-wise ``mix_sparse`` over a stacked parameter pytree."""
+    def one(leaf):
+        m = leaf.shape[0]
+        flat = leaf.reshape(m, -1)
+        return mix_sparse(nbr_idx, p_diag, p_off, flat, block_n=block_n,
+                          interpret=interpret).reshape(leaf.shape)
 
     return jax.tree.map(one, tree)

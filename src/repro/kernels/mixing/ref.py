@@ -1,7 +1,18 @@
-"""Pure-jnp oracle for the mixing kernel."""
+"""Pure-jnp oracles for the mixing kernels."""
 import jax
 import jax.numpy as jnp
 
 
 def mix_ref(p: jax.Array, w: jax.Array) -> jax.Array:
     return (p.astype(jnp.float32) @ w.astype(jnp.float32)).astype(w.dtype)
+
+
+def mix_sparse_ref(nbr_idx: jax.Array, p_diag: jax.Array, p_off: jax.Array,
+                   w: jax.Array) -> jax.Array:
+    """Dense-gather oracle of the ELL mixing: diag term + one (m, d_max, n)
+    einsum (memory-hungry on purpose -- it is the intermediate the kernel
+    exists to avoid)."""
+    wf = w.astype(jnp.float32)
+    out = p_diag.astype(jnp.float32).reshape(-1, 1) * wf
+    out = out + jnp.einsum("ms,msn->mn", p_off.astype(jnp.float32), wf[nbr_idx])
+    return out.astype(w.dtype)

@@ -1,0 +1,133 @@
+"""The CI benchmark-regression gate must demonstrably fire: a synthetic
+slowed-down benchmark file fails `benchmarks/check_regression.py`, a
+matching-or-faster one passes, and the delta table records every verdict.
+
+The benchmarks directory is not a package; import the module by path so the
+gate logic is unit-testable without touching sys.path.
+"""
+import importlib.util
+import json
+import pathlib
+
+import pytest
+
+_CR_PATH = pathlib.Path(__file__).parent.parent / "benchmarks" / "check_regression.py"
+_spec = importlib.util.spec_from_file_location("check_regression", _CR_PATH)
+check_regression = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(check_regression)
+
+
+def _doc(entries):
+    return {"benchmark": "fleet_scale", "backend": "cpu", "dim": 32,
+            "entries": entries}
+
+
+def _entry(m, trace, mix_impl, ips):
+    return {"m": m, "trace": trace, "mix_impl": mix_impl,
+            "iters": 12, "iters_per_sec": ips}
+
+
+REF = _doc([
+    _entry(16, "full", "dense", 1000.0),
+    _entry(256, "packed", "dense", 40.0),
+    _entry(1024, "summary", "sparse", 30.0),
+])
+
+
+def test_compare_passes_within_threshold():
+    new = _doc([
+        _entry(16, "full", "dense", 700.0),     # 30% slower: inside 35%
+        _entry(256, "packed", "dense", 41.0),   # faster
+    ])
+    rows, regressions = check_regression.compare(REF, new, threshold=0.35)
+    assert regressions == []
+    assert [r["status"] for r in rows] == ["ok", "ok"]
+
+
+def test_compare_flags_slowdown_beyond_threshold():
+    new = _doc([
+        _entry(16, "full", "dense", 600.0),     # 40% slower: regression
+        _entry(256, "packed", "dense", 40.0),
+    ])
+    rows, regressions = check_regression.compare(REF, new, threshold=0.35)
+    assert len(regressions) == 1
+    assert regressions[0]["m"] == 16
+    assert regressions[0]["slowdown"] == pytest.approx(0.4)
+
+
+def test_compare_matches_on_m_trace_and_impl():
+    """A fresh entry only compares against the pinned point with the same
+    (m, trace, mix_impl); anything else is 'new', never a regression."""
+    new = _doc([
+        _entry(256, "packed", "sparse", 1.0),    # impl differs from pinned
+        _entry(2048, "summary", "sparse", 5.0),  # m not pinned at all
+        _entry(1024, "summary", "sparse", 29.0),
+    ])
+    rows, regressions = check_regression.compare(REF, new, threshold=0.35)
+    assert regressions == []
+    assert [r["status"] for r in rows] == ["new", "new", "ok"]
+
+
+def test_compare_legacy_entries_default_to_dense():
+    ref = _doc([{"m": 16, "trace": "full", "iters_per_sec": 100.0}])
+    new = _doc([_entry(16, "full", "dense", 10.0)])
+    _, regressions = check_regression.compare(ref, new)
+    assert len(regressions) == 1
+
+
+def test_main_exit_codes_and_summary(tmp_path, monkeypatch):
+    """End-to-end: the gate exits 1 on a slowed-down file, 0 otherwise, and
+    writes the markdown delta table to --summary in both cases."""
+    # main() also appends to $GITHUB_STEP_SUMMARY when set -- don't pollute
+    # a real CI job summary with these synthetic tables
+    monkeypatch.delenv("GITHUB_STEP_SUMMARY", raising=False)
+    ref_f = tmp_path / "ref.json"
+    ref_f.write_text(json.dumps(REF))
+
+    slow = _doc([_entry(1024, "summary", "sparse", 10.0)])  # 3x slower
+    slow_f = tmp_path / "slow.json"
+    slow_f.write_text(json.dumps(slow))
+    summary = tmp_path / "delta.md"
+    rc = check_regression.main(["--ref", str(ref_f), "--new", str(slow_f),
+                                "--summary", str(summary)])
+    assert rc == 1
+    text = summary.read_text()
+    assert "regression" in text and "| 1024 |" in text
+
+    ok = _doc([_entry(1024, "summary", "sparse", 31.0)])
+    ok_f = tmp_path / "ok.json"
+    ok_f.write_text(json.dumps(ok))
+    summary2 = tmp_path / "delta_ok.md"
+    rc = check_regression.main(["--ref", str(ref_f), "--new", str(ok_f),
+                                "--summary", str(summary2)])
+    assert rc == 0
+    assert "ok" in summary2.read_text()
+
+
+def test_main_fails_when_nothing_matches(tmp_path, monkeypatch):
+    """A gate that compares nothing must fail: grid/key drift (typo'd
+    --sizes, renamed trace mode) cannot silently disable the check."""
+    monkeypatch.delenv("GITHUB_STEP_SUMMARY", raising=False)
+    ref_f = tmp_path / "ref.json"
+    ref_f.write_text(json.dumps(REF))
+    new_f = tmp_path / "new.json"
+    new_f.write_text(json.dumps(_doc([_entry(512, "summary", "sparse", 9.0)])))
+    rc = check_regression.main(["--ref", str(ref_f), "--new", str(new_f)])
+    assert rc == 1
+
+
+def test_pinned_reference_has_the_m_scaling_grid():
+    """The checked-in BENCH_fleet.json must carry the m=2048/4096 sparse
+    points and show sparse beating dense at every m >= 1024 measured on
+    both (the acceptance claim this PR pins)."""
+    pinned = json.loads((_CR_PATH.parent.parent / "BENCH_fleet.json").read_text())
+    by_key = {check_regression.entry_key(e): e for e in pinned["entries"]}
+    assert any(k[0] == 2048 for k in by_key)
+    assert any(k[0] == 4096 for k in by_key)
+    for (m, trace, impl), e in by_key.items():
+        if impl != "sparse" or m < 1024:
+            continue
+        dense = by_key.get((m, trace, "dense"))
+        if dense is not None:
+            assert e["iters_per_sec"] > dense["iters_per_sec"], \
+                f"sparse must beat dense at m={m}"

@@ -145,6 +145,66 @@ def test_sweep_packed_matches_full(setup):
         _assert_results_match(packed.result(0, policy), full.result(0, policy))
 
 
+@pytest.mark.parametrize("kind", ["static", "edge_dropout", "partition_cycle"])
+@pytest.mark.parametrize("impl", ["sparse", "sparse_delta", "sparse_pallas"])
+def test_sparse_mixing_matches_dense(setup, kind, impl):
+    """Neighbor-list (ELL) aggregation must reproduce the dense engine's
+    full trajectory for every time-varying graph kind: the per-iteration
+    graph realization is shared bit-for-bit (the ELL mask is a gather of
+    the same draw) and the mixing differs only in fp32 summation order."""
+    sim, _, batches, eval_fn = setup
+    kw = {"edge_dropout": dict(drop=0.3), "partition_cycle": dict(cycle_len=2)}
+    graph = make_process(M, "rgg", time_varying=kind, seed=0,
+                         **kw.get(kind, {}))
+    dense = run(sim, graph, batches(), eval_fn, eval_every=EVAL_EVERY)
+    sparse = run(dataclasses.replace(sim, mix_impl=impl), graph, batches(),
+                 eval_fn, eval_every=EVAL_EVERY)
+    _assert_results_match(sparse, dense)
+
+
+def test_sparse_python_engine_matches_scan(setup):
+    """The legacy loop also routes sparse impls (ELL prev_adj init)."""
+    sim, graph, batches, eval_fn = setup
+    cfg = dataclasses.replace(sim, mix_impl="sparse")
+    scan = run(cfg, graph, batches(), eval_fn, eval_every=EVAL_EVERY)
+    ref = run(cfg, graph, batches(), eval_fn, eval_every=EVAL_EVERY,
+              engine="python")
+    _assert_results_match(scan, ref)
+
+
+def test_sweep_sparse_matches_dense(setup):
+    """The vmapped seeds x policies grid built on a sparse engine must
+    equal the dense grid cell-for-cell."""
+    sim, graph, batches, eval_fn = setup
+    kw = dict(seeds=(0,), policies=("efhc", "gossip"), eval_every=EVAL_EVERY)
+    dense = run_sweep(sim, graph, lambda s: batches(), eval_fn, **kw)
+    sparse = run_sweep(dataclasses.replace(sim, mix_impl="sparse"), graph,
+                       lambda s: batches(), eval_fn, **kw)
+    for policy in dense.policies:
+        _assert_results_match(sparse.result(0, policy), dense.result(0, policy))
+
+
+def test_sparse_at_m256_summary_matches_dense():
+    """Acceptance: at m = 256 (summary trace, the at-scale configuration)
+    the sparse engine's trajectories match the dense engine's within fp32
+    tolerance -- including the exact per-device link counts."""
+    from repro.data.synthetic import image_dataset
+
+    m, T, dim = 256, 5, 32
+    x, y = image_dataset(1024, seed=0, dim=dim)
+    rng = np.random.default_rng(0)
+    parts = [np.sort(p) for p in np.array_split(rng.permutation(len(y)), m)]
+    graph = make_process(m, "rgg", radius=0.15, time_varying="edge_dropout",
+                         drop=0.3, seed=0)
+    sim = SimConfig(m=m, iters=T, dim=dim, r=50.0, seed=0, trace="summary")
+    mk = lambda: FederatedBatches(x, y, parts, sim.batch, seed=2)
+
+    dense = run(sim, graph, mk(), None, eval_every=T)
+    sparse = run(dataclasses.replace(sim, mix_impl="sparse"), graph, mk(),
+                 None, eval_every=T)
+    _assert_results_match(sparse, dense, link_fields=("v",))
+
+
 def test_engine_cache_shares_equal_valued_graphs(setup):
     """Two structurally identical GraphProcess instances (frozen dataclass,
     equal fields + base bytes) must hit ONE cache entry - the old id(graph)

@@ -3,7 +3,9 @@ import pytest
 
 from repro.core import flow
 from repro.core.topology import (GraphProcess, complete_adjacency, erdos_renyi_adjacency,
-                                 make_process, random_geometric_adjacency, ring_adjacency)
+                                 make_process, neighbor_list,
+                                 random_geometric_adjacency, ring_adjacency,
+                                 scatter_ell)
 
 
 @pytest.mark.parametrize("topology", ["rgg", "er", "ring", "complete"])
@@ -39,3 +41,55 @@ def test_degrees_match_adjacency():
     g = make_process(6, "rgg", seed=1)
     a = np.asarray(g.adjacency(0))
     assert (np.asarray(g.degrees(0)) == a.sum(1)).all()
+
+
+# ---------------------------------------------------- neighbor lists (ELL) --
+
+@pytest.mark.parametrize("topology", ["rgg", "er", "ring"])
+def test_neighbor_list_layout(topology):
+    g = make_process(11, topology, seed=4)
+    nl = neighbor_list(g.base)
+    assert nl.idx.shape == nl.mask.shape == (11, nl.d_max)
+    assert nl.d_max == int(g.base.sum(1).max())
+    for i in range(11):
+        nbrs = set(np.nonzero(g.base[i])[0])
+        assert set(nl.idx[i, nl.mask[i]]) == nbrs, "real slots = neighbors"
+        assert (nl.idx[i, ~nl.mask[i]] == i).all(), "pad slots self-index"
+    assert (nl.mask.sum(1) == g.base.sum(1)).all()
+
+
+@pytest.mark.parametrize("kind,kw", [
+    ("static", {}),
+    ("edge_dropout", {"drop": 0.4}),
+    ("partition_cycle", {"cycle_len": 3}),
+])
+def test_adjacency_ell_matches_dense_realization(kind, kw):
+    """The ELL slot mask must be the *same realization* as the dense
+    adjacency at every k -- the sparse engine's graph stream is a gather of
+    the dense one, not a re-draw."""
+    g = make_process(9, "rgg", time_varying=kind, seed=2, **kw)
+    nl = g.neighbors()
+    for k in range(5):
+        dense = np.asarray(g.adjacency(k))
+        ell = np.asarray(g.adjacency_ell(k, nl))
+        assert ell.shape == nl.mask.shape
+        assert not ell[~nl.mask].any(), "pad slots never active"
+        scattered = np.asarray(scatter_ell(np.asarray(nl.idx), ell))
+        assert (scattered == dense).all(), f"k={k}: ELL != dense realization"
+
+
+def test_scatter_ell_bool_and_float_roundtrip():
+    g = make_process(8, "rgg", seed=6)
+    nl = neighbor_list(g.base)
+    rng = np.random.default_rng(0)
+    vals_b = nl.mask & (rng.random(nl.mask.shape) < 0.5)
+    dense_b = np.asarray(scatter_ell(np.asarray(nl.idx), np.asarray(vals_b)))
+    assert not dense_b.diagonal().any()
+    vals_f = np.where(nl.mask, rng.random(nl.mask.shape), 0.0).astype(np.float32)
+    dense_f = np.asarray(scatter_ell(np.asarray(nl.idx), np.asarray(vals_f)))
+    assert (dense_f.diagonal() == 0).all()
+    for i in range(8):
+        for s in range(nl.d_max):
+            if nl.mask[i, s]:
+                assert dense_b[i, nl.idx[i, s]] == vals_b[i, s]
+                assert dense_f[i, nl.idx[i, s]] == vals_f[i, s]

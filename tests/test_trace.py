@@ -52,6 +52,43 @@ def test_stored_links_summary_raises():
         trace.stored_links(None, "summary", 4, "comm")
 
 
+@pytest.mark.parametrize("m", [1, 5, 31, 32, 33, 64, 100])
+def test_popcount_matches_unpacked_path(m):
+    """Parity: counting set bits straight on the uint32 words must equal
+    unpacking losslessly and summing -- including the zero-padded tail bits
+    of a partial last word."""
+    rng = np.random.default_rng(m)
+    b = rng.random((4, 7, m)) < 0.4
+    packed = trace.pack_links_np(b)
+    counts = trace.popcount_words(packed)
+    assert counts.dtype == np.int32 and counts.shape == (4, 7)
+    assert (counts == trace.unpack_links(packed, m).sum(-1)).all()
+    assert (counts == b.sum(-1)).all()
+
+
+def test_popcount_table_fallback_matches_bitwise_count():
+    """The numpy<2 uint8-table fallback must agree with np.bitwise_count."""
+    rng = np.random.default_rng(0)
+    words = rng.integers(0, 2 ** 32, size=(5, 9), dtype=np.uint32)
+    table = trace._POP8[np.ascontiguousarray(words).view(np.uint8)
+                        ].sum(axis=-1, dtype=np.int32)
+    assert (trace.popcount_words(words) == table).all()
+
+
+@pytest.mark.parametrize("mode", ["full", "packed"])
+def test_stored_link_counts_serves_counts_without_unpack(mode):
+    rng = np.random.default_rng(3)
+    b = rng.random((6, 33, 33)) < 0.3
+    stored = trace.pack_links_np(b) if mode == "packed" else b
+    counts = trace.stored_link_counts(stored, mode, "comm")
+    assert (counts == b.sum(-1)).all()
+
+
+def test_stored_link_counts_summary_raises():
+    with pytest.raises(ValueError, match="summary"):
+        trace.stored_link_counts(None, "summary", "comm")
+
+
 def test_packed_trace_at_m256_matches_full():
     """Acceptance: run() with trace='packed' at m=256 equals trace='full'
     after unpacking (and the packed ys really are 8x smaller)."""
