@@ -52,12 +52,21 @@ def compare(ref_doc: dict, new_doc: dict, threshold: float = 0.35) -> tuple[list
     rows, regressions = [], []
     for e in new_doc.get("entries", []):
         key = entry_key(e)
+        if "iters_per_sec" not in e:
+            # staging-only entry (edge-list/neighbor-list build time, no
+            # simulation): informational, never gated -- staging walls are
+            # sub-second and would flake any relative threshold
+            rows.append({"m": key[0], "trace": key[1], "mix_impl": key[2],
+                         "new_ips": None, "ref_ips": None, "slowdown": None,
+                         "staging_sec": e.get("staging_sec"),
+                         "status": "staging"})
+            continue
         new_ips = float(e["iters_per_sec"])
         row = {"m": key[0], "trace": key[1], "mix_impl": key[2],
                "new_ips": new_ips, "ref_ips": None, "slowdown": None,
                "status": "new"}
         match = ref.get(key)
-        if match is not None:
+        if match is not None and "iters_per_sec" in match:
             ref_ips = float(match["iters_per_sec"])
             slowdown = 1.0 - new_ips / ref_ips
             row.update(ref_ips=ref_ips, slowdown=slowdown,
@@ -78,9 +87,15 @@ def markdown_table(rows: list[dict], threshold: float) -> str:
     for r in rows:
         ref = "—" if r["ref_ips"] is None else f"{r['ref_ips']:.2f}"
         delta = "—" if r["slowdown"] is None else f"{-r['slowdown']:+.1%}"
-        mark = {"ok": "✅ ok", "new": "🆕 new", "regression": "❌ regression"}[r["status"]]
+        mark = {"ok": "✅ ok", "new": "🆕 new", "regression": "❌ regression",
+                "staging": "🧱 staging"}[r["status"]]
+        if r["status"] == "staging":
+            new = (f"staged {r['staging_sec']:.2f}s"
+                   if r.get("staging_sec") is not None else "staged")
+        else:
+            new = f"{r['new_ips']:.2f}"
         lines.append(f"| {r['m']} | {r['trace']} | {r['mix_impl']} | {ref} "
-                     f"| {r['new_ips']:.2f} | {delta} | {mark} |")
+                     f"| {new} | {delta} | {mark} |")
     return "\n".join(lines) + "\n"
 
 
@@ -114,7 +129,7 @@ def main(argv: list[str] | None = None) -> int:
         with open(target, "a") as f:
             f.write(table)
 
-    if not any(r["status"] != "new" for r in rows):
+    if not any(r["status"] in ("ok", "regression") for r in rows):
         # a gate that compares nothing is a disabled gate: fail loudly so a
         # grid typo / key rename cannot silently turn CI green
         print("ERROR: no fresh entry matched the pinned reference grid "

@@ -26,7 +26,7 @@ import time
 import numpy as np
 
 from repro.core.efhc import MIX_IMPLS
-from repro.core.topology import fleet_radius, make_process, neighbor_list
+from repro.core.topology import fleet_radius, make_process
 from repro.data.loader import FederatedBatches
 from repro.data.partition import by_labels
 from repro.data.synthetic import image_dataset
@@ -61,9 +61,10 @@ def main():
 
     per_iter = link_bytes_per_iter(m, args.trace)
     full_iter = link_bytes_per_iter(m, "full")
-    nl = neighbor_list(graph.base)
+    nl = graph.neighbors()  # edge-native: no dense (m, m) staging view
     print(f"fleet: m={m}, T={args.iters}, trace={args.trace}, "
-          f"mix_impl={args.mix_impl}, base d_max={nl.d_max}")
+          f"mix_impl={args.mix_impl}, base edges={graph.edges.n_edges}, "
+          f"d_max={nl.d_max}")
     print(f"link-trace memory: {per_iter * args.iters / 1e6:.1f} MB "
           f"(dense would be {full_iter * args.iters / 1e6:.1f} MB)")
 

@@ -135,18 +135,30 @@ def mix_psum_weighted(w_local, p_col_entry: jax.Array, axis_name: str):
     return jax.tree.map(mix_leaf, w_local)
 
 
-def edge_coloring(adjacency: np.ndarray) -> list[list[tuple[int, int]]]:
+def edge_coloring(adjacency) -> list[list[tuple[int, int]]]:
     """Misra-Gries proper edge coloring of the static base graph: returns
     rounds of vertex-disjoint edges (matchings) that partition the edge set,
     using at most maxdeg + 1 colors (Vizing's bound, which this algorithm
     *guarantees* -- a greedy first-fit can need up to 2*maxdeg - 1).  Each
-    round becomes one ppermute (pairwise swap) in ``mix_neighbors``."""
-    adjacency = np.asarray(adjacency, bool)
-    m = adjacency.shape[0]
-    edges = [(i, j) for i in range(m) for j in range(i + 1, m) if adjacency[i, j]]
+    round becomes one ppermute (pairwise swap) in ``mix_neighbors``.
+
+    Accepts the canonical ``topology.EdgeList`` (the staging-native form --
+    edges and maxdeg read off directly, no O(m^2) dense scan) or a dense
+    symmetric adjacency (legacy input)."""
+    from repro.core.topology import EdgeList
+
+    if isinstance(adjacency, EdgeList):
+        m = adjacency.m
+        edges = list(zip(adjacency.u.tolist(), adjacency.v.tolist()))
+        maxdeg = int(adjacency.degrees().max()) if edges else 0
+    else:
+        adjacency = np.asarray(adjacency, bool)
+        m = adjacency.shape[0]
+        edges = [(i, j) for i in range(m) for j in range(i + 1, m) if adjacency[i, j]]
+        maxdeg = int(adjacency.sum(1).max()) if edges else 0
     if not edges:
         return []
-    ncolors = int(adjacency.sum(1).max()) + 1
+    ncolors = maxdeg + 1
     # incident[x][c] = the neighbor reached from x over the c-colored edge
     incident: list[dict[int, int]] = [{} for _ in range(m)]
     color: dict[frozenset, int] = {}

@@ -132,7 +132,10 @@ def step(
 
     ``nl``: the base graph's neighbor list, required context under a sparse
     mix_impl; callers that already built one (the engines) pass it so the
-    host-side construction isn't repeated per trace.
+    host-side construction isn't repeated per trace.  Both the neighbor
+    list and the graph's canonical ``EdgeList`` fabric are O(E) host
+    staging -- nothing on this path densifies an (m, m) matrix, which is
+    what lets the sparse impls step m >= 16384 fleets.
     """
     if cfg.mix_impl not in MIX_IMPLS:
         raise ValueError(f"unknown mix_impl {cfg.mix_impl!r}; known: {MIX_IMPLS}")
@@ -142,7 +145,9 @@ def step(
 
     if sparse:
         if nl is None:
-            nl = graph.neighbors()  # setup-time numpy, traced in as constants
+            # setup-time numpy, traced in as constants; built straight from
+            # the edge list (vectorized, never via a dense adjacency)
+            nl = graph.neighbors()
         nbr_idx = jnp.asarray(nl.idx)
         adj_ell = graph.adjacency_ell(state.k, nl)
         # dense view for StepAux consumers only; dead code whenever the ys

@@ -68,6 +68,44 @@ def build_p_ell(nbr_idx: jax.Array, adj_ell: jax.Array, comm_ell: jax.Array) -> 
     return transition_ell(metropolis_weights_ell(nbr_idx, adj_ell), comm_ell)
 
 
+def assert_doubly_stochastic_ell(
+    nbr_idx, p_diag, p_off, atol: float = 1e-6
+) -> None:
+    """Assumption-2 invariants checked directly in ELL layout, O(m d): rows
+    sum to one, entries are nonnegative, and P is symmetric -- the weight on
+    slot (i, s) equals the weight j = idx[i, s] holds for i on its
+    reciprocal slot.  This is the large-fleet form of
+    ``assert_doubly_stochastic``: at m >= 4096 the dense scatter it would
+    need is exactly the (m, m) matrix the sparse engine never builds."""
+    import numpy as np
+
+    idx = np.asarray(nbr_idx)
+    pd = np.asarray(p_diag, np.float64)
+    po = np.asarray(p_off, np.float64)
+    m, d_max = idx.shape
+    assert np.all(po >= -atol), f"negative off-diagonal entries: min {po.min()}"
+    assert np.all(pd >= -atol), f"negative diagonal entries: min {pd.min()}"
+    row_sums = pd + po.sum(axis=-1)
+    assert np.allclose(row_sums, 1.0, atol=atol), "rows not stochastic"
+    # symmetry via the reciprocal slot (the weight j = idx[i, s] holds for
+    # i on whichever of its slots lists i), one slot column at a time so
+    # the transients stay (m, d_max) -- O(m d) memory like everything else
+    # on the large-fleet path, at O(m d^2) compare time
+    rows = np.arange(m)
+    active = idx != rows[:, None]  # pad slots self-index, carry zero weight
+    w_back = np.zeros_like(po)
+    has_back = np.zeros(po.shape, dtype=bool)
+    for s in range(d_max):
+        back = idx[idx[:, s]] == rows[:, None]  # slots of j pointing at i
+        has_back[:, s] = back.any(axis=-1)
+        w_back[:, s] = np.where(back, po[idx[:, s]], 0.0).sum(axis=-1)
+    assert np.all(has_back[active] | (po[active] <= atol)), \
+        "active slot with no reciprocal slot"
+    np.testing.assert_allclose(np.where(active, po, 0.0),
+                               np.where(active, w_back, 0.0), atol=atol,
+                               err_msg="ELL P not symmetric")
+
+
 def assert_doubly_stochastic(p: jax.Array, atol: float = 1e-6) -> None:
     import numpy as np
 

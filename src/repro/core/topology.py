@@ -5,6 +5,16 @@ graph over m devices.  We model it as a deterministic, seeded process: given
 a base key and the universal iteration k, ``adjacency(k)`` returns the m x m
 symmetric boolean adjacency (no self loops) for iteration k.
 
+Staging is **edge-list native** (DESIGN.md "Edge-list staging"): every
+builtin builder emits an ``EdgeList`` directly -- cell-list (spatial-hash)
+RGG, skip-sampled Erdős–Rényi, combinatorial ring/complete -- so no builtin
+kind materializes an (m, m) numpy matrix on the host.  The padded neighbor
+list, connectivity check (union-find-style on edges) and the per-edge
+``edge_dropout`` randomness are all O(E), which is what stages m >= 16384
+fleets.  The dense ``(m, m)`` adjacency survives only as a lazy *view*
+(``GraphProcess.base``) for the dense engines and legacy consumers at
+small m.
+
 All processes are pure-JAX so they can live inside jit'd training steps;
 graph generators used for *setup* (random geometric graphs a la paper
 Sec. IV-A) use numpy at trace time.
@@ -26,6 +36,101 @@ import numpy as np
 
 Adjacency = jax.Array  # (m, m) bool, symmetric, zero diagonal
 
+# largest m whose canonical edge ids (u * m + v, u < v) fit in int32: the
+# jitted edge_dropout paths keep the ids int32 so the fold_in stream stays
+# bit-compatible with the historical (m, m) grid realization
+_EID_INT32_MAX_M = 46340
+
+
+class EdgeList(NamedTuple):
+    """Canonical staging representation of an undirected graph.
+
+    ``u``/``v`` - (E,) int32 endpoint arrays with ``u < v`` (one entry per
+    undirected edge, no self loops), lexsorted by ``(u, v)`` so the layout
+    is deterministic (engine-cache keys hash the raw bytes).
+    ``m``       - number of devices.
+
+    Host numpy, setup-time only (like the old dense base adjacency); the
+    arrays enter jitted code as constants via ``jnp.asarray``.
+    """
+
+    u: np.ndarray
+    v: np.ndarray
+    m: int
+
+    @property
+    def n_edges(self) -> int:
+        return int(self.u.shape[0])
+
+    def degrees(self) -> np.ndarray:
+        """(m,) int64 node degrees, O(E)."""
+        return (np.bincount(self.u, minlength=self.m)
+                + np.bincount(self.v, minlength=self.m)).astype(np.int64)
+
+    def eids(self) -> np.ndarray:
+        """(E,) int64 canonical edge ids ``u * m + v`` -- the ids the
+        random-access ``_edge_uniforms`` stream is keyed on.  (The jitted
+        consumers compute them as int32 for fold_in bit-compatibility,
+        which bounds ``edge_dropout`` at m <= 46340; ``GraphProcess``
+        rejects larger dropout fleets explicitly.)"""
+        return self.u.astype(np.int64) * self.m + self.v.astype(np.int64)
+
+
+def _canonical_edges(u: np.ndarray, v: np.ndarray, m: int) -> EdgeList:
+    """Normalize endpoint arrays into the EdgeList contract (u < v,
+    lexsorted).  Assumes entries are distinct undirected pairs."""
+    u = np.asarray(u).ravel()
+    v = np.asarray(v).ravel()
+    lo = np.minimum(u, v).astype(np.int32)
+    hi = np.maximum(u, v).astype(np.int32)
+    order = np.lexsort((hi, lo))
+    return EdgeList(u=np.ascontiguousarray(lo[order]),
+                    v=np.ascontiguousarray(hi[order]), m=int(m))
+
+
+def edge_list_from_dense(base: np.ndarray) -> EdgeList:
+    """Dense symmetric adjacency -> canonical EdgeList (legacy adapter)."""
+    base = np.asarray(base, bool)
+    u, v = np.nonzero(np.triu(base, 1))  # row-major => already (u, v) sorted
+    return EdgeList(u=u.astype(np.int32), v=v.astype(np.int32),
+                    m=int(base.shape[0]))
+
+
+def dense_from_edges(edges: EdgeList) -> np.ndarray:
+    """Canonical EdgeList -> dense (m, m) bool adjacency (small-m view)."""
+    a = np.zeros((edges.m, edges.m), dtype=bool)
+    a[edges.u, edges.v] = True
+    a[edges.v, edges.u] = True
+    return a
+
+
+def edges_connected(edges: EdgeList) -> bool:
+    """Connectivity straight off the edge list: vectorized union-find
+    (min-label hooking + pointer jumping), O(E log m)-ish, never the
+    (m, m) matrix or a per-node Python DFS."""
+    m = edges.m
+    if m <= 1:
+        return True
+    if edges.n_edges == 0:
+        return False
+    u = edges.u.astype(np.int64)
+    v = edges.v.astype(np.int64)
+    label = np.arange(m, dtype=np.int64)
+    while True:
+        prev = label.copy()
+        lo = np.minimum(label[u], label[v])
+        np.minimum.at(label, u, lo)
+        np.minimum.at(label, v, lo)
+        while True:  # pointer jumping: hop to the smallest label reached
+            nxt = label[label]
+            if np.array_equal(nxt, label):
+                break
+            label = nxt
+        if np.array_equal(label, prev):
+            break
+    # converged: every node's label is the min index in its component
+    return bool((label == 0).all())
+
 
 class NeighborList(NamedTuple):
     """Padded (ELL-style) neighbor list of the static base graph.
@@ -36,7 +141,7 @@ class NeighborList(NamedTuple):
                every consumer multiplies by ``mask`` so the value is inert).
     ``mask`` - (m, d_max) bool: True on real neighbor slots.
 
-    Both arrays are host numpy (setup-time, like the base adjacency); they
+    Both arrays are host numpy (setup-time, like the base edge list); they
     enter jitted code as constants via ``jnp.asarray``.  Every time-varying
     realization G^(k) is a subgraph of the base fabric, so a *static*
     neighbor list plus a per-iteration slot mask (``GraphProcess.
@@ -55,22 +160,36 @@ class NeighborList(NamedTuple):
         return int(self.idx.shape[1])
 
 
-def neighbor_list(base: np.ndarray) -> NeighborList:
-    """Build the padded neighbor list of a symmetric base adjacency.
-
-    d_max is the base graph's maximum degree (>= 1 so the arrays are never
-    zero-width even on an edgeless graph)."""
-    base = np.asarray(base, bool)
-    m = base.shape[0]
-    degrees = base.sum(axis=1).astype(np.int64)
-    d_max = max(1, int(degrees.max()) if m else 1)
+def neighbor_list_from_edges(edges: EdgeList) -> NeighborList:
+    """Vectorized ELL construction from the canonical edge list: bucket both
+    edge directions by source row (lexsort + bincount + one fancy-indexed
+    scatter), O(E log E) with no per-row Python loop.  d_max is the base
+    graph's maximum degree (>= 1 so the arrays are never zero-width even on
+    an edgeless graph); rows list neighbors in ascending order, exactly the
+    layout the old per-row ``np.nonzero`` loop produced."""
+    m = edges.m
+    src = np.concatenate([edges.u, edges.v]).astype(np.int64)
+    dst = np.concatenate([edges.v, edges.u]).astype(np.int64)
+    order = np.lexsort((dst, src))
+    src, dst = src[order], dst[order]
+    deg = np.bincount(src, minlength=m).astype(np.int64)
+    d_max = max(1, int(deg.max()) if deg.size else 1)
     idx = np.tile(np.arange(m, dtype=np.int32)[:, None], (1, d_max))
     mask = np.zeros((m, d_max), dtype=bool)
-    for i in range(m):
-        nbrs = np.nonzero(base[i])[0]
-        idx[i, : len(nbrs)] = nbrs
-        mask[i, : len(nbrs)] = True
+    if src.size:
+        starts = np.cumsum(deg) - deg
+        slot = np.arange(src.size, dtype=np.int64) - np.repeat(starts, deg)
+        idx[src, slot] = dst.astype(np.int32)
+        mask[src, slot] = True
     return NeighborList(idx=idx, mask=mask)
+
+
+def neighbor_list(base: np.ndarray | EdgeList) -> NeighborList:
+    """Build the padded neighbor list of a base graph, given either the
+    canonical ``EdgeList`` or a dense symmetric adjacency (legacy input)."""
+    if isinstance(base, EdgeList):
+        return neighbor_list_from_edges(base)
+    return neighbor_list_from_edges(edge_list_from_dense(base))
 
 
 def scatter_ell(nbr_idx: jax.Array, vals: jax.Array) -> jax.Array:
@@ -95,11 +214,11 @@ def _symmetrize(a: jax.Array) -> jax.Array:
 
 def _edge_uniforms(key: jax.Array, eids: jax.Array) -> jax.Array:
     """Independent U[0,1) per canonical edge id, *random-access*: the value
-    is a pure function of (key, eid), so any layout -- the dense (m, m)
-    matrix, an ELL slot table, a single edge -- evaluates the identical
-    realization while paying only for the ids it asks for.  This is what
-    keeps the sparse engine's edge_dropout stream bit-for-bit equal to the
-    dense engine's at O(m d) instead of O(m^2) cost (a positional
+    is a pure function of (key, eid), so any layout -- a batched (E,) draw
+    over the edge list, an ELL slot table, the legacy (m, m) grid, a single
+    edge -- evaluates the identical realization while paying only for the
+    ids it asks for.  This is what keeps every engine's edge_dropout stream
+    bit-for-bit equal at O(E) / O(m d) instead of O(m^2) cost (a positional
     ``uniform(key, (m, m))`` draw can only be subset via the full array)."""
     flat = eids.reshape(-1)
     keys = jax.vmap(jax.random.fold_in, in_axes=(None, 0))(key, flat)
@@ -107,8 +226,159 @@ def _edge_uniforms(key: jax.Array, eids: jax.Array) -> jax.Array:
     return u.reshape(eids.shape)
 
 
+# ---------------------------------------------------------------------------
+# Edge-list-native builders.  Every builtin kind stages through these; the
+# ``*_adjacency`` constructors below are the dense small-m views (and, for
+# rgg/ring/complete, the independent legacy reference implementations the
+# parity tests pin the builders against).
+# ---------------------------------------------------------------------------
+
+def ring_edges(m: int) -> EdgeList:
+    """Static ring: always connected (B1 = 1).  O(m)."""
+    if m <= 1:
+        e = np.empty(0, np.int32)
+        return EdgeList(u=e, v=e.copy(), m=m)
+    if m == 2:
+        return EdgeList(u=np.array([0], np.int32), v=np.array([1], np.int32), m=2)
+    u = np.arange(m - 1, dtype=np.int32)
+    v = u + 1
+    return _canonical_edges(np.concatenate([u, [0]]), np.concatenate([v, [m - 1]]), m)
+
+
+def complete_edges(m: int) -> EdgeList:
+    """All m(m-1)/2 pairs in canonical row-major order, built without the
+    (m, m) matrix np.triu_indices would allocate."""
+    if m <= 1:
+        e = np.empty(0, np.int32)
+        return EdgeList(u=e, v=e.copy(), m=m)
+    counts = np.arange(m - 1, 0, -1, dtype=np.int64)  # row u has m-1-u pairs
+    u = np.repeat(np.arange(m - 1, dtype=np.int64), counts)
+    starts = np.cumsum(counts) - counts
+    v = np.arange(u.size, dtype=np.int64) - starts[u] + u + 1
+    return EdgeList(u=u.astype(np.int32), v=v.astype(np.int32), m=m)
+
+
+def _rgg_edges_at_radius(pts: np.ndarray, r: float) -> EdgeList:
+    """All pairs with ||p_i - p_j||^2 <= r^2 via a spatial-hash cell list.
+
+    Candidates come from each point's 3x3 cell neighborhood (cell side
+    >= r), then the exact same float64 expression the dense constructor
+    evaluates -- ``((p_i - p_j) ** 2).sum(-1) <= r * r`` -- filters them, so
+    the kept edge set is bit-identical to the dense realization at
+    O(m + E) expected cost instead of O(m^2).
+
+    The grid is capped at ~sqrt(m) cells per side: correctness only needs
+    the cell side >= r (a coarser grid just widens the candidate set), and
+    an uncapped 1/r grid would allocate O(1/r^2) cell bookkeeping -- GBs
+    for a tiny user-supplied radius on a small fleet."""
+    m = pts.shape[0]
+    ncell = max(1, min(int(np.floor(1.0 / r)) if r > 0 else 1,
+                       int(np.sqrt(m)) + 1))
+    cx = (pts[:, 0] * ncell).astype(np.int64)  # uniform draws live in [0, 1)
+    cy = (pts[:, 1] * ncell).astype(np.int64)
+    cell = cx * ncell + cy
+    order = np.argsort(cell, kind="stable")
+    starts = np.searchsorted(cell[order], np.arange(ncell * ncell + 1))
+    ar = np.arange(m, dtype=np.int64)
+    ii_parts: list[np.ndarray] = []
+    jj_parts: list[np.ndarray] = []
+    for dx in (-1, 0, 1):
+        for dy in (-1, 0, 1):
+            tx, ty = cx + dx, cy + dy
+            valid = (tx >= 0) & (tx < ncell) & (ty >= 0) & (ty < ncell)
+            tcell = np.where(valid, tx * ncell + ty, 0)
+            n = np.where(valid, starts[tcell + 1] - starts[tcell], 0)
+            if not n.any():
+                continue
+            ii = np.repeat(ar, n)
+            off = np.arange(ii.size, dtype=np.int64) - np.repeat(np.cumsum(n) - n, n)
+            jj = order[np.repeat(np.where(valid, starts[tcell], 0), n) + off]
+            keep = ii < jj  # each unordered pair surfaces once per direction
+            ii_parts.append(ii[keep])
+            jj_parts.append(jj[keep])
+    if not ii_parts:
+        e = np.empty(0, np.int32)
+        return EdgeList(u=e, v=e.copy(), m=m)
+    ii = np.concatenate(ii_parts)
+    jj = np.concatenate(jj_parts)
+    d2 = ((pts[ii] - pts[jj]) ** 2).sum(-1)
+    sel = d2 <= r * r
+    return _canonical_edges(ii[sel], jj[sel], m)
+
+
+def random_geometric_edges(m: int, radius: float, seed: int) -> EdgeList:
+    """Random geometric graph on the unit square (paper Sec. IV-A uses RGG
+    with connectivity 0.4), staged as an edge list via the cell-list sweep.
+    Retries with a growing radius until connected so Assumption 8-(a) holds
+    with B1 = 1 for the base graph.  Same point draw, radius ladder and
+    per-pair float comparison as the legacy dense constructor, so the
+    realization is bit-for-bit identical -- only the staging cost changes."""
+    rng = np.random.default_rng(seed)
+    pts = rng.uniform(size=(m, 2))
+    r = radius
+    for _ in range(64):
+        edges = _rgg_edges_at_radius(pts, r)
+        if edges_connected(edges):
+            return edges
+        r *= 1.15
+    raise RuntimeError("could not build a connected RGG")
+
+
+def _bernoulli_indices(rng: np.random.Generator, n: int, p: float) -> np.ndarray:
+    """Indices in [0, n) kept independently with probability p, drawn via
+    geometric gap (skip) sampling: O(n p) draws and memory, never an
+    n-vector of uniforms."""
+    if n <= 0 or p <= 0.0:
+        return np.empty(0, np.int64)
+    if p >= 1.0:
+        return np.arange(n, dtype=np.int64)
+    est = int(n * p + 6.0 * np.sqrt(n * p) + 16.0)
+    chunks: list[np.ndarray] = []
+    pos = -1
+    while pos < n:
+        idx = pos + np.cumsum(rng.geometric(p, size=est))
+        chunks.append(idx)
+        pos = int(idx[-1])
+    idx = np.concatenate(chunks) if len(chunks) > 1 else chunks[0]
+    return idx[idx < n]
+
+
+def _decode_pair_index(lin: np.ndarray, m: int) -> tuple[np.ndarray, np.ndarray]:
+    """Row-major upper-triangle linear index -> (u, v) endpoint arrays."""
+    counts = np.arange(m - 1, -1, -1, dtype=np.int64)  # pairs in row u
+    row_start = np.concatenate([np.zeros(1, np.int64), np.cumsum(counts)])
+    u = np.searchsorted(row_start, lin, side="right") - 1
+    v = lin - row_start[u] + u + 1
+    return u.astype(np.int32), v.astype(np.int32)
+
+
+def erdos_renyi_edges(m: int, p: float, seed: int) -> EdgeList:
+    """Edge-sampled G(m, p): each of the m(m-1)/2 pairs is present
+    independently with probability p, drawn by skip sampling over the pair
+    indices -- O(E) cost, no (m, m) uniform field.  The distribution matches
+    the old dense constructor; the realization stream changed when staging
+    went edge-native (nothing in the repo pins ER realizations -- the golden
+    trajectory and benchmarks run on RGG, which *is* bit-preserved)."""
+    rng = np.random.default_rng(seed)
+    n_pairs = m * (m - 1) // 2
+    for _ in range(64):
+        lin = _bernoulli_indices(rng, n_pairs, min(1.0, p))
+        u, v = _decode_pair_index(lin, m)
+        edges = EdgeList(u=u, v=v, m=m)  # lin ascending => already canonical
+        if edges_connected(edges):
+            return edges
+        p = min(1.0, p * 1.2)
+    raise RuntimeError("could not build a connected ER graph")
+
+
+# ---------------------------------------------------------------------------
+# Dense constructors: small-m views over the edge builders, except
+# rgg/ring/complete which keep their original standalone implementations as
+# the legacy references the builder parity tests assert bit-equality with.
+# ---------------------------------------------------------------------------
+
 def ring_adjacency(m: int) -> np.ndarray:
-    """Static ring: always connected (B1 = 1)."""
+    """Static ring: always connected (B1 = 1).  Legacy dense reference."""
     a = np.zeros((m, m), dtype=bool)
     idx = np.arange(m)
     a[idx, (idx + 1) % m] = True
@@ -125,9 +395,9 @@ def complete_adjacency(m: int) -> np.ndarray:
 
 
 def random_geometric_adjacency(m: int, radius: float, seed: int) -> np.ndarray:
-    """Random geometric graph on the unit square (paper Sec. IV-A uses RGG
-    with connectivity 0.4).  Retries with a growing radius until connected
-    so Assumption 8-(a) holds with B1 = 1 for the base graph."""
+    """Legacy dense RGG (O(m^2) pairwise distances).  Kept verbatim as the
+    reference ``random_geometric_edges`` is asserted bit-identical against;
+    staging goes through the edge builder."""
     rng = np.random.default_rng(seed)
     pts = rng.uniform(size=(m, 2))
     r = radius
@@ -142,15 +412,8 @@ def random_geometric_adjacency(m: int, radius: float, seed: int) -> np.ndarray:
 
 
 def erdos_renyi_adjacency(m: int, p: float, seed: int) -> np.ndarray:
-    rng = np.random.default_rng(seed)
-    for trial in range(64):
-        upper = rng.uniform(size=(m, m)) < p
-        a = np.triu(upper, 1)
-        a = a | a.T
-        if _connected_np(a):
-            return a
-        p = min(1.0, p * 1.2)
-    raise RuntimeError("could not build a connected ER graph")
+    """Dense view of the edge-sampled ER builder (same realization)."""
+    return dense_from_edges(erdos_renyi_edges(m, p, seed))
 
 
 def _connected_np(a: np.ndarray) -> bool:
@@ -171,7 +434,10 @@ def _connected_np(a: np.ndarray) -> bool:
 class GraphProcess:
     """A seeded time-varying graph process.
 
-    ``base``:   (m, m) bool numpy adjacency, the physical fabric.
+    ``edges``:  canonical ``EdgeList`` of the physical fabric (a dense
+                symmetric numpy adjacency is also accepted and converted);
+                the dense view is available lazily as ``.base`` for the
+                dense engines and legacy consumers -- staging never builds it.
     ``kind``:   'static'        -> G^(k) = base for all k
                 'edge_dropout'  -> each base edge present w.p. (1 - drop) at
                                    each k, resampled per iteration (symmetric)
@@ -180,28 +446,56 @@ class GraphProcess:
                                    B1 = cycle_len, deterministic)
     """
 
-    base: np.ndarray
+    edges: EdgeList
     kind: str = "static"
     drop: float = 0.0
     cycle_len: int = 1
     seed: int = 0
 
+    def __post_init__(self):
+        if not isinstance(self.edges, EdgeList):
+            object.__setattr__(self, "edges",
+                               edge_list_from_dense(np.asarray(self.edges)))
+        if self.kind == "edge_dropout" and self.edges.m > _EID_INT32_MAX_M:
+            # the jitted paths compute canonical edge ids as int32 u*m+v to
+            # stay bit-compatible with the historical realization; past this
+            # m the ids wrap and distinct edges would share uniforms
+            raise ValueError(
+                f"edge_dropout supports m <= {_EID_INT32_MAX_M} "
+                f"(int32 canonical edge ids); got m={self.edges.m}")
+        object.__setattr__(self, "_base_cache", None)
+
     @property
     def m(self) -> int:
-        return int(self.base.shape[0])
+        return int(self.edges.m)
+
+    @property
+    def base(self) -> np.ndarray:
+        """Dense (m, m) bool view of the fabric, densified lazily on first
+        access and cached.  Small-m consumers only (dense engines, legacy
+        analysis); the edge-native staging path never touches it."""
+        cached = self._base_cache
+        if cached is None:
+            cached = dense_from_edges(self.edges)
+            object.__setattr__(self, "_base_cache", cached)
+        return cached
 
     def adjacency(self, k: jax.Array | int) -> Adjacency:
-        base = jnp.asarray(self.base)
         if self.kind == "static":
-            return base
+            return jnp.asarray(self.base)
         if self.kind == "edge_dropout":
             key = jax.random.fold_in(jax.random.PRNGKey(self.seed), jnp.asarray(k, jnp.uint32))
             m = self.m
-            i = jnp.arange(m, dtype=jnp.int32)[:, None]
-            j = jnp.arange(m, dtype=jnp.int32)[None, :]
-            eid = jnp.minimum(i, j) * m + jnp.maximum(i, j)  # symmetric id
+            u = jnp.asarray(self.edges.u)
+            v = jnp.asarray(self.edges.v)
+            # ONE batched O(E) draw over the canonical edge ids -- the same
+            # random-access (key, eid) stream the ELL path and the legacy
+            # per-entry (m, m) grid evaluate, so the realization is
+            # identical while the fold_in count drops from m^2 to E
+            eid = u * m + v  # u < v, so this equals min*m+max on the grid
             keep = _edge_uniforms(key, eid) >= self.drop
-            return _symmetrize(jnp.logical_and(base, keep))
+            a = jnp.zeros((m, m), dtype=bool)
+            return a.at[u, v].set(keep).at[v, u].set(keep)
         if self.kind == "partition_cycle":
             # deterministically keep edges whose (i + j) % cycle_len == k % cycle_len
             m = self.m
@@ -209,15 +503,16 @@ class GraphProcess:
             j = jnp.arange(m)[None, :]
             phase = jnp.asarray(k, jnp.int32) % self.cycle_len
             keep = (i + j) % self.cycle_len == phase
-            return _symmetrize(jnp.logical_and(base, keep))
+            return _symmetrize(jnp.logical_and(jnp.asarray(self.base), keep))
         raise ValueError(f"unknown graph process kind: {self.kind}")
 
     def degrees(self, k: jax.Array | int) -> jax.Array:
         return self.adjacency(k).sum(axis=1).astype(jnp.int32)
 
     def neighbors(self) -> NeighborList:
-        """Padded neighbor list of the base fabric (setup-time numpy)."""
-        return neighbor_list(self.base)
+        """Padded neighbor list of the base fabric, built straight from the
+        edge list (setup-time numpy, vectorized, O(E log E))."""
+        return neighbor_list_from_edges(self.edges)
 
     def adjacency_ell(self, k: jax.Array | int, nl: NeighborList) -> jax.Array:
         """G^(k) as a (m, d_max) bool slot mask over the static neighbor
@@ -270,15 +565,17 @@ def make_process(
     cycle_len: int = 2,
     seed: int = 0,
 ) -> GraphProcess:
-    """Factory used by configs / the FL simulator."""
+    """Factory used by configs / the FL simulator.  Every builtin kind
+    stages through its edge-list builder; no (m, m) host matrix exists
+    unless a consumer later asks for the dense ``.base`` view."""
     if topology == "rgg":
-        base = random_geometric_adjacency(m, radius, seed)
+        edges = random_geometric_edges(m, radius, seed)
     elif topology == "er":
-        base = erdos_renyi_adjacency(m, er_p, seed)
+        edges = erdos_renyi_edges(m, er_p, seed)
     elif topology == "ring":
-        base = ring_adjacency(m)
+        edges = ring_edges(m)
     elif topology == "complete":
-        base = complete_adjacency(m)
+        edges = complete_edges(m)
     else:
         raise ValueError(f"unknown topology: {topology}")
-    return GraphProcess(base=base, kind=time_varying, drop=drop, cycle_len=cycle_len, seed=seed + 1)
+    return GraphProcess(edges=edges, kind=time_varying, drop=drop, cycle_len=cycle_len, seed=seed + 1)

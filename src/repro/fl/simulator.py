@@ -336,9 +336,14 @@ _ENGINE_CACHE_SIZE = 8
 
 def _graph_cache_key(graph: GraphProcess) -> tuple:
     """Value key for a GraphProcess: every field that shapes the compiled
-    adjacency stream, with the base adjacency by content, not identity."""
+    adjacency stream, with the fabric by content, not identity.  Hashing the
+    canonical edge list (lexsorted, so layout is deterministic) keeps the
+    key O(E) -- the old dense ``base.tobytes()`` key densified the graph and
+    cost O(m^2) host bytes per engine build, which is exactly what the
+    edge-native staging path exists to avoid at m >= 16384."""
     return (graph.kind, float(graph.drop), int(graph.cycle_len),
-            int(graph.seed), graph.base.shape, graph.base.tobytes())
+            int(graph.seed), graph.edges.m,
+            graph.edges.u.tobytes(), graph.edges.v.tobytes())
 
 
 def _cached_engine(sim: SimConfig, graph: GraphProcess, *, T: int,

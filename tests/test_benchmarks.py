@@ -104,6 +104,47 @@ def test_main_exit_codes_and_summary(tmp_path, monkeypatch):
     assert "ok" in summary2.read_text()
 
 
+def _staging_entry(m, sec):
+    return {"m": m, "trace": "staging", "mix_impl": "staging",
+            "staging_sec": sec, "n_edges": 12 * m, "d_max": 40}
+
+
+def test_staging_entries_are_informational_never_gated():
+    """Staging-only rows (no iters_per_sec) pass through as status
+    'staging': reported in the table, excluded from the regression check
+    even when arbitrarily slower than a pinned staging entry."""
+    ref = _doc([_entry(16, "full", "dense", 1000.0), _staging_entry(32768, 0.5)])
+    new = _doc([_entry(16, "full", "dense", 990.0),
+                _staging_entry(32768, 50.0)])  # 100x slower: still not a gate
+    rows, regressions = check_regression.compare(ref, new, threshold=0.35)
+    assert regressions == []
+    assert [r["status"] for r in rows] == ["ok", "staging"]
+    table = check_regression.markdown_table(rows, 0.35)
+    assert "staging" in table and "staged 50.00s" in table
+
+
+def test_parse_sizes_rejects_mix_impl_on_staging_rows():
+    """'m:staging:sparse' would silently ignore the impl -- refuse it."""
+    _FS_PATH = _CR_PATH.parent / "fleet_scale.py"
+    spec = importlib.util.spec_from_file_location("fleet_scale", _FS_PATH)
+    fleet_scale = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(fleet_scale)
+    assert fleet_scale._parse_sizes("16384:staging") == ((16384, "staging", "staging"),)
+    with pytest.raises(SystemExit, match="staging"):
+        fleet_scale._parse_sizes("4096:staging:sparse")
+
+
+def test_staging_only_fresh_file_counts_as_comparing_nothing(tmp_path, monkeypatch):
+    """A fresh file with only staging rows compared no throughput: the
+    disabled-gate guard must still fail loudly."""
+    monkeypatch.delenv("GITHUB_STEP_SUMMARY", raising=False)
+    ref_f = tmp_path / "ref.json"
+    ref_f.write_text(json.dumps(REF))
+    new_f = tmp_path / "new.json"
+    new_f.write_text(json.dumps(_doc([_staging_entry(16384, 0.4)])))
+    assert check_regression.main(["--ref", str(ref_f), "--new", str(new_f)]) == 1
+
+
 def test_main_fails_when_nothing_matches(tmp_path, monkeypatch):
     """A gate that compares nothing must fail: grid/key drift (typo'd
     --sizes, renamed trace mode) cannot silently disable the check."""
@@ -118,16 +159,28 @@ def test_main_fails_when_nothing_matches(tmp_path, monkeypatch):
 
 def test_pinned_reference_has_the_m_scaling_grid():
     """The checked-in BENCH_fleet.json must carry the m=2048/4096 sparse
-    points and show sparse beating dense at every m >= 1024 measured on
-    both (the acceptance claim this PR pins)."""
+    points and show sparse beating dense at every m >= 4096 measured on
+    both (the O(E) batched edge_dropout draw made the dense path 2-4x
+    faster than when the grid was first pinned, moving the crossover on
+    this container from ~m=512 into the m=1024-2048 band, where the
+    ordering flips between repins on this shared host -- so no ordering is
+    asserted there; m=4096 is the first decisive, repin-stable sparse
+    win), plus the edge-native scale points: a gated m=16384
+    sparse/summary throughput entry and an m=32768 staging-only entry."""
     pinned = json.loads((_CR_PATH.parent.parent / "BENCH_fleet.json").read_text())
     by_key = {check_regression.entry_key(e): e for e in pinned["entries"]}
     assert any(k[0] == 2048 for k in by_key)
     assert any(k[0] == 4096 for k in by_key)
+    assert ("iters_per_sec" in by_key[(16384, "summary", "sparse")])
+    staging = by_key[(32768, "staging", "staging")]
+    assert staging["staging_sec"] > 0 and staging["n_edges"] > 32768
+    compared = 0
     for (m, trace, impl), e in by_key.items():
-        if impl != "sparse" or m < 1024:
+        if impl != "sparse" or m < 4096:
             continue
         dense = by_key.get((m, trace, "dense"))
         if dense is not None:
+            compared += 1
             assert e["iters_per_sec"] > dense["iters_per_sec"], \
                 f"sparse must beat dense at m={m}"
+    assert compared >= 1, "grid must measure dense vs sparse at m >= 4096"

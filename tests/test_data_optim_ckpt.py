@@ -38,6 +38,42 @@ def test_by_labels_partition_covers_and_restricts():
     assert d > 0.8, "1 label/device is extreme heterogeneity"
 
 
+def _by_labels_reference(y, m, L, *, seed=0):
+    """The original list-of-Python-ints implementation, kept verbatim as
+    the realization oracle for the vectorized partitioner."""
+    rng = np.random.default_rng(seed)
+    classes = np.unique(y)
+    assign = [[classes[(i * L + j) % len(classes)] for j in range(L)]
+              for i in range(m)]
+    idx_by_class = {c: rng.permutation(np.nonzero(y == c)[0]) for c in classes}
+    holders = {int(c): [] for c in classes}
+    for i, labs in enumerate(assign):
+        for c in labs:
+            holders[int(c)].append(i)
+    parts = [[] for _ in range(m)]
+    for c in classes:
+        devs = holders[int(c)]
+        if not devs:
+            continue
+        for shard, dev in enumerate(devs):
+            parts[dev].extend(idx_by_class[c][shard::len(devs)].tolist())
+    return [np.asarray(sorted(p), dtype=np.int64) for p in parts]
+
+
+@pytest.mark.parametrize("m,L,seed", [(10, 1, 0), (10, 3, 5), (4, 3, 2),
+                                      (40, 1, 1), (7, 25, 3)])
+def test_by_labels_vectorized_matches_reference(m, L, seed):
+    """The memory-lean by_labels must be realization-identical to the old
+    per-sample Python loop: same rng draws, same round-robin holders, same
+    strided shards, sorted parts -- byte for byte."""
+    _, y = image_dataset(997, seed=seed)
+    got = by_labels(y, m, L, seed=seed)
+    want = _by_labels_reference(y, m, L, seed=seed)
+    assert len(got) == len(want) == m
+    for g, w in zip(got, want):
+        assert g.dtype == np.int64 and np.array_equal(g, w)
+
+
 def test_dirichlet_partition_alpha_controls_skew():
     _, y = image_dataset(3000, seed=1)
     skew_low = heterogeneity_delta(None, y, dirichlet(y, 10, 100.0, seed=0), 10)

@@ -1,0 +1,332 @@
+"""Edge-list-native staging lockdown (hypothesis-free).
+
+Four pillars, mirroring the staging refactor's claims:
+
+* builder properties  - symmetry / no self loops / connectivity / degree
+                        bounds for every builtin kind, straight off the
+                        ``EdgeList`` (no dense detour);
+* dense parity        - for m <= 512 the edge builders scatter to EXACTLY
+                        the legacy dense constructors' adjacency (for
+                        rgg/ring/complete those are the original standalone
+                        implementations, so this pins bit-for-bit
+                        realization preservation across the refactor);
+* dropout parity      - the batched O(E) ``edge_dropout`` draw, the ELL
+                        slot draw and the legacy per-entry (m, m) fold_in
+                        grid evaluate the identical ``_edge_uniforms``
+                        stream bit for bit, and both engines see it;
+* no dense staging    - staging an m = 16384 fleet never allocates an
+                        (m, m) host array (tracemalloc-bounded) and never
+                        populates the lazy dense view.
+"""
+import dataclasses
+import tracemalloc
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import flow
+from repro.core import topology as T
+from repro.core.topology import (EdgeList, GraphProcess, complete_adjacency,
+                                 complete_edges, dense_from_edges,
+                                 edge_list_from_dense, edges_connected,
+                                 erdos_renyi_adjacency, erdos_renyi_edges,
+                                 fleet_radius, make_process, neighbor_list,
+                                 random_geometric_adjacency,
+                                 random_geometric_edges, ring_adjacency,
+                                 ring_edges, scatter_ell)
+
+BUILDERS = {
+    "rgg": lambda m, seed: random_geometric_edges(m, 0.4, seed),
+    "er": lambda m, seed: erdos_renyi_edges(m, 0.4, seed),
+    "ring": lambda m, seed: ring_edges(m),
+    "complete": lambda m, seed: complete_edges(m),
+}
+
+
+# ---------------------------------------------------------- properties ------
+
+@pytest.mark.parametrize("kind", sorted(BUILDERS))
+@pytest.mark.parametrize("m,seed", [(2, 0), (8, 3), (33, 7), (64, 1)])
+def test_builder_properties(kind, m, seed):
+    el = BUILDERS[kind](m, seed)
+    assert isinstance(el, EdgeList) and el.m == m
+    assert el.u.dtype == np.int32 and el.v.dtype == np.int32
+    assert (el.u < el.v).all(), "canonical u < v: symmetric, no self loops"
+    # lexsorted and duplicate-free
+    eids = el.eids()
+    assert (np.diff(eids) > 0).all(), "edges must be sorted and unique"
+    assert edges_connected(el), "builders retry until connected"
+    deg = el.degrees()
+    assert deg.shape == (m,) and deg.sum() == 2 * el.n_edges
+    assert deg.max() <= m - 1
+    if kind == "complete":
+        assert el.n_edges == m * (m - 1) // 2 and (deg == m - 1).all()
+    if kind == "ring":
+        assert (deg == (2 if m > 2 else 1)).all()
+    # dense cross-checks (small m only)
+    a = dense_from_edges(el)
+    assert (a == a.T).all() and not a.diagonal().any()
+    assert flow.union_connectivity(a[None]) == 1
+    assert (deg == a.sum(1)).all()
+
+
+def test_edges_connected_detects_disconnection():
+    # two components
+    el = EdgeList(np.array([0, 2], np.int32), np.array([1, 3], np.int32), 4)
+    assert not edges_connected(el)
+    # isolated vertex
+    el = EdgeList(np.array([0], np.int32), np.array([1], np.int32), 3)
+    assert not edges_connected(el)
+    # trivia
+    assert edges_connected(EdgeList(np.empty(0, np.int32), np.empty(0, np.int32), 1))
+    assert not edges_connected(EdgeList(np.empty(0, np.int32), np.empty(0, np.int32), 2))
+    # long path (stresses the pointer-jumping convergence)
+    u = np.arange(99, dtype=np.int32)
+    assert edges_connected(EdgeList(u, u + 1, 100))
+
+
+def test_rgg_cell_grid_bounded_by_point_count():
+    """A tiny user-supplied radius must not blow up the cell grid: the
+    1/r-sided grid is capped at ~sqrt(m) cells per side (an uncapped
+    radius=1e-4 grid allocated ~1.6 GB of cell bookkeeping for a 100-point
+    graph).  The retry ladder still converges to the legacy realization."""
+    m, r, seed = 100, 1e-4, 5
+    tracemalloc.start()
+    el = random_geometric_edges(m, r, seed)
+    _, peak = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+    assert peak < 16 * 1024 * 1024, f"cell-grid peak {peak / 1e6:.0f} MB"
+    assert (dense_from_edges(el)
+            == random_geometric_adjacency(m, r, seed)).all()
+
+
+def test_edge_list_dense_roundtrip():
+    g = make_process(13, "rgg", seed=5)
+    el2 = edge_list_from_dense(g.base)
+    assert (el2.u == g.edges.u).all() and (el2.v == g.edges.v).all()
+    assert (dense_from_edges(el2) == g.base).all()
+
+
+# ---------------------------------------------------------- dense parity ----
+
+@pytest.mark.parametrize("m", [2, 3, 17, 128, 512])
+def test_ring_and_complete_match_legacy_dense(m):
+    assert (dense_from_edges(ring_edges(m)) == ring_adjacency(m)).all()
+    assert (dense_from_edges(complete_edges(m)) == complete_adjacency(m)).all()
+
+
+@pytest.mark.parametrize("m,radius,seed", [
+    (8, 0.4, 3), (64, 0.4, 0), (200, 0.15, 7), (512, fleet_radius(512), 1),
+])
+def test_rgg_cell_list_matches_legacy_dense_bit_for_bit(m, radius, seed):
+    """The cell-list sweep must reproduce the legacy O(m^2) constructor's
+    realization exactly: same point draw, same retry ladder, and the same
+    float64 comparison per candidate pair -- the refactor changed staging
+    cost, not a single edge."""
+    got = dense_from_edges(random_geometric_edges(m, radius, seed))
+    want = random_geometric_adjacency(m, radius, seed)
+    assert (got == want).all()
+
+
+@pytest.mark.parametrize("m,p,seed", [(16, 0.4, 0), (128, 0.1, 2), (512, 0.02, 4)])
+def test_er_dense_view_matches_edge_builder(m, p, seed):
+    """The ER dense constructor is defined as the edge-sampled builder's
+    scatter (the skip-sampled draw replaced the old (m, m) uniform field;
+    same G(m, p) distribution, new stream -- nothing in the repo pins ER
+    realizations)."""
+    assert (erdos_renyi_adjacency(m, p, seed)
+            == dense_from_edges(erdos_renyi_edges(m, p, seed))).all()
+
+
+def test_er_skip_sampling_hits_target_density():
+    m, p = 400, 0.05
+    el = erdos_renyi_edges(m, p, seed=11)
+    n_pairs = m * (m - 1) // 2
+    # binomial(n_pairs, p): mean ~3990, sd ~62; 6 sd keeps flake ~1e-9
+    assert abs(el.n_edges - n_pairs * p) < 6 * np.sqrt(n_pairs * p)
+
+
+@pytest.mark.parametrize("topology", ["rgg", "er", "ring", "complete"])
+def test_make_process_equals_legacy_dense_constructors(topology, m=96):
+    """End-to-end staging parity at legacy scale: make_process (edge-native)
+    vs the dense constructors, via the lazy .base view."""
+    legacy = {
+        "rgg": lambda: random_geometric_adjacency(m, 0.4, 6),
+        "er": lambda: erdos_renyi_adjacency(m, 0.4, 6),
+        "ring": lambda: ring_adjacency(m),
+        "complete": lambda: complete_adjacency(m),
+    }[topology]()
+    g = make_process(m, topology, seed=6)
+    assert (g.base == legacy).all()
+
+
+# ---------------------------------------------------------- dropout parity --
+
+def _legacy_grid_uniforms(g: GraphProcess, k: int) -> np.ndarray:
+    """The pre-refactor dense path: one fold_in per (m, m) grid entry."""
+    key = jax.random.fold_in(jax.random.PRNGKey(g.seed), jnp.asarray(k, jnp.uint32))
+    m = g.m
+    i = jnp.arange(m, dtype=jnp.int32)[:, None]
+    j = jnp.arange(m, dtype=jnp.int32)[None, :]
+    eid = jnp.minimum(i, j) * m + jnp.maximum(i, j)
+    return np.asarray(T._edge_uniforms(key, eid))
+
+
+@pytest.mark.parametrize("k", [0, 1, 9])
+def test_edge_uniform_stream_identical_across_layouts(k):
+    """The batched O(E) draw, the ELL slot draw and the legacy per-entry
+    grid must be the SAME realization bit for bit -- _edge_uniforms is
+    random-access in the edge id, so layout changes cost, never values."""
+    g = make_process(24, "rgg", time_varying="edge_dropout", drop=0.35, seed=3)
+    nl = g.neighbors()
+    key = jax.random.fold_in(jax.random.PRNGKey(g.seed), jnp.asarray(k, jnp.uint32))
+
+    grid = _legacy_grid_uniforms(g, k)  # legacy per-edge fold_in path
+    # batched O(E) draw over the canonical edge list (new dense path)
+    eid_edges = jnp.asarray(g.edges.u) * g.m + jnp.asarray(g.edges.v)
+    u_edges = np.asarray(T._edge_uniforms(key, eid_edges))
+    assert np.array_equal(u_edges, grid[g.edges.u, g.edges.v])
+    # ELL slot draw (sparse engine path)
+    idx = jnp.asarray(nl.idx)
+    i = jnp.arange(g.m, dtype=idx.dtype)[:, None]
+    eid_ell = jnp.minimum(i, idx) * g.m + jnp.maximum(i, idx)
+    u_ell = np.asarray(T._edge_uniforms(key, eid_ell))
+    assert np.array_equal(u_ell[nl.mask], grid[np.arange(g.m)[:, None].repeat(nl.d_max, 1)[nl.mask], nl.idx[nl.mask]])
+
+
+@pytest.mark.parametrize("k", [0, 2, 7])
+def test_dropout_realization_matches_legacy_formula(k):
+    """GraphProcess.adjacency (batched draw + scatter) == the legacy
+    symmetrize(base & keep_grid) formula, and the ELL mask scatters to the
+    same matrix: one realization, three layouts."""
+    g = make_process(31, "rgg", time_varying="edge_dropout", drop=0.4, seed=9)
+    nl = g.neighbors()
+    keep = _legacy_grid_uniforms(g, k) >= g.drop
+    legacy = g.base & keep & keep.T
+    np.fill_diagonal(legacy, False)
+    a = np.asarray(g.adjacency(k))
+    assert np.array_equal(a, legacy)
+    ell = np.asarray(g.adjacency_ell(k, nl))
+    assert np.array_equal(np.asarray(scatter_ell(np.asarray(nl.idx), ell)), a)
+
+
+def test_dropout_stream_shared_by_both_engines():
+    """Engine-level: scan and python engines, dense and sparse mixing, all
+    four runs must realize the identical G^(k) degree trajectory -- the
+    proof that the batched draw feeds every path the same stream."""
+    from repro.data.loader import FederatedBatches
+    from repro.data.synthetic import image_dataset
+    from repro.fl.simulator import SimConfig, run
+
+    m, Tn = 6, 9
+    x, y = image_dataset(240, seed=0, dim=16)
+    rng = np.random.default_rng(0)
+    parts = [np.sort(p) for p in np.array_split(rng.permutation(len(y)), m)]
+    graph = make_process(m, "rgg", time_varying="edge_dropout", drop=0.3, seed=1)
+    sim = SimConfig(m=m, iters=Tn, dim=16, r=50.0, seed=0)
+    mk = lambda: FederatedBatches(x, y, parts, sim.batch, seed=2)
+    runs = [
+        run(sim, graph, mk(), None, eval_every=Tn, engine="scan"),
+        run(sim, graph, mk(), None, eval_every=Tn, engine="python"),
+        run(dataclasses.replace(sim, mix_impl="sparse"), graph, mk(), None,
+            eval_every=Tn, engine="scan"),
+        run(dataclasses.replace(sim, mix_impl="sparse"), graph, mk(), None,
+            eval_every=Tn, engine="python"),
+    ]
+    for r in runs[1:]:
+        assert np.array_equal(r.deg, runs[0].deg)
+        assert np.array_equal(r.comm_count, runs[0].comm_count)
+
+
+# ---------------------------------------------------------- no dense staging
+
+@pytest.mark.parametrize("topology,kw", [
+    ("rgg", dict(radius=fleet_radius(16384))),
+    ("er", dict(er_p=24 / 16384)),
+    ("ring", {}),
+])
+def test_staging_never_allocates_dense_at_m16384(topology, kw):
+    """Acceptance: staging an m = 16384 fleet -- edge list, connectivity,
+    neighbor list, by_labels-free setup -- stays O(E).  A single (m, m)
+    bool is 256 MB and the old RGG float64 distance field was 2 GB; the
+    128 MB tracemalloc bound fails on any dense detour while leaving the
+    real O(E) intermediates (~40 MB) ample room."""
+    m = 16384
+    tracemalloc.start()
+    g = make_process(m, topology, time_varying="edge_dropout", seed=0, **kw)
+    nl = g.neighbors()
+    _, peak = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+    assert g._base_cache is None, "staging must not densify the fabric"
+    assert peak < 128 * 1024 * 1024, f"staging peak {peak / 1e6:.0f} MB"
+    assert nl.m == m and edges_connected(g.edges)
+
+
+def test_complete_staging_is_edge_native():
+    """Complete graphs have Theta(m^2) edges by definition; the claim is
+    only that staging emits the edge list directly, never an (m, m)
+    matrix."""
+    g = make_process(512, "complete")
+    assert g._base_cache is None
+    assert g.edges.n_edges == 512 * 511 // 2
+
+
+def test_edge_dropout_rejects_m_past_int32_eid_range():
+    """The jitted dropout paths keep canonical edge ids int32 (fold_in
+    bit-compatibility); past m = 46340 the ids would wrap and distinct
+    edges would silently share uniforms -- constructing such a process must
+    fail loudly instead."""
+    e = np.empty(0, np.int32)
+    big = EdgeList(e, e.copy(), 46341)
+    with pytest.raises(ValueError, match="46340"):
+        GraphProcess(edges=big, kind="edge_dropout", drop=0.3)
+    # static kinds never evaluate edge ids: no bound
+    GraphProcess(edges=big, kind="static")
+
+
+def test_base_view_is_lazy_and_cached():
+    g = make_process(10, "ring")
+    assert g._base_cache is None
+    b1 = g.base
+    assert g._base_cache is not None and g.base is b1
+
+
+# ---------------------------------------------------------- neighbor lists --
+
+def test_neighbor_list_vectorized_matches_per_row_reference():
+    """The vectorized bucketing must reproduce the old per-row loop's exact
+    layout (ascending neighbors, self-padded tail) -- checked brute-force."""
+    g = make_process(37, "rgg", seed=2)
+    nl = g.neighbors()
+    base = g.base
+    assert nl.d_max == max(1, int(base.sum(1).max()))
+    for i in range(g.m):
+        nbrs = np.nonzero(base[i])[0]
+        assert (nl.idx[i, : len(nbrs)] == nbrs).all()
+        assert (nl.idx[i, len(nbrs):] == i).all()
+        assert nl.mask[i].sum() == len(nbrs)
+
+
+def test_neighbor_list_m4096_shape_and_content():
+    """The m = 4096 shape that made the per-row Python loop a staging
+    bottleneck: built straight from the edge list, checked by degree
+    accounting plus spot rows against the edge list itself."""
+    m = 4096
+    g = make_process(m, "rgg", radius=fleet_radius(m), seed=0)
+    nl = g.neighbors()
+    deg = g.edges.degrees()
+    assert nl.idx.shape == nl.mask.shape == (m, int(deg.max()))
+    assert (nl.mask.sum(1) == deg).all()
+    assert (nl.idx[~nl.mask] == np.nonzero(~nl.mask)[0]).all(), "pads self-index"
+    for i in (0, 17, m // 2, m - 1):
+        want = np.sort(np.concatenate([g.edges.v[g.edges.u == i],
+                                       g.edges.u[g.edges.v == i]]))
+        assert (nl.idx[i, nl.mask[i]] == want).all()
+
+
+def test_neighbor_list_accepts_dense_and_edges():
+    g = make_process(12, "er", seed=8)
+    a, b = neighbor_list(g.base), neighbor_list(g.edges)
+    assert (a.idx == b.idx).all() and (a.mask == b.mask).all()

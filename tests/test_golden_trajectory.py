@@ -1,0 +1,91 @@
+"""Golden-trajectory regression guard: a seed-pinned m = 8 EF-HC run whose
+trajectories are asserted against a checked-in reference artifact.
+
+The scan-parity suite proves engines/impls agree with EACH OTHER, but a
+staging refactor that shifts an RNG realization (a different edge draw, a
+reordered fold_in, a changed partition shard) moves every engine in
+lockstep and parity stays green.  This test pins the ABSOLUTE realization:
+the graph stream (deg), the event stream (v, comm_count) and the parameter
+trajectory (loss, consensus_err) of one small canonical run must match the
+artifact bit-for-bit on the integer channels and to fp32 tolerance on the
+float channels.
+
+The run deliberately crosses every stage this PR rewrote: RGG staging via
+the cell-list edge builder, edge_dropout via the batched O(E) draw, the
+by_labels partitioner, and the chunked-scan engine.
+
+Regenerate (ONLY when a realization change is intended and understood):
+
+    PYTHONPATH=src python tests/test_golden_trajectory.py --write
+"""
+import json
+import pathlib
+
+import numpy as np
+
+from repro.core.topology import make_process
+from repro.data.loader import FederatedBatches
+from repro.data.partition import by_labels
+from repro.data.synthetic import image_dataset
+from repro.fl.simulator import SimConfig, run
+
+GOLDEN = pathlib.Path(__file__).parent / "golden" / "efhc_m8_trajectory.json"
+M, T, DIM = 8, 18, 24
+
+INT_FIELDS = ("v", "comm_count", "deg")
+FLOAT_FIELDS = ("loss", "tx_time", "util", "consensus_err")
+
+
+def _golden_run():
+    x, y = image_dataset(600, seed=0, dim=DIM)
+    parts = by_labels(y, M, 3)
+    graph = make_process(M, "rgg", time_varying="edge_dropout", drop=0.3, seed=0)
+    sim = SimConfig(m=M, iters=T, dim=DIM, batch=8, r=50.0, seed=0)
+    batches = FederatedBatches(x, y, parts, sim.batch, seed=2)
+    return run(sim, graph, batches, None, eval_every=5, engine="scan")
+
+
+def _to_doc(res) -> dict:
+    doc = {"m": M, "iters": T, "dim": DIM,
+           "bandwidths": np.asarray(res.bandwidths, np.float64).tolist()}
+    for f in INT_FIELDS:
+        doc[f] = np.asarray(getattr(res, f), np.int64).tolist()
+    for f in FLOAT_FIELDS:
+        doc[f] = np.asarray(getattr(res, f), np.float64).tolist()
+    return doc
+
+
+def test_efhc_trajectory_matches_golden_artifact():
+    assert GOLDEN.exists(), \
+        f"golden artifact missing: {GOLDEN} (see module docstring to regenerate)"
+    want = json.loads(GOLDEN.read_text())
+    assert (want["m"], want["iters"], want["dim"]) == (M, T, DIM)
+    res = _golden_run()
+    np.testing.assert_allclose(res.bandwidths, np.asarray(want["bandwidths"]),
+                               rtol=1e-5, err_msg="bandwidth draw shifted")
+    for f in INT_FIELDS:
+        got = np.asarray(getattr(res, f), np.int64)
+        ref = np.asarray(want[f], np.int64)
+        assert np.array_equal(got, ref), \
+            (f"RNG realization shifted: {f} diverged from the golden "
+             f"trajectory (first mismatch at iter "
+             f"{int(np.argwhere(~np.all(got.reshape(T, -1) == ref.reshape(T, -1), axis=-1))[0])})")
+    for f in FLOAT_FIELDS:
+        np.testing.assert_allclose(
+            np.asarray(getattr(res, f), np.float64), np.asarray(want[f]),
+            rtol=2e-4, atol=2e-5,
+            err_msg=f"{f} diverged from the golden trajectory")
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--write", action="store_true",
+                    help="regenerate the golden artifact from the current code")
+    if ap.parse_args().write:
+        GOLDEN.parent.mkdir(parents=True, exist_ok=True)
+        GOLDEN.write_text(json.dumps(_to_doc(_golden_run()), indent=1))
+        print(f"wrote {GOLDEN}")
+    else:
+        print("pass --write to regenerate the golden artifact")

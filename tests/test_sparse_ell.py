@@ -47,6 +47,40 @@ def test_build_p_ell_matches_dense(m, seed):
     mixing.assert_doubly_stochastic(p_from_ell)
 
 
+@pytest.mark.parametrize("m,seed", [(20, 1), (64, 4)])
+def test_assert_doubly_stochastic_ell_matches_dense_check(m, seed):
+    """The O(m d) ELL invariant check accepts exactly what the dense check
+    accepts -- and catches a broken P without ever scattering to (m, m)."""
+    adj, comm, idx, mask, comm_ell = _ell_graph_comm(m, seed)
+    pd, po = mixing.build_p_ell(idx, mask, comm_ell)
+    mixing.assert_doubly_stochastic_ell(idx, pd, po)
+    # symmetry violation: bump one active slot's weight
+    po_bad = np.asarray(po).copy()
+    i, s = np.argwhere(np.asarray(comm_ell))[0]
+    po_bad[i, s] += 0.01
+    with pytest.raises(AssertionError):
+        mixing.assert_doubly_stochastic_ell(idx, 1.0 - po_bad.sum(-1), po_bad)
+    # row-sum violation
+    with pytest.raises(AssertionError):
+        mixing.assert_doubly_stochastic_ell(idx, np.asarray(pd) + 0.1, po)
+
+
+def test_assert_doubly_stochastic_ell_at_m4096():
+    """The large-fleet form exists precisely for shapes where the dense
+    scatter is the (m, m) matrix the sparse engine never builds."""
+    from repro.core.topology import fleet_radius
+
+    m = 4096
+    g = make_process(m, "rgg", radius=fleet_radius(m), seed=0)
+    nl = g.neighbors()
+    idx, mask = jnp.asarray(nl.idx), jnp.asarray(nl.mask)
+    rng = np.random.default_rng(0)
+    v = jnp.asarray(rng.random(m) < 0.5)
+    comm_ell = jnp.logical_and(jnp.logical_or(v[:, None], v[idx]), mask)
+    pd, po = mixing.build_p_ell(idx, mask, comm_ell)
+    mixing.assert_doubly_stochastic_ell(idx, pd, po)
+
+
 # ------------------------------------------------------- consensus mixes ----
 
 def test_mix_sparse_matches_dense():
@@ -153,3 +187,11 @@ def test_edge_coloring_is_proper_covers_and_vizing(topology, m, seed):
 
 def test_edge_coloring_empty_graph():
     assert consensus.edge_coloring(np.zeros((5, 5), bool)) == []
+
+
+def test_edge_coloring_accepts_edge_list():
+    """The staging-native input: coloring an EdgeList must produce the same
+    rounds as coloring its dense scatter (edges iterate in the same
+    canonical order either way)."""
+    g = make_process(24, "rgg", seed=9)
+    assert consensus.edge_coloring(g.edges) == consensus.edge_coloring(g.base)
