@@ -10,6 +10,16 @@ Measures the scan engine across m (devices) and trace modes, writing
   trace mode, from ``jax.eval_shape`` (no allocation), i.e. the scan-ys
   memory that capped fleets at m ~ 64 when ``full`` was the only layout.
 
+Rows with ``mix_impl="sharded"`` time the shard_map fleet engine
+(``repro.fl.sharded``): the fleet partitioned over a 1-D device mesh with
+halo exchange, the path that takes simulation (not just staging) to
+m >= 10^5.  They need that many jax devices -- on CPU set
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` *before* running
+(this script errors with that exact instruction otherwise), which is also
+how the default grid (containing sharded rows) must be repinned.  Fleets
+past the int32 edge-id cap (m > 46340) use the partition_cycle fabric --
+``edge_dropout``'s per-edge draw is id-keyed and deliberately capped.
+
 Default grid walks the trace ladder the sizes require: dense traces at
 m=16, bit-packed at m=64/256, count-summaries at m>=1024 -- and at every
 m >= 256 it times the dense (m, m) Event-3 aggregation against the sparse
@@ -46,7 +56,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import triggers
+from repro.core import topology, triggers
 from repro.core.topology import fleet_radius, make_process
 from repro.data.loader import FederatedBatches
 from repro.data.synthetic import image_dataset
@@ -56,15 +66,17 @@ from repro.fl.trace import TRACE_MODES, link_bytes_per_iter
 # (m, trace mode actually timed, mix_impl actually timed); every entry also
 # reports analytic bytes for all three trace modes.  trace="staging" rows
 # skip the engine entirely and time only the edge-native topology setup.
-DEFAULT_GRID: tuple[tuple[int, str, str], ...] = (
-    (16, "full", "dense"),
-    (64, "packed", "dense"),
-    (256, "packed", "dense"), (256, "packed", "sparse"),
-    (1024, "summary", "dense"), (1024, "summary", "sparse"),
-    (2048, "summary", "dense"), (2048, "summary", "sparse"),
-    (4096, "summary", "dense"), (4096, "summary", "sparse"),
-    (16384, "summary", "sparse"),
-    (32768, "staging", "staging"),
+DEFAULT_GRID: tuple[tuple[int, str, str, int], ...] = (
+    (16, "full", "dense", 1),
+    (64, "packed", "dense", 1),
+    (256, "packed", "dense", 1), (256, "packed", "sparse", 1),
+    (1024, "summary", "dense", 1), (1024, "summary", "sparse", 1),
+    (2048, "summary", "dense", 1), (2048, "summary", "sparse", 1),
+    (4096, "summary", "dense", 1), (4096, "summary", "sparse", 1),
+    (4096, "summary", "sharded", 8),
+    (16384, "summary", "sparse", 1),
+    (32768, "staging", "staging", 1),
+    (131072, "summary", "sharded", 8),
 )
 
 
@@ -75,8 +87,14 @@ def _setup(m: int, iters: int, dim: int, seed: int = 0):
     # iid split: partition skew is irrelevant to throughput/memory and an
     # even split keeps every device non-empty at any m
     parts = [np.sort(p) for p in np.array_split(rng.permutation(len(y)), m)]
-    graph = make_process(m, "rgg", radius=fleet_radius(m),
-                         time_varying="edge_dropout", drop=0.3, seed=seed)
+    # edge_dropout's per-edge draw is canonical-edge-id keyed (int32), which
+    # caps it at m <= 46340 by design; bigger fleets bench the deterministic
+    # partition_cycle fabric instead (same ELL hot path, any m)
+    if m <= topology._EID_INT32_MAX_M:
+        tv = dict(time_varying="edge_dropout", drop=0.3)
+    else:
+        tv = dict(time_varying="partition_cycle", cycle_len=2)
+    graph = make_process(m, "rgg", radius=fleet_radius(m), seed=seed, **tv)
     sim = simulator.SimConfig(m=m, iters=iters, dim=dim, r=50.0, seed=seed)
     batches = FederatedBatches(x, y, parts, sim.batch, seed=seed + 2)
     return sim, graph, batches, x, y
@@ -119,18 +137,26 @@ def bench_staging(m: int, *, repeats: int = 3) -> dict:
     }
 
 
-def bench_fleet(m: int, trace: str, mix_impl: str = "dense", *,
-                iters: int, dim: int, repeats: int = 3) -> dict:
+def bench_fleet(m: int, trace: str, mix_impl: str = "dense", shards: int = 1,
+                *, iters: int, dim: int, repeats: int = 3) -> dict:
     if trace == "staging":
         return bench_staging(m, repeats=repeats)
     sim, graph, batches, x, y = _setup(m, iters, dim)
     idx = jnp.asarray(batches.stage(iters))
 
-    traj = {mode: _traj_bytes(dataclasses.replace(sim, trace=mode),
-                              graph, x, y, idx, iters)
-            for mode in TRACE_MODES}
+    if mix_impl == "sharded":
+        sim = dataclasses.replace(sim, trace=trace, mix_impl=mix_impl,
+                                  shards=shards)
+        # only the sharded engine's own (summary) ys: the dense/packed
+        # engines would stage (m, m) host state at exactly the scales this
+        # row exists to pass
+        traj = {trace: _traj_bytes(sim, graph, x, y, idx, iters)}
+    else:
+        traj = {mode: _traj_bytes(dataclasses.replace(sim, trace=mode),
+                                  graph, x, y, idx, iters)
+                for mode in TRACE_MODES}
+        sim = dataclasses.replace(sim, trace=trace, mix_impl=mix_impl)
 
-    sim = dataclasses.replace(sim, trace=trace, mix_impl=mix_impl)
     engine, model_dim = simulator.make_engine(sim, graph, T=iters,
                                               eval_every=iters,
                                               x=x, y=y, eval_fn=None)
@@ -143,14 +169,22 @@ def bench_fleet(m: int, trace: str, mix_impl: str = "dense", *,
     # estimate of what the program costs
     wall = min(_timed(eng, pol, seed, idx) for _ in range(max(1, repeats)))
 
-    return {
-        "m": m, "trace": trace, "mix_impl": mix_impl, "iters": iters,
+    entry = {
+        "m": m, "trace": trace, "mix_impl": mix_impl, "shards": shards,
+        "iters": iters,
         "model_dim": model_dim, "d_max": graph.neighbors().d_max,
         "sec_per_iter": wall / iters, "iters_per_sec": iters / wall,
         "traj_bytes": traj,
         "link_bytes_per_iter": {mode: link_bytes_per_iter(m, mode)
                                 for mode in TRACE_MODES},
     }
+    if mix_impl == "sharded":
+        # halo-exchange geometry: what fraction of the fleet crosses shard
+        # boundaries per iteration (the collective's payload)
+        plan = topology.shard_plan(graph.edges, shards, coords=graph.coords)
+        entry.update(boundary_frac=plan.boundary_frac,
+                     halo_b_max=plan.b_max, halo_h_max=plan.h_max)
+    return entry
 
 
 def _timed(eng, pol, seed, idx) -> float:
@@ -159,26 +193,34 @@ def _timed(eng, pol, seed, idx) -> float:
     return time.perf_counter() - t0
 
 
-def _parse_sizes(spec: str) -> tuple[tuple[int, str, str], ...]:
-    """m:trace[:mix_impl] comma list, e.g. 16:full,4096:summary:sparse;
-    ``m:staging`` requests a staging-only (no-simulation) entry."""
+def _parse_sizes(spec: str) -> tuple[tuple[int, str, str, int], ...]:
+    """m:trace[:mix_impl[:shards]] comma list, e.g.
+    16:full,4096:summary:sparse,131072:summary:sharded:8; ``m:staging``
+    requests a staging-only (no-simulation) entry."""
     grid = []
     for item in spec.split(","):
         parts = item.split(":")
         if len(parts) < 2 or not parts[0].isdigit():
             raise SystemExit(
-                f"--sizes: {item!r} -- expected m:trace[:mix_impl], "
-                f"e.g. 1024:summary:sparse or 32768:staging")
+                f"--sizes: {item!r} -- expected m:trace[:mix_impl[:shards]], "
+                f"e.g. 1024:summary:sparse or 131072:summary:sharded:8 or "
+                f"32768:staging")
         trace = parts[1]
         if trace == "staging":
             if len(parts) > 2:
                 raise SystemExit(
                     f"--sizes: {item!r} -- staging rows never simulate, so "
                     f"a mix_impl would be silently ignored; drop it")
-            grid.append((int(parts[0]), trace, "staging"))
-        else:
-            grid.append((int(parts[0]), trace,
-                         parts[2] if len(parts) > 2 else "dense"))
+            grid.append((int(parts[0]), trace, "staging", 1))
+            continue
+        impl = parts[2] if len(parts) > 2 else "dense"
+        shards = int(parts[3]) if len(parts) > 3 else 1
+        if shards > 1 and impl != "sharded":
+            raise SystemExit(
+                f"--sizes: {item!r} -- a shard count only applies to "
+                f"mix_impl='sharded'; it would be silently ignored on "
+                f"{impl!r}")
+        grid.append((int(parts[0]), trace, impl, shards))
     return tuple(grid)
 
 
@@ -197,25 +239,30 @@ def main() -> None:
     args = ap.parse_args()
 
     if args.smoke:
-        grid = ((128, "packed", "dense"),)
+        grid = ((128, "packed", "dense", 1),)
     elif args.sizes:
         grid = _parse_sizes(args.sizes)
     else:
         grid = DEFAULT_GRID
 
     entries = []
-    for m, trace, mix_impl in grid:
-        e = bench_fleet(m, trace, mix_impl, iters=args.iters, dim=args.dim,
-                        repeats=args.repeats)
+    for m, trace, mix_impl, shards in grid:
+        e = bench_fleet(m, trace, mix_impl, shards, iters=args.iters,
+                        dim=args.dim, repeats=args.repeats)
         entries.append(e)
         if trace == "staging":
-            print(f"m={m:5d} trace={trace:8s} impl={mix_impl:8s} "
+            print(f"m={m:6d} trace={trace:8s} impl={mix_impl:8s} "
                   f"staged in {e['staging_sec']:6.2f}s  "
                   f"E={e['n_edges']} d_max={e['d_max']} "
                   f"({e['edge_bytes'] / 1e6:.1f} MB edges vs "
                   f"{e['dense_bytes'] / 1e6:.0f} MB dense)")
+        elif mix_impl == "sharded":
+            print(f"m={m:6d} trace={trace:8s} impl={mix_impl:8s}x{shards} "
+                  f"{e['iters_per_sec']:8.2f} iters/s  "
+                  f"traj {e['traj_bytes'][trace] / 1e6:8.2f} MB  "
+                  f"boundary {e['boundary_frac']:.1%}")
         else:
-            print(f"m={m:5d} trace={trace:8s} impl={mix_impl:8s} "
+            print(f"m={m:6d} trace={trace:8s} impl={mix_impl:8s} "
                   f"{e['iters_per_sec']:8.2f} iters/s  "
                   f"traj {e['traj_bytes'][trace] / 1e6:8.2f} MB "
                   f"(full would be {e['traj_bytes']['full'] / 1e6:.2f} MB)")

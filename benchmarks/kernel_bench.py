@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import csv_line, timeit
+from repro.core.consensus import mix_sparse
 from repro.kernels.mixing.ref import mix_ref
 from repro.kernels.swa.ref import swa_ref
 from repro.kernels.trigger.ref import trigger_sq_ref
@@ -44,6 +45,64 @@ def bench_trigger() -> list[str]:
     return rows
 
 
+def _ell_fixture(m: int, d_max: int, n: int):
+    """Ring-lattice ELL neighbor list (every slot active) plus the dense
+    (m, m) transition it stands in for: the worst case for the gather path
+    (no padded slots to skip) and the best for dense (a single einsum)."""
+    key = jax.random.PRNGKey(0)
+    w = jax.random.normal(key, (m, n), jnp.float32)
+    p = jax.nn.softmax(jax.random.normal(key, (m, m)), -1)
+    nbr = (jnp.arange(m)[:, None] + jnp.arange(1, d_max + 1)[None, :]) % m
+    p_off = jnp.full((m, d_max), 1.0 / (d_max + 1), jnp.float32)
+    p_diag = jnp.full((m,), 1.0 / (d_max + 1), jnp.float32)
+    return p, nbr.astype(jnp.int32), p_diag, p_off, w
+
+
+def bench_gather_mix() -> tuple[list[str], list[dict]]:
+    """Dense (m, m) @ (m, n) consensus vs the ELL gather-mix at fleet
+    degree d (DESIGN.md "Sparse mixing"): dense moves the whole transition
+    matrix and does O(m^2 n) flops, the gather path touches O(m d n).  The
+    measured crossover is the point the fleet engine switches mix_impl; the
+    per-m verdicts also feed the markdown crossover table written by
+    ``run_all``.  On TPU the pallas ``mix_sparse_pallas`` path is timed in
+    place of the XLA gather (interpret mode on CPU is not representative)."""
+    rows, verdicts = [], []
+    d_max, n = 12, 1024
+    sparse_fn = jax.jit(mix_sparse)
+    if jax.default_backend() != "cpu":
+        from repro.kernels.mixing.ops import mix_sparse as _pallas_sparse
+
+        sparse_fn = jax.jit(lambda i, pd, po, w: _pallas_sparse(i, pd, po, w))
+    for m in (256, 1024, 4096):
+        p, nbr, p_diag, p_off, w = _ell_fixture(m, d_max, n)
+        reps = 5 if m <= 1024 else 2
+        us_dense = timeit(jax.jit(mix_ref), p, w, reps=reps)
+        us_sparse = timeit(sparse_fn, nbr, p_diag, p_off, w, reps=reps)
+        dense_b = (m * m + 2 * m * n) * 4
+        sparse_b = ((d_max + 2) * m * n + 2 * m * d_max) * 4
+        rows.append(csv_line(
+            f"kernel_gather_mix[m={m},d={d_max},n={n}]", us_sparse,
+            f"dense_us={us_dense:.0f};speedup={us_dense / us_sparse:.2f}x;"
+            f"GBps={sparse_b / us_sparse / 1e3:.1f}"))
+        verdicts.append({"m": m, "d_max": d_max, "n": n,
+                         "dense_us": us_dense, "sparse_us": us_sparse,
+                         "dense_bytes": dense_b, "sparse_bytes": sparse_b})
+    return rows, verdicts
+
+
+def crossover_table(verdicts: list[dict]) -> str:
+    """Markdown dense-vs-sparse crossover table from bench_gather_mix."""
+    lines = ["| m | d_max | n | dense us | sparse us | speedup | winner |",
+             "|---|---|---|---|---|---|---|"]
+    for v in verdicts:
+        win = "sparse" if v["sparse_us"] < v["dense_us"] else "dense"
+        lines.append(
+            f"| {v['m']} | {v['d_max']} | {v['n']} | {v['dense_us']:.0f} "
+            f"| {v['sparse_us']:.0f} | {v['dense_us'] / v['sparse_us']:.2f}x "
+            f"| {win} |")
+    return "\n".join(lines)
+
+
 def bench_swa() -> list[str]:
     rows = []
     for (b, s, h, g, dh, win) in [(1, 2048, 8, 2, 64, 512)]:
@@ -59,5 +118,13 @@ def bench_swa() -> list[str]:
     return rows
 
 
-def run_all() -> list[str]:
-    return bench_mixing() + bench_trigger() + bench_swa()
+def run_all(art_dir: str | None = None) -> list[str]:
+    gm_rows, verdicts = bench_gather_mix()
+    if art_dir is not None:
+        import os
+
+        os.makedirs(art_dir, exist_ok=True)
+        with open(os.path.join(art_dir, "gather_mix_crossover.md"), "w") as f:
+            f.write("# Dense vs ELL gather-mix crossover (measured)\n\n"
+                    + crossover_table(verdicts) + "\n")
+    return bench_mixing() + gm_rows + bench_trigger() + bench_swa()

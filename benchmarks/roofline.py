@@ -89,6 +89,64 @@ def derive(rec: dict) -> dict:
     }
 
 
+def gather_mix_rows(ms=(1024, 4096, 16384, 131072), d_max: int = 12,
+                    n: int = 1 << 20) -> list[dict]:
+    """Analytic TPU roofline for the consensus step at fleet scale: dense
+    (m, m) @ (m, n) vs the ELL gather-mix (``mix_sparse`` /
+    ``mix_sparse_pallas``).  Needs no dry-run artifact -- the terms follow
+    directly from the access pattern.
+
+    dense:  reads P (m^2) + w (m n), writes (m n); 2 m^2 n flops.
+    sparse: reads (d+1) rows of n per device + ELL tables (2 m d),
+            writes (m n); 2 m (d+1) n flops.
+
+    Dense flops cross sparse at m ~ d+1; dense *bytes* cross once
+    m^2 > d m n, i.e. m > d n -- so on HBM-bound shapes the einsum stays
+    competitive far longer than the flop count suggests, which is why the
+    measured crossover (benchmarks/kernel_bench.py) sits orders of
+    magnitude below the analytic memory crossover and the fleet engine
+    switches on measured throughput, not this table."""
+    out = []
+    for m in ms:
+        dense_flops = 2.0 * m * m * n
+        dense_bytes = (m * m + 2.0 * m * n) * 4
+        sparse_flops = 2.0 * m * (d_max + 1) * n
+        sparse_bytes = ((d_max + 2.0) * m * n + 2.0 * m * d_max) * 4
+        dense_t = max(dense_flops / PEAK_FLOPS_BF16, dense_bytes / HBM_BW)
+        sparse_t = max(sparse_flops / PEAK_FLOPS_BF16, sparse_bytes / HBM_BW)
+        out.append({
+            "m": m, "d_max": d_max, "n": n,
+            "dense_s": dense_t, "sparse_s": sparse_t,
+            "dense_bound": ("compute" if dense_flops / PEAK_FLOPS_BF16
+                            >= dense_bytes / HBM_BW else "memory"),
+            "winner": "sparse" if sparse_t < dense_t else "dense",
+        })
+    return out
+
+
+def gather_mix_markdown(rows: list[dict]) -> str:
+    lines = ["| m | d_max | n | dense s | sparse s | dense bound | winner |",
+             "|---|---|---|---|---|---|---|"]
+    for r in rows:
+        lines.append(
+            f"| {r['m']} | {r['d_max']} | {r['n']} | {r['dense_s']:.3e} "
+            f"| {r['sparse_s']:.3e} | {r['dense_bound']} | {r['winner']} |")
+    return "\n".join(lines)
+
+
+def gather_mix_all() -> list[str]:
+    from benchmarks.common import csv_line
+
+    out = []
+    for r in gather_mix_rows():
+        out.append(csv_line(
+            f"roofline_gather_mix[m={r['m']},d={r['d_max']}]",
+            r["sparse_s"] * 1e6,
+            f"dense_s={r['dense_s']:.3e};bound={r['dense_bound']};"
+            f"winner={r['winner']}"))
+    return out
+
+
 def load_all(art_dir: str = "artifacts/dryrun") -> list[dict]:
     out = []
     for path in sorted(glob.glob(os.path.join(art_dir, "*.json"))):

@@ -21,10 +21,12 @@ def main() -> None:
     if not args.skip_fig2:
         rows += fig2_panels.run_all(iters=100 if args.fast else 200,
                                     connectivity=not args.fast)
-    rows += kernel_bench.run_all()
+    art_root = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "artifacts")
+    rows += kernel_bench.run_all(art_dir=art_root)
     rows += rate_check.run_all()
-    art = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-                       "artifacts", "dryrun")
+    rows += roofline.gather_mix_all()  # analytic, needs no dry-run artifact
+    art = os.path.join(art_root, "dryrun")
     if os.path.isdir(art):
         rows += roofline.run_all(art)
     print("\n".join(rows))

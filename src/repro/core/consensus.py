@@ -85,6 +85,26 @@ def mix_sparse(nbr_idx: jax.Array, p_diag: jax.Array, p_off: jax.Array, w_stack)
     return jax.tree.map(mix_leaf, w_stack)
 
 
+def mix_sparse_halo(nbr_loc: jax.Array, p_diag: jax.Array, p_off: jax.Array,
+                    w_local, w_halo):
+    """``mix_sparse`` for one shard of a partitioned fleet: the gather
+    source is the concatenated ``[own rows ; halo rows]`` buffer and
+    ``nbr_loc`` indexes into it.  Same ``_sparse_mix_flat`` slot loop, same
+    float32 accumulation order, gathering bit-identical row values -- so the
+    mixed rows equal the single-device result bit-for-bit (DESIGN.md
+    "Sharded fleet engine")."""
+
+    def mix_leaf(x, h):
+        flat = x.reshape(x.shape[0], -1).astype(jnp.float32)
+        buf = jnp.concatenate(
+            [flat, h.reshape(h.shape[0], -1).astype(jnp.float32)], axis=0)
+        init = p_diag.astype(jnp.float32)[:, None] * flat
+        return _sparse_mix_flat(nbr_loc, p_off, buf, init).reshape(
+            x.shape).astype(x.dtype)
+
+    return jax.tree.map(mix_leaf, w_local, w_halo)
+
+
 def mix_delta_sparse(nbr_idx: jax.Array, p_off: jax.Array, w_stack):
     """Delta form w_i + sum_j p_ij (w_j - w_i): identical to ``mix_sparse``
     for a stochastic P (p_ii = 1 - sum_j p_ij) but numerically friendlier

@@ -248,3 +248,160 @@ def step(
     return new_state, StepAux(v=v, comm=comm, p=p, loss=loss, tx_time=tx_time,
                               util=util, adj=adj, consensus_err=consensus_err,
                               comm_count=used_i, deg=deg_i)
+
+
+# ---------------------------------------------------------------------------
+# Sharded fleet step: one shard's slice of Alg. 1 inside shard_map over the
+# 1-D "fl" mesh axis (DESIGN.md "Sharded fleet engine").  Cross-shard state
+# moves through one halo exchange of only the boundary rows; everything
+# else is the exact per-row arithmetic of ``step``'s sparse branch, so the
+# owned-device trajectories stay bit-identical to the single-device engine.
+# ---------------------------------------------------------------------------
+
+class ShardCtx(NamedTuple):
+    """One shard's slice of a ``topology.ShardPlan``, as traced arrays."""
+
+    owned: jax.Array  # (ms,) global device ids
+    nbr_gid: jax.Array  # (ms, d_max) global neighbor ids
+    nbr_loc: jax.Array  # (ms, d_max) index into the [own; halo] buffer
+    mask: jax.Array  # (ms, d_max) real-slot mask
+    send_idx: jax.Array  # (B_max,) local boundary rows
+    recv_src: jax.Array  # (H_max,) flat positions in the gathered buffer
+
+
+class ShardAux(NamedTuple):
+    """Per-iteration outputs of one shard: the summary-trace channels of
+    ``StepAux`` -- per-device vectors stay shard-local (the engine gathers
+    them into global order once, outside the scan), scalars are already
+    fleet-global (identical on every shard)."""
+
+    v: jax.Array  # (ms,) broadcast events fired
+    loss: jax.Array  # (ms,) per-device minibatch loss
+    tx_time: jax.Array  # scalar, replicated
+    util: jax.Array  # scalar, replicated
+    consensus_err: jax.Array  # scalar, replicated (hierarchical fp32 sum)
+    comm_count: jax.Array  # (ms,) int32
+    deg: jax.Array  # (ms,) int32
+
+
+def halo_exchange(ctx: ShardCtx, axis_name: str, x: jax.Array) -> jax.Array:
+    """(ms, ...) per-row payload -> (H_max, ...) halo rows: all-gather only
+    the boundary rows (``send_idx``) and pick this shard's halo out of the
+    flat (S * B_max, ...) result at ``recv_src``.  Pad slots carry row
+    0 / position 0 junk; every consumer masks or zero-weights them."""
+    gath = jax.lax.all_gather(x[ctx.send_idx], axis_name)
+    return gath.reshape((-1,) + gath.shape[2:])[ctx.recv_src]
+
+
+def step_sharded(
+    cfg: EFHCConfig,
+    graph: GraphProcess,
+    ctx: ShardCtx,
+    state: EFHCState,
+    *,
+    grad_fn: Callable[[Any, jax.Array, Any], tuple[jax.Array, Any]],
+    batch,
+    alpha_k: jax.Array,
+    model_dim: int,
+    m: int,
+    inv_perm: jax.Array,
+    axis_name: str = "fl",
+    policy_idx: jax.Array | None = None,
+) -> tuple[EFHCState, ShardAux]:
+    """One universal iteration of Alg. 1 for this shard's ``ms`` devices.
+
+    ``state`` holds the *local* slices (w/w_hat leaves (ms, ...), bandwidths
+    (ms,), prev_adj the (ms, d_max) ELL mask) except ``key``, which is the
+    fleet-global key replicated on every shard so the split stream matches
+    the single-device engine.  ``batch`` is the shard's (ms, ...) slice.
+
+    Bit-exactness vs ``step`` (mix_impl="sparse"), per DESIGN.md:
+      * graph realization: ``adjacency_ell_rows`` draws per-edge randomness
+        by canonical global edge id -- any row subset sees the same draw;
+      * triggers: thresholds are elementwise; gossip realizes the full (m,)
+        draw and slices owned rows (``triggers.policy_branches_rows``);
+      * mixing: the halo gather buffer holds bit-identical row values and
+        ``mix_sparse_halo`` runs the same slot-loop accumulation order;
+      * SGD: per-device grad keys are ``split(k_grad, m)[owned]``;
+      * tx_time/util: per-device terms are gathered back into *global*
+        device order (``inv_perm``) and reduced with the same expressions.
+    The one deliberate exception is ``consensus_err``: reconstructing the
+    (m, n) stack per iteration would defeat the partitioning, so it is a
+    hierarchical psum (mean via column psum, then a psum of local squared
+    deviations) -- equal to the single-device value up to fp32 summation
+    order, and tested with tolerance, never bit-compared."""
+    ms = state.bandwidths.shape[0]
+    key, k_trig, k_grad = jax.random.split(state.key, 3)
+
+    adj_ell = graph.adjacency_ell_rows(state.k, ctx.nbr_gid, ctx.mask, ctx.owned)
+    deg_i = adj_ell.sum(axis=1, dtype=jnp.int32)
+
+    # ---- Event 2: broadcast triggers (local rows) ------------------------
+    w_flat = _flatten_stack(state.w)
+    w_hat_flat = _flatten_stack(state.w_hat)
+    gamma_k = cfg.gamma(state.k) if cfg.gamma is not None else alpha_k
+    dev = triggers.rms_deviation(w_flat, w_hat_flat)
+    branches = triggers.policy_branches_rows(cfg.trigger, m, ctx.owned)
+    if policy_idx is None:
+        v = branches[triggers.policy_index(cfg.trigger.policy)](
+            dev, state.bandwidths, gamma_k, k_trig)
+    else:
+        v = jax.lax.switch(policy_idx, branches,
+                           dev, state.bandwidths, gamma_k, k_trig)
+
+    # ---- halo exchange: boundary rows of (w, v, deg) ---------------------
+    ex = lambda x: halo_exchange(ctx, axis_name, x)
+    w_halo = jax.tree.map(ex, state.w)
+    v_buf = jnp.concatenate([v, ex(v)])
+    deg_buf = jnp.concatenate([deg_i, ex(deg_i)])
+
+    # ---- Events 1 + 3: new links, information-flow edges, mixing ---------
+    new_links_ell = jnp.logical_and(adj_ell, ~state.prev_adj)
+    vv_ell = jnp.logical_or(v[:, None], v_buf[ctx.nbr_loc])
+    comm_ell = jnp.logical_or(jnp.logical_and(vv_ell, adj_ell), new_links_ell)
+    p_diag, p_off = mixing.build_p_ell_halo(ctx.nbr_loc, adj_ell, comm_ell,
+                                            deg_buf)
+    w_mixed = consensus.mix_sparse_halo(ctx.nbr_loc, p_diag, p_off,
+                                        state.w, w_halo)
+    used_i = comm_ell.sum(axis=1, dtype=jnp.int32)
+
+    def upd_hat(h, wcur):
+        mask = v.reshape((ms,) + (1,) * (wcur.ndim - 1))
+        return jnp.where(mask, wcur, h)
+
+    w_hat_new = jax.tree.map(upd_hat, state.w_hat, state.w)
+
+    # ---- Event 4: local SGD (global per-device key stream, sliced) -------
+    grad_keys = jax.random.split(k_grad, m)[ctx.owned]
+    loss, grads = jax.vmap(grad_fn, in_axes=(0, 0, 0))(w_mixed, grad_keys, batch)
+    w_new = jax.tree.map(
+        lambda wm, g: (wm.astype(jnp.float32)
+                       - alpha_k * g.astype(jnp.float32)).astype(wm.dtype),
+        w_mixed, grads)
+
+    # ---- paper metrics: reduce in single-device order --------------------
+    def global_order(x_local):
+        # (ms,) -> (m,) in *global* device order: the all-gather lands in
+        # shard-major (permuted) order, inv_perm maps device id -> position
+        return jax.lax.all_gather(x_local, axis_name).reshape(-1)[inv_perm]
+
+    deg = deg_i.astype(jnp.float32)
+    used = used_i.astype(jnp.float32)
+    frac = jnp.where(deg > 0, used / jnp.maximum(deg, 1.0), 0.0)
+    tx_time = jnp.mean(global_order(frac * model_dim / state.bandwidths))
+    capacity = jnp.sum(global_order(deg * state.bandwidths))
+    util = (jnp.sum(global_order(used * model_dim))
+            / jnp.maximum(capacity, 1e-12))
+
+    w_new_flat = _flatten_stack(w_new)
+    col_mean = jax.lax.psum(w_new_flat.sum(axis=0), axis_name) / m
+    consensus_err = jax.lax.psum(jnp.sum((w_new_flat - col_mean) ** 2),
+                                 axis_name)
+
+    new_state = EFHCState(
+        w=w_new, w_hat=w_hat_new, k=state.k + 1, prev_adj=adj_ell,
+        bandwidths=state.bandwidths, key=key, opt_state=state.opt_state,
+    )
+    return new_state, ShardAux(v=v, loss=loss, tx_time=tx_time, util=util,
+                               consensus_err=consensus_err,
+                               comm_count=used_i, deg=deg_i)

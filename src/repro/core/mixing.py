@@ -68,6 +68,29 @@ def build_p_ell(nbr_idx: jax.Array, adj_ell: jax.Array, comm_ell: jax.Array) -> 
     return transition_ell(metropolis_weights_ell(nbr_idx, adj_ell), comm_ell)
 
 
+def metropolis_weights_ell_halo(
+    nbr_loc: jax.Array, adj_ell: jax.Array, deg_buf: jax.Array
+) -> jax.Array:
+    """``metropolis_weights_ell`` for one shard of a partitioned fleet:
+    ``nbr_loc`` indexes the shard's ``[own rows ; halo rows]`` buffer and
+    ``deg_buf`` carries that buffer's int32 degrees (halo degrees arrive by
+    exchange, computed on their owner exactly as here).  ``1/(1+deg)`` and
+    the slot-wise min are elementwise, so beta is bit-identical to the
+    single-device rows for the shard's owned devices."""
+    inv = 1.0 / (1.0 + deg_buf.astype(jnp.float32))
+    ms = adj_ell.shape[0]
+    beta = jnp.minimum(inv[:ms, None], inv[nbr_loc])
+    return beta * adj_ell.astype(jnp.float32)
+
+
+def build_p_ell_halo(
+    nbr_loc: jax.Array, adj_ell: jax.Array, comm_ell: jax.Array,
+    deg_buf: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    return transition_ell(
+        metropolis_weights_ell_halo(nbr_loc, adj_ell, deg_buf), comm_ell)
+
+
 def assert_doubly_stochastic_ell(
     nbr_idx, p_diag, p_off, atol: float = 1e-6
 ) -> None:

@@ -306,22 +306,31 @@ def _rgg_edges_at_radius(pts: np.ndarray, r: float) -> EdgeList:
     return _canonical_edges(ii[sel], jj[sel], m)
 
 
-def random_geometric_edges(m: int, radius: float, seed: int) -> EdgeList:
+def random_geometric_graph(m: int, radius: float, seed: int) -> tuple[EdgeList, np.ndarray]:
     """Random geometric graph on the unit square (paper Sec. IV-A uses RGG
     with connectivity 0.4), staged as an edge list via the cell-list sweep.
     Retries with a growing radius until connected so Assumption 8-(a) holds
     with B1 = 1 for the base graph.  Same point draw, radius ladder and
     per-pair float comparison as the legacy dense constructor, so the
-    realization is bit-for-bit identical -- only the staging cost changes."""
+    realization is bit-for-bit identical -- only the staging cost changes.
+
+    Returns ``(edges, points)``: the (m, 2) device positions are what the
+    sharded fleet engine's spatial partitioner keys on (``shard_plan``) --
+    they carry no randomness beyond the edge draw itself."""
     rng = np.random.default_rng(seed)
     pts = rng.uniform(size=(m, 2))
     r = radius
     for _ in range(64):
         edges = _rgg_edges_at_radius(pts, r)
         if edges_connected(edges):
-            return edges
+            return edges, pts
         r *= 1.15
     raise RuntimeError("could not build a connected RGG")
+
+
+def random_geometric_edges(m: int, radius: float, seed: int) -> EdgeList:
+    """Edge list of ``random_geometric_graph`` (legacy single-value form)."""
+    return random_geometric_graph(m, radius, seed)[0]
 
 
 def _bernoulli_indices(rng: np.random.Generator, n: int, p: float) -> np.ndarray:
@@ -451,6 +460,12 @@ class GraphProcess:
     drop: float = 0.0
     cycle_len: int = 1
     seed: int = 0
+    # optional (m, 2) device positions (RGG builders keep them): purely a
+    # locality hint for the sharded engine's partitioner -- they carry no
+    # randomness beyond the edge realization and never enter the engine
+    # cache key or the jitted adjacency stream
+    coords: np.ndarray | None = dataclasses.field(
+        default=None, compare=False, repr=False)
 
     def __post_init__(self):
         if not isinstance(self.edges, EdgeList):
@@ -521,13 +536,26 @@ class GraphProcess:
         sparse engine's trajectories must match the dense engine's bit for
         bit) at O(m d) cost for every kind: ``edge_dropout`` evaluates the
         same random-access per-edge uniforms (``_edge_uniforms``) on the
-        slot ids only, never the (m, m) field.  Unknown future kinds fall
-        back to gathering the dense realization."""
-        mask = jnp.asarray(nl.mask)
+        slot ids only, never the (m, m) field."""
+        return self.adjacency_ell_rows(
+            k, jnp.asarray(nl.idx), jnp.asarray(nl.mask),
+            jnp.arange(self.m, dtype=jnp.int32))
+
+    def adjacency_ell_rows(self, k: jax.Array | int, idx: jax.Array,
+                           mask: jax.Array, rows: jax.Array) -> jax.Array:
+        """``adjacency_ell`` restricted to an arbitrary row subset: ``idx``/
+        ``mask`` are the (R, d_max) neighbor-list rows of the global devices
+        ``rows`` (R,), and the returned slot mask equals the corresponding
+        rows of the full ``adjacency_ell``.  Because the per-edge randomness
+        is random-access (keyed on the canonical global edge id, never on
+        array position), a shard evaluating only its own rows realizes the
+        identical G^(k) stream the single-device engine draws -- this is
+        what keeps the sharded fleet engine bit-exact."""
+        mask = jnp.asarray(mask)
         if self.kind == "static":
             return mask
-        idx = jnp.asarray(nl.idx)
-        i = jnp.arange(self.m, dtype=idx.dtype)[:, None]
+        idx = jnp.asarray(idx)
+        i = jnp.asarray(rows, idx.dtype)[:, None]
         if self.kind == "partition_cycle":
             phase = jnp.asarray(k, jnp.int32) % self.cycle_len
             keep = (i + idx) % self.cycle_len == phase
@@ -539,6 +567,149 @@ class GraphProcess:
             return jnp.logical_and(mask, keep)
         a = self.adjacency(k)
         return jnp.logical_and(mask, a[i, idx])
+
+
+# ---------------------------------------------------------------------------
+# Sharded-fleet partition: split the m devices across a 1-D device mesh and
+# precompute the halo-exchange tables the sharded engine needs (DESIGN.md
+# "Sharded fleet engine").  All host numpy, setup-time, O(E log E).
+# ---------------------------------------------------------------------------
+
+class ShardPlan(NamedTuple):
+    """Static fleet partition + halo-exchange tables for ``n_shards`` shards.
+
+    Shard ``s`` owns the ``ms = m / n_shards`` devices ``owned[s]`` (global
+    ids; a spatial permutation when coordinates are available, contiguous id
+    blocks otherwise).  Each owned row's neighbor slots are remapped into a
+    local gather buffer ``[own rows ; halo rows]``: ``nbr_loc`` indexes that
+    buffer, so one gather serves both shard-local and cross-shard neighbors.
+    The halo rows are supplied per iteration by one all-gather of only each
+    shard's *boundary* rows (rows with at least one cross-shard edge):
+    shard ``s`` contributes ``payload[send_idx[s]]`` (padded to ``B_max``),
+    and reads its halo back out of the gathered ``(S, B_max)`` buffer at the
+    flat positions ``recv_src[s]`` (padded to ``H_max``).
+
+    All arrays are host numpy (setup-time constants, like ``NeighborList``);
+    padding slots point at local row 0 / flat position 0 and are only ever
+    multiplied by zero weights or masked slots downstream.
+    """
+
+    n_shards: int
+    ms: int  # devices per shard (m = n_shards * ms)
+    d_max: int
+    owned: np.ndarray  # (S, ms) int32: global ids owned by each shard
+    inv_perm: np.ndarray  # (m,) int32: global id -> row in shard-major order
+    nbr_gid: np.ndarray  # (S, ms, d_max) int32: global neighbor ids
+    nbr_loc: np.ndarray  # (S, ms, d_max) int32: index into [own; halo] buffer
+    mask: np.ndarray  # (S, ms, d_max) bool: real-neighbor slots
+    send_idx: np.ndarray  # (S, B_max) int32: local rows sent to the exchange
+    recv_src: np.ndarray  # (S, H_max) int32: flat (S*B_max) gather positions
+    n_send: np.ndarray  # (S,) int32: real boundary-row counts
+    n_halo: np.ndarray  # (S,) int32: real halo-row counts
+
+    @property
+    def m(self) -> int:
+        return self.n_shards * self.ms
+
+    @property
+    def b_max(self) -> int:
+        return int(self.send_idx.shape[1])
+
+    @property
+    def h_max(self) -> int:
+        return int(self.recv_src.shape[1])
+
+    @property
+    def boundary_frac(self) -> float:
+        """Fraction of the fleet that is boundary (exchanged per iteration):
+        the halo-exchange volume relative to a full-fleet all-gather."""
+        return float(self.n_send.sum()) / max(1, self.m)
+
+
+def _morton_codes(coords: np.ndarray, bits: int = 16) -> np.ndarray:
+    """Z-order (Morton) codes of (m, 2) unit-square points: interleaving the
+    quantized coordinate bits orders devices along a space-filling curve, so
+    equal-count splits of the order give spatially compact shards -- the
+    property that keeps halo exchanges O(boundary), not O(m)."""
+    q = np.clip((np.asarray(coords) * (1 << bits)).astype(np.uint64),
+                0, (1 << bits) - 1)
+    code = np.zeros(len(q), dtype=np.uint64)
+    for b in range(bits):
+        code |= ((q[:, 0] >> np.uint64(b)) & np.uint64(1)) << np.uint64(2 * b)
+        code |= ((q[:, 1] >> np.uint64(b)) & np.uint64(1)) << np.uint64(2 * b + 1)
+    return code
+
+
+def shard_plan(edges: EdgeList, n_shards: int, *,
+               coords: np.ndarray | None = None) -> ShardPlan:
+    """Partition the fleet into ``n_shards`` equal shards and build the
+    halo-exchange tables.  With ``coords`` (the RGG device positions) shards
+    are Morton-order blocks -- spatially compact, so only a thin geometric
+    boundary crosses shards; without them, contiguous id blocks (optimal for
+    ring fabrics, a fallback for id-random ones).  O(E log E) host staging:
+    nothing here densifies an (m, m) matrix."""
+    m = edges.m
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1; got {n_shards}")
+    if m % n_shards:
+        raise ValueError(
+            f"sharded fleet needs m divisible by n_shards; got m={m}, "
+            f"n_shards={n_shards}")
+    ms = m // n_shards
+    if coords is not None and n_shards > 1:
+        perm = np.argsort(_morton_codes(coords), kind="stable").astype(np.int32)
+    else:
+        perm = np.arange(m, dtype=np.int32)
+    owned = perm.reshape(n_shards, ms)
+    inv_perm = np.empty(m, np.int32)
+    inv_perm[perm] = np.arange(m, dtype=np.int32)
+    shard_of = inv_perm // ms  # global id -> owning shard
+    loc_of = inv_perm % ms  # global id -> local row within its shard
+
+    nl = neighbor_list_from_edges(edges)
+    nbr_gid = nl.idx[owned]  # (S, ms, d_max)
+    mask = nl.mask[owned]
+
+    # halo set per shard: sorted unique remote endpoints of its real slots
+    halos: list[np.ndarray] = []
+    for s in range(n_shards):
+        j = nbr_gid[s][mask[s]]
+        halos.append(np.unique(j[shard_of[j] != s]).astype(np.int32))
+    # send set per shard: every owned row some other shard needs, sorted by
+    # global id so receivers can binary-search their positions
+    all_halo = (np.concatenate(halos) if any(h.size for h in halos)
+                else np.empty(0, np.int32))
+    sends = [np.unique(all_halo[shard_of[all_halo] == t]).astype(np.int32)
+             for t in range(n_shards)]
+
+    b_max = max(1, max((s.size for s in sends), default=0))
+    h_max = max(1, max((h.size for h in halos), default=0))
+    send_idx = np.zeros((n_shards, b_max), np.int32)
+    recv_src = np.zeros((n_shards, h_max), np.int32)
+    nbr_loc = np.empty_like(nbr_gid)
+    for s in range(n_shards):
+        send_idx[s, : sends[s].size] = loc_of[sends[s]]
+        # halo row h lives at flat position t * b_max + (rank of h in send_t)
+        t = shard_of[halos[s]]
+        pos = np.empty(halos[s].size, np.int64)
+        for tt in np.unique(t):
+            sel = t == tt
+            pos[sel] = np.searchsorted(sends[tt], halos[s][sel])
+        recv_src[s, : halos[s].size] = (t.astype(np.int64) * b_max + pos).astype(np.int32)
+        # slot remap: own rows -> local index, remote rows -> ms + halo rank
+        j = nbr_gid[s]
+        local = shard_of[j] == s
+        nbr_loc[s] = np.where(
+            local, loc_of[j],
+            ms + np.searchsorted(halos[s], j).astype(np.int32)).astype(np.int32)
+
+    return ShardPlan(
+        n_shards=n_shards, ms=ms, d_max=nl.d_max, owned=owned.astype(np.int32),
+        inv_perm=inv_perm, nbr_gid=nbr_gid, nbr_loc=nbr_loc, mask=mask,
+        send_idx=send_idx, recv_src=recv_src,
+        n_send=np.asarray([s.size for s in sends], np.int32),
+        n_halo=np.asarray([h.size for h in halos], np.int32),
+    )
 
 
 def fleet_radius(m: int) -> float:
@@ -568,8 +739,9 @@ def make_process(
     """Factory used by configs / the FL simulator.  Every builtin kind
     stages through its edge-list builder; no (m, m) host matrix exists
     unless a consumer later asks for the dense ``.base`` view."""
+    coords = None
     if topology == "rgg":
-        edges = random_geometric_edges(m, radius, seed)
+        edges, coords = random_geometric_graph(m, radius, seed)
     elif topology == "er":
         edges = erdos_renyi_edges(m, er_p, seed)
     elif topology == "ring":
@@ -578,4 +750,5 @@ def make_process(
         edges = complete_edges(m)
     else:
         raise ValueError(f"unknown topology: {topology}")
-    return GraphProcess(edges=edges, kind=time_varying, drop=drop, cycle_len=cycle_len, seed=seed + 1)
+    return GraphProcess(edges=edges, kind=time_varying, drop=drop,
+                        cycle_len=cycle_len, seed=seed + 1, coords=coords)

@@ -105,6 +105,23 @@ def policy_branches(cfg: TriggerConfig):
     return (_threshold_policy("efhc"), zero, _threshold_policy("global"), gossip)
 
 
+def policy_branches_rows(cfg: TriggerConfig, m: int, rows: jax.Array):
+    """``policy_branches`` for one shard of a partitioned fleet: the branch
+    functions see only the shard's owned rows (``dev``/``bandwidths`` are
+    the (ms,) local slices), for which the threshold policies are already
+    elementwise.  Randomized gossip is *positional* -- one (m,) uniform draw
+    indexed by global device id -- so the sharded branch realizes the same
+    full-fleet draw and slices its owned positions ``rows``, keeping v
+    bit-identical across shard counts (DESIGN.md "Sharded fleet engine")."""
+    efhc, zero, glob, _ = policy_branches(cfg)
+
+    def gossip(dev, bandwidths, gamma_k, key):
+        p = cfg.gossip_p if cfg.gossip_p is not None else 1.0 / m
+        return jax.random.uniform(key, (m,))[rows] < p
+
+    return (efhc, zero, glob, gossip)
+
+
 def broadcast_events(
     cfg: TriggerConfig,
     *,

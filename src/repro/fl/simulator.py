@@ -105,8 +105,13 @@ class SimConfig:
     seed: int = 0
     # dense | delta | pallas (fused kernels) | sparse | sparse_delta |
     # sparse_pallas (neighbor-list aggregation, the m >= 4096 path --
-    # DESIGN.md "Sparse mixing"); see efhc.MIX_IMPLS
+    # DESIGN.md "Sparse mixing"); see efhc.MIX_IMPLS.  "sharded" routes to
+    # the shard_map fleet engine (repro.fl.sharded): the ELL mix partitioned
+    # over `shards` devices with halo exchange, the m >= 10^5 path
     mix_impl: str = "dense"
+    # fleet shards for mix_impl="sharded" (1-D "fl" mesh; needs that many
+    # jax devices and m % shards == 0); ignored by every other impl
+    shards: int = 1
     # link-matrix trajectory storage: "full" (T, m, m) bool, "packed"
     # bit-packed uint32 words (8x smaller, lossless), "summary" per-device
     # counts only (O(T m); required for m >~ 512 horizons) -- DESIGN.md
@@ -238,6 +243,14 @@ def make_engine(
     ``(seed, idx)`` - ``repro.fl.sweep`` builds the policy x seed grid from
     exactly this function.
     """
+    if sim.mix_impl == "sharded":
+        # deferred import: repro.fl.sharded imports back into this module
+        from repro.fl.sharded import make_sharded_engine
+
+        eng, model_dim, _plan = make_sharded_engine(
+            sim, graph, T=T, eval_every=eval_every, x=x, y=y, eval_fn=eval_fn)
+        return eng, model_dim
+
     E = max(1, int(eval_every))
     m = sim.m
     trace = trace_mod.check_trace_mode(sim.trace)
@@ -350,8 +363,8 @@ def _cached_engine(sim: SimConfig, graph: GraphProcess, *, T: int,
                    eval_every: int, x, y, eval_fn):
     key = (sim.m, sim.model, sim.n_classes, sim.dim, sim.batch, sim.r,
            sim.b_mean, sim.sigma_n, sim.alpha0, sim.mix_impl, sim.trace,
-           T, max(1, int(eval_every)), _graph_cache_key(graph),
-           id(x), id(y), id(eval_fn))
+           int(sim.shards), T, max(1, int(eval_every)),
+           _graph_cache_key(graph), id(x), id(y), id(eval_fn))
     hit = _ENGINE_CACHE.get(key)
     if hit is None:
         eng, model_dim = make_engine(sim, graph, T=T, eval_every=eval_every,
@@ -411,6 +424,11 @@ def run(
         out = eng(triggers.policy_index(sim.policy),
                   jnp.asarray(sim.seed, jnp.int32), jnp.asarray(idx))
         return _result_from_device(out, model_dim, sim.trace)
+    if sim.mix_impl == "sharded":
+        raise ValueError(
+            "mix_impl='sharded' runs only under engine='scan' with an "
+            "EvalFn (or None): the shard_map program cannot call back into "
+            "a host loop or a host eval callable")
     return _run_python(sim, graph, batches, eval_fn, eval_every=eval_every)
 
 

@@ -127,6 +127,10 @@ def run_sweep(
     seeds = tuple(int(s) for s in seeds)
     policies = tuple(policies)
     T = sim.iters
+    if sim.mix_impl == "sharded":
+        return _run_sweep_sharded(sim, graph, batches_factory, eval_fn,
+                                  seeds=seeds, policies=policies,
+                                  eval_every=eval_every)
 
     staged, ref = [], None
     for s in seeds:
@@ -168,6 +172,34 @@ def run_sweep(
         trace=trace,
         _comm=(np.asarray(out["comm"], link_dtype) if "comm" in out else None),
         _adj=(np.asarray(out["adj"], link_dtype) if "adj" in out else None),
+    )
+
+
+def _run_sweep_sharded(sim, graph, batches_factory, eval_fn, *,
+                       seeds, policies, eval_every) -> SweepResult:
+    """Grid over the sharded fleet engine: cells run serially through
+    ``simulator.run`` instead of one vmapped program -- vmapping a
+    shard_map-wrapped scan is not a supported composition on the pinned
+    jax, and at the fleet sizes that want sharding (m >= 10^5) a batched
+    grid would not fit anyway.  The engine takes policy/seed as traced
+    arguments, so every cell still shares ONE compile via the simulator's
+    engine cache; only the executions serialize."""
+    cells = [[simulator.run(
+        dataclasses.replace(sim, seed=s, policy=p), graph,
+        batches_factory(s), eval_fn, eval_every=eval_every)
+        for p in policies] for s in seeds]
+    stack = lambda f, dt: np.stack(
+        [[np.asarray(getattr(c, f), dt) for c in row] for row in cells])
+    return SweepResult(
+        seeds=seeds, policies=policies,
+        loss=stack("loss", np.float32), acc=stack("acc", np.float32),
+        tx_time=stack("tx_time", np.float32), util=stack("util", np.float32),
+        v=stack("v", bool), comm_count=stack("comm_count", np.int32),
+        deg=stack("deg", np.int32),
+        consensus_err=stack("consensus_err", np.float32),
+        bandwidths=stack("bandwidths", np.float32),
+        model_dim=cells[0][0].model_dim,
+        trace=trace_mod.check_trace_mode(sim.trace),
     )
 
 

@@ -31,6 +31,23 @@ def make_host_mesh(*, data: int = 2, model: int = 2, pods: int = 0):
     return _mk((data, model), ("data", "model"))
 
 
+def make_fleet_mesh(n_shards: int):
+    """1-D mesh over the ``fl`` axis for the sharded fleet engine: device
+    rows (theta, ELL neighbor lists, trigger state) partition across it,
+    one shard per mesh device (DESIGN.md "Sharded fleet engine").  On CPU
+    CI the devices are forced host devices
+    (XLA_FLAGS=--xla_force_host_platform_device_count=N, set before any jax
+    import); on TPU the same mesh spans real chips."""
+    n = jax.device_count()
+    if n_shards > n:
+        raise ValueError(
+            f"fleet mesh needs {n_shards} devices but jax sees {n}; set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{n_shards} before importing jax (CPU), or run on a platform "
+            "with enough devices")
+    return _mk((n_shards,), ("fl",))
+
+
 # TPU v5e hardware constants used by the roofline analysis
 PEAK_FLOPS_BF16 = 197e12  # per chip
 HBM_BW = 819e9  # bytes/s per chip

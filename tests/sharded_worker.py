@@ -1,0 +1,101 @@
+"""Subprocess worker for the multi-device sharded-engine acceptance tests.
+
+XLA_FLAGS=--xla_force_host_platform_device_count=8 must be set before any
+jax import, so the in-process test suite (whose jax is already initialized
+with however many devices it got) launches this script in a fresh
+interpreter.  Modes:
+
+    python tests/sharded_worker.py golden   # m=8, 8 shards vs golden artifact
+    python tests/sharded_worker.py parity   # m=256, 8 shards vs single device
+
+Prints "SHARDED-WORKER-OK" on success; any assertion failure exits nonzero
+with a traceback.  Invoked by tests/test_golden_trajectory.py and
+tests/test_scan_parity.py; runnable by hand for debugging.
+"""
+import dataclasses
+import json
+import os
+import pathlib
+import sys
+
+assert "jax" not in sys.modules, "worker must set XLA_FLAGS before jax"
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import numpy as np  # noqa: E402
+
+from repro.core.topology import make_process  # noqa: E402
+from repro.data.loader import FederatedBatches  # noqa: E402
+from repro.data.partition import by_labels  # noqa: E402
+from repro.data.synthetic import image_dataset  # noqa: E402
+from repro.fl.simulator import SimConfig, run  # noqa: E402
+
+GOLDEN = pathlib.Path(__file__).parent / "golden" / "efhc_m8_trajectory.json"
+
+
+def check_golden():
+    """The m=8 golden trajectory, reproduced by the sharded engine at 8
+    shards (ms=1: every neighbor is a halo row -- the maximal-exchange
+    corner).  Same fields and tolerances as the single-device golden test:
+    integer channels exact, floats to fp32 tolerance."""
+    import jax
+
+    assert jax.device_count() >= 8, jax.device_count()
+    M, T, DIM = 8, 18, 24
+    x, y = image_dataset(600, seed=0, dim=DIM)
+    parts = by_labels(y, M, 3)
+    graph = make_process(M, "rgg", time_varying="edge_dropout", drop=0.3,
+                         seed=0)
+    sim = SimConfig(m=M, iters=T, dim=DIM, batch=8, r=50.0, seed=0,
+                    trace="summary", mix_impl="sharded", shards=8)
+    batches = FederatedBatches(x, y, parts, sim.batch, seed=2)
+    res = run(sim, graph, batches, None, eval_every=5, engine="scan")
+
+    want = json.loads(GOLDEN.read_text())
+    assert (want["m"], want["iters"], want["dim"]) == (M, T, DIM)
+    np.testing.assert_allclose(res.bandwidths, np.asarray(want["bandwidths"]),
+                               rtol=1e-5)
+    for f in ("v", "comm_count", "deg"):
+        got = np.asarray(getattr(res, f), np.int64)
+        assert np.array_equal(got, np.asarray(want[f], np.int64)), \
+            f"sharded engine shifted the golden realization on {f}"
+    for f in ("loss", "tx_time", "util", "consensus_err"):
+        np.testing.assert_allclose(
+            np.asarray(getattr(res, f), np.float64), np.asarray(want[f]),
+            rtol=2e-4, atol=2e-5, err_msg=f"sharded golden diverged on {f}")
+
+
+def check_parity():
+    """Acceptance: at m=256 the sharded engine (8 shards) is bit-exact with
+    the single-device sparse engine on every channel except the
+    hierarchical consensus_err, across all three time-varying fabrics."""
+    import jax
+
+    assert jax.device_count() >= 8, jax.device_count()
+    m, T, dim = 256, 4, 32
+    x, y = image_dataset(1024, seed=0, dim=dim)
+    rng = np.random.default_rng(0)
+    parts = [np.sort(p) for p in np.array_split(rng.permutation(len(y)), m)]
+    sim = SimConfig(m=m, iters=T, dim=dim, r=50.0, seed=0, trace="summary")
+    mk = lambda: FederatedBatches(x, y, parts, sim.batch, seed=2)
+
+    kw = {"edge_dropout": dict(drop=0.3), "partition_cycle": dict(cycle_len=2)}
+    for kind in ("static", "edge_dropout", "partition_cycle"):
+        graph = make_process(m, "rgg", radius=0.15, time_varying=kind, seed=0,
+                             **kw.get(kind, {}))
+        ref = run(dataclasses.replace(sim, mix_impl="sparse"), graph, mk(),
+                  None, eval_every=T)
+        sh = run(dataclasses.replace(sim, mix_impl="sharded", shards=8),
+                 graph, mk(), None, eval_every=T)
+        for f in ("v", "comm_count", "deg", "loss", "tx_time", "util",
+                  "bandwidths"):
+            assert (np.asarray(getattr(sh, f))
+                    == np.asarray(getattr(ref, f))).all(), \
+                f"{kind}: sharded != single-device on {f}"
+        np.testing.assert_allclose(sh.consensus_err, ref.consensus_err,
+                                   rtol=1e-5, err_msg=kind)
+
+
+if __name__ == "__main__":
+    mode = sys.argv[1] if len(sys.argv) > 1 else "parity"
+    {"golden": check_golden, "parity": check_parity}[mode]()
+    print("SHARDED-WORKER-OK")

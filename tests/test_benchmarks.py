@@ -22,9 +22,12 @@ def _doc(entries):
             "entries": entries}
 
 
-def _entry(m, trace, mix_impl, ips):
-    return {"m": m, "trace": trace, "mix_impl": mix_impl,
-            "iters": 12, "iters_per_sec": ips}
+def _entry(m, trace, mix_impl, ips, shards=None):
+    e = {"m": m, "trace": trace, "mix_impl": mix_impl,
+         "iters": 12, "iters_per_sec": ips}
+    if shards is not None:
+        e["shards"] = shards
+    return e
 
 
 REF = _doc([
@@ -66,6 +69,30 @@ def test_compare_matches_on_m_trace_and_impl():
     rows, regressions = check_regression.compare(REF, new, threshold=0.35)
     assert regressions == []
     assert [r["status"] for r in rows] == ["new", "new", "ok"]
+
+
+def test_compare_matches_sharded_entries_on_shard_count():
+    """Sharded fleet-engine rows gate per (m, mix_impl, trace, shards): an
+    entry measured at a different shard count is a different program and
+    must be 'new', never compared; entries without a shards column (every
+    pre-sharding file) default to 1 so old pins stay comparable."""
+    ref = _doc([
+        _entry(4096, "summary", "sharded", 8.0, shards=8),
+        _entry(1024, "summary", "sparse", 30.0),  # no shards key: 1
+    ])
+    new = _doc([
+        _entry(4096, "summary", "sharded", 2.0, shards=4),  # shard mismatch
+        _entry(4096, "summary", "sharded", 7.9, shards=8),
+        _entry(1024, "summary", "sparse", 29.0, shards=1),  # explicit 1 == absent
+    ])
+    rows, regressions = check_regression.compare(ref, new, threshold=0.35)
+    assert regressions == []
+    assert [r["status"] for r in rows] == ["new", "ok", "ok"]
+    slow = _doc([_entry(4096, "summary", "sharded", 1.0, shards=8)])
+    _, regressions = check_regression.compare(ref, slow, threshold=0.35)
+    assert len(regressions) == 1 and regressions[0]["shards"] == 8
+    table = check_regression.markdown_table(rows, 0.35)
+    assert "| shards |" in table
 
 
 def test_compare_legacy_entries_default_to_dense():
@@ -129,9 +156,16 @@ def test_parse_sizes_rejects_mix_impl_on_staging_rows():
     spec = importlib.util.spec_from_file_location("fleet_scale", _FS_PATH)
     fleet_scale = importlib.util.module_from_spec(spec)
     spec.loader.exec_module(fleet_scale)
-    assert fleet_scale._parse_sizes("16384:staging") == ((16384, "staging", "staging"),)
+    assert fleet_scale._parse_sizes("16384:staging") == ((16384, "staging", "staging", 1),)
     with pytest.raises(SystemExit, match="staging"):
         fleet_scale._parse_sizes("4096:staging:sparse")
+    assert fleet_scale._parse_sizes("131072:summary:sharded:8") == \
+        ((131072, "summary", "sharded", 8),)
+    assert fleet_scale._parse_sizes("1024:summary:sparse") == \
+        ((1024, "summary", "sparse", 1),)
+    with pytest.raises(SystemExit, match="shard"):
+        # a shard count on a non-sharded impl would be silently ignored
+        fleet_scale._parse_sizes("4096:summary:sparse:8")
 
 
 def test_staging_only_fresh_file_counts_as_comparing_nothing(tmp_path, monkeypatch):
@@ -166,19 +200,30 @@ def test_pinned_reference_has_the_m_scaling_grid():
     ordering flips between repins on this shared host -- so no ordering is
     asserted there; m=4096 is the first decisive, repin-stable sparse
     win), plus the edge-native scale points: a gated m=16384
-    sparse/summary throughput entry and an m=32768 staging-only entry."""
+    sparse/summary throughput entry, an m=32768 staging-only entry, and
+    the sharded fleet-engine points -- a gated m=4096 8-shard entry and
+    the m >= 100000 summary-trace *simulation* entry (the PR 6 acceptance
+    row: not staging-only, produced by the shard_map engine on 8 forced
+    host devices)."""
     pinned = json.loads((_CR_PATH.parent.parent / "BENCH_fleet.json").read_text())
     by_key = {check_regression.entry_key(e): e for e in pinned["entries"]}
     assert any(k[0] == 2048 for k in by_key)
     assert any(k[0] == 4096 for k in by_key)
-    assert ("iters_per_sec" in by_key[(16384, "summary", "sparse")])
-    staging = by_key[(32768, "staging", "staging")]
+    assert ("iters_per_sec" in by_key[(16384, "summary", "sparse", 1)])
+    staging = by_key[(32768, "staging", "staging", 1)]
     assert staging["staging_sec"] > 0 and staging["n_edges"] > 32768
+    assert "iters_per_sec" in by_key[(4096, "summary", "sharded", 8)]
+    big = [e for (m, trace, impl, s), e in by_key.items()
+           if m >= 100000 and impl == "sharded" and trace == "summary"
+           and s >= 8]
+    assert big and all("iters_per_sec" in e and e["iters_per_sec"] > 0
+                       and e["boundary_frac"] < 0.5 for e in big), \
+        "pinned grid must simulate an m >= 100000 sharded summary entry"
     compared = 0
-    for (m, trace, impl), e in by_key.items():
+    for (m, trace, impl, s), e in by_key.items():
         if impl != "sparse" or m < 4096:
             continue
-        dense = by_key.get((m, trace, "dense"))
+        dense = by_key.get((m, trace, "dense", s))
         if dense is not None:
             compared += 1
             assert e["iters_per_sec"] > dense["iters_per_sec"], \

@@ -77,6 +77,26 @@ def test_efhc_trajectory_matches_golden_artifact():
             err_msg=f"{f} diverged from the golden trajectory")
 
 
+def test_sharded_engine_matches_golden_artifact_on_8_devices():
+    """The same golden realization, reproduced by the sharded fleet engine
+    on 8 forced host devices (8 shards of 1 device each -- the maximal
+    halo-exchange corner).  Runs in a subprocess because
+    XLA_FLAGS=--xla_force_host_platform_device_count must be set before
+    jax initializes, and this suite's jax already has."""
+    import os
+    import subprocess
+    import sys
+
+    worker = pathlib.Path(__file__).parent / "sharded_worker.py"
+    env = {**os.environ,
+           "XLA_FLAGS": "--xla_force_host_platform_device_count=8"}
+    proc = subprocess.run([sys.executable, str(worker), "golden"],
+                          env=env, capture_output=True, text=True,
+                          timeout=600)
+    assert proc.returncode == 0 and "SHARDED-WORKER-OK" in proc.stdout, \
+        f"sharded golden worker failed:\n{proc.stdout}\n{proc.stderr}"
+
+
 if __name__ == "__main__":
     import argparse
 

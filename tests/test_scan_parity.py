@@ -205,6 +205,27 @@ def test_sparse_at_m256_summary_matches_dense():
     _assert_results_match(sparse, dense, link_fields=("v",))
 
 
+def test_sharded_at_m256_matches_single_device_on_8_devices():
+    """Acceptance: at m=256 (summary trace) the shard_map fleet engine on
+    8 forced host devices reproduces the single-device sparse engine
+    bit-exactly on every channel but the hierarchical consensus_err,
+    across static/edge_dropout/partition_cycle fabrics.  Subprocess: the
+    forced device count must be set before jax initializes."""
+    import os
+    import pathlib
+    import subprocess
+    import sys
+
+    worker = pathlib.Path(__file__).parent / "sharded_worker.py"
+    env = {**os.environ,
+           "XLA_FLAGS": "--xla_force_host_platform_device_count=8"}
+    proc = subprocess.run([sys.executable, str(worker), "parity"],
+                          env=env, capture_output=True, text=True,
+                          timeout=600)
+    assert proc.returncode == 0 and "SHARDED-WORKER-OK" in proc.stdout, \
+        f"sharded parity worker failed:\n{proc.stdout}\n{proc.stderr}"
+
+
 def test_engine_cache_shares_equal_valued_graphs(setup):
     """Two structurally identical GraphProcess instances (frozen dataclass,
     equal fields + base bytes) must hit ONE cache entry - the old id(graph)
