@@ -2,8 +2,10 @@
 
 Compares a freshly measured fleet-scale benchmark against the pinned
 reference checked into the repo, matching entries on
-``(m, trace, mix_impl, shards)`` (``shards`` defaults to 1 for every entry
-that predates the sharded fleet engine, so old files stay comparable):
+``(m, trace, mix_impl, shards, model)`` (``shards`` defaults to 1 for
+every entry that predates the sharded fleet engine and ``model`` to
+``"svm"`` for entries that predate the ModelSpec registry, so old files
+stay comparable):
 
 * fresh entries **slower than the reference by more than the threshold**
   (default 35%, i.e. ``new < 0.65 * ref`` iters/s) are regressions and the
@@ -39,9 +41,10 @@ import sys
 
 def entry_key(e: dict) -> tuple:
     # older benchmark files predate the mix_impl column (they measured
-    # dense) and the shards column (they ran single-device)
+    # dense), the shards column (they ran single-device), and the model
+    # column (they simulated the dim-32 svm)
     return (int(e["m"]), str(e["trace"]), str(e.get("mix_impl", "dense")),
-            int(e.get("shards", 1)))
+            int(e.get("shards", 1)), str(e.get("model", "svm")))
 
 
 def compare(ref_doc: dict, new_doc: dict, threshold: float = 0.35) -> tuple[list[dict], list[dict]]:
@@ -60,14 +63,14 @@ def compare(ref_doc: dict, new_doc: dict, threshold: float = 0.35) -> tuple[list
             # simulation): informational, never gated -- staging walls are
             # sub-second and would flake any relative threshold
             rows.append({"m": key[0], "trace": key[1], "mix_impl": key[2],
-                         "shards": key[3],
+                         "shards": key[3], "model": key[4],
                          "new_ips": None, "ref_ips": None, "slowdown": None,
                          "staging_sec": e.get("staging_sec"),
                          "status": "staging"})
             continue
         new_ips = float(e["iters_per_sec"])
         row = {"m": key[0], "trace": key[1], "mix_impl": key[2],
-               "shards": key[3],
+               "shards": key[3], "model": key[4],
                "new_ips": new_ips, "ref_ips": None, "slowdown": None,
                "status": "new"}
         match = ref.get(key)
@@ -86,8 +89,8 @@ def markdown_table(rows: list[dict], threshold: float) -> str:
     lines = [
         f"### Fleet-scale benchmark delta (fail above {threshold:.0%} slowdown)",
         "",
-        "| m | trace | mix_impl | shards | ref iters/s | new iters/s | delta | status |",
-        "|---:|---|---|---:|---:|---:|---:|---|",
+        "| m | trace | mix_impl | shards | model | ref iters/s | new iters/s | delta | status |",
+        "|---:|---|---|---:|---|---:|---:|---:|---|",
     ]
     for r in rows:
         ref = "—" if r["ref_ips"] is None else f"{r['ref_ips']:.2f}"
@@ -100,8 +103,8 @@ def markdown_table(rows: list[dict], threshold: float) -> str:
         else:
             new = f"{r['new_ips']:.2f}"
         lines.append(f"| {r['m']} | {r['trace']} | {r['mix_impl']} "
-                     f"| {r.get('shards', 1)} | {ref} "
-                     f"| {new} | {delta} | {mark} |")
+                     f"| {r.get('shards', 1)} | {r.get('model', 'svm')} "
+                     f"| {ref} | {new} | {delta} | {mark} |")
     return "\n".join(lines) + "\n"
 
 
@@ -139,13 +142,14 @@ def main(argv: list[str] | None = None) -> int:
         # a gate that compares nothing is a disabled gate: fail loudly so a
         # grid typo / key rename cannot silently turn CI green
         print("ERROR: no fresh entry matched the pinned reference grid "
-              "(m, trace, mix_impl, shards) -- the gate compared nothing",
-              file=sys.stderr)
+              "(m, trace, mix_impl, shards, model) -- the gate compared "
+              "nothing", file=sys.stderr)
         return 1
     if regressions:
         for r in regressions:
             print(f"REGRESSION m={r['m']} trace={r['trace']} "
-                  f"mix_impl={r['mix_impl']} shards={r.get('shards', 1)}: "
+                  f"mix_impl={r['mix_impl']} shards={r.get('shards', 1)} "
+                  f"model={r.get('model', 'svm')}: "
                   f"{r['ref_ips']:.2f} -> "
                   f"{r['new_ips']:.2f} iters/s "
                   f"({r['slowdown']:.1%} slower)", file=sys.stderr)

@@ -17,8 +17,10 @@ m >= 10^5.  They need that many jax devices -- on CPU set
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` *before* running
 (this script errors with that exact instruction otherwise), which is also
 how the default grid (containing sharded rows) must be repinned.  Fleets
-past the int32 edge-id cap (m > 46340) use the partition_cycle fabric --
-``edge_dropout``'s per-edge draw is id-keyed and deliberately capped.
+at m > 46340 use the partition_cycle fabric: the pinned m=131072 row was
+measured on it (``edge_dropout`` used to cap at int32 edge ids; the cap
+is lifted now, but the fabric stays so the pinned number remains
+comparable across repins).
 
 Default grid walks the trace ladder the sizes require: dense traces at
 m=16, bit-packed at m=64/256, count-summaries at m>=1024 -- and at every
@@ -87,9 +89,10 @@ def _setup(m: int, iters: int, dim: int, seed: int = 0):
     # iid split: partition skew is irrelevant to throughput/memory and an
     # even split keeps every device non-empty at any m
     parts = [np.sort(p) for p in np.array_split(rng.permutation(len(y)), m)]
-    # edge_dropout's per-edge draw is canonical-edge-id keyed (int32), which
-    # caps it at m <= 46340 by design; bigger fleets bench the deterministic
-    # partition_cycle fabric instead (same ELL hot path, any m)
+    # m > 46340 fleets bench the deterministic partition_cycle fabric: the
+    # pinned large-m rows were measured on it back when edge_dropout capped
+    # at int32 edge ids, and switching fabrics would silently shift the
+    # baseline the CI gate compares against (same ELL hot path either way)
     if m <= topology._EID_INT32_MAX_M:
         tv = dict(time_varying="edge_dropout", drop=0.3)
     else:
@@ -121,9 +124,8 @@ def bench_staging(m: int, *, repeats: int = 3) -> dict:
     for rep in range(max(1, repeats)):
         t0 = time.perf_counter()
         # static kind: staging cost (edge build + neighbor list +
-        # connectivity) is identical for every time_varying kind, and the
-        # edge_dropout kind's int32 edge-id cap (m <= 46340) would
-        # artificially bound a row whose whole point is arbitrary scale
+        # connectivity) is identical for every time_varying kind -- the
+        # per-iteration dropout draw happens inside the engine, not here
         graph = make_process(m, "rgg", radius=fleet_radius(m), seed=0)
         nl = graph.neighbors()
         wall = time.perf_counter() - t0
@@ -171,7 +173,7 @@ def bench_fleet(m: int, trace: str, mix_impl: str = "dense", shards: int = 1,
 
     entry = {
         "m": m, "trace": trace, "mix_impl": mix_impl, "shards": shards,
-        "iters": iters,
+        "model": sim.model, "iters": iters,
         "model_dim": model_dim, "d_max": graph.neighbors().d_max,
         "sec_per_iter": wall / iters, "iters_per_sec": iters / wall,
         "traj_bytes": traj,

@@ -16,6 +16,14 @@ semantics and the framework's static schedules:
 
 ``savings_report`` returns per-step and cumulative bytes for all three,
 plus the paper's transmission-time metric under heterogeneous bandwidths.
+
+``n_bytes`` is the *realized* per-broadcast payload: the ModelSpec
+``flat_dim`` (exact parameter count of the stacked pytree -- the width of
+the (m, D) flat view Event 2 actually ships) times the element size.  Use
+``report_from_result`` to derive it from a ``SimResult`` instead of
+hand-computing a config-level scalar: ``SimResult.model_dim`` carries the
+engine's realized flat_dim, so a 2-layer model is charged 2-layer bytes,
+never an input-dim-derived guess.
 """
 from __future__ import annotations
 
@@ -86,3 +94,26 @@ def savings_report(
         tx_time_event=tx_event,
         tx_time_dense=tx_dense,
     )
+
+
+def model_bytes(flat_dim: int, elem_bytes: int = 4) -> int:
+    """Per-broadcast payload of one model: the ModelSpec ``flat_dim``
+    (exact stacked-pytree parameter count) times the element size.  Every
+    leaf rides the f32 (m, D) flat view through Event 2/3, so
+    ``elem_bytes`` defaults to 4."""
+    return int(flat_dim) * int(elem_bytes)
+
+
+def report_from_result(res, *, bandwidths=None, every_k: int = 4,
+                       elem_bytes: int = 4) -> SavingsReport:
+    """``savings_report`` driven by a ``fl.simulator.SimResult``: charges
+    the realized model payload (``res.model_dim`` is the engine's
+    ModelSpec flat_dim) under the run's sampled bandwidths.  Requires a
+    trace mode that recorded adjacency (``full``/``packed``)."""
+    if res.trace == "summary":
+        raise ValueError(
+            "report_from_result needs the adjacency trace; rerun with "
+            "trace='full' or 'packed' (summary drops the link matrices)")
+    bw = res.bandwidths if bandwidths is None else bandwidths
+    return savings_report(res.v, res.adj, model_bytes(res.model_dim, elem_bytes),
+                          bandwidths=bw, every_k=every_k)

@@ -18,6 +18,7 @@ SPMD" for how communication savings are accounted).
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any, Callable, NamedTuple
 
 import jax
@@ -83,10 +84,33 @@ def init_state(w_stack, bandwidths: jax.Array, adjacency0: jax.Array, key: jax.A
 
 
 def _flatten_stack(w_stack) -> jax.Array:
-    """(m, n) flat view of the per-device model pytree."""
+    """Canonical (m, D) flat view of the per-device model pytree: leaves
+    concatenated in ``jax.tree.leaves`` order, cast to float32.  Events 1-3
+    (triggers, deviation kernel, gather-mix) always operate on this view;
+    ``unflatten_stack`` is the inverse (DESIGN.md "Model plumbing")."""
     leaves = jax.tree.leaves(w_stack)
     m = leaves[0].shape[0]
     return jnp.concatenate([l.reshape(m, -1).astype(jnp.float32) for l in leaves], axis=1)
+
+
+# public alias: the simulator/tests use the flat view as the model-agnostic
+# row layout, not just an internal detail
+flatten_stack = _flatten_stack
+
+
+def unflatten_stack(flat: jax.Array, like):
+    """Inverse of ``_flatten_stack``: slice the (m, D) flat rows back into
+    the pytree structure, shapes and dtypes of ``like``.  Column order is
+    the same ``jax.tree.leaves`` order the flatten used, so
+    ``unflatten_stack(_flatten_stack(w), w)`` is an exact round trip for
+    float32 leaves (and a cast for anything narrower)."""
+    leaves, treedef = jax.tree.flatten(like)
+    out, col = [], 0
+    for l in leaves:
+        n = math.prod(l.shape[1:])
+        out.append(flat[:, col:col + n].reshape(l.shape).astype(l.dtype))
+        col += n
+    return jax.tree.unflatten(treedef, out)
 
 
 class StepAux(NamedTuple):
@@ -120,6 +144,7 @@ def step(
     model_dim: int,
     policy_idx: jax.Array | None = None,
     nl: topology.NeighborList | None = None,
+    opt_update: Callable[[Any, Any, Any, jax.Array], tuple[Any, Any]] | None = None,
 ) -> tuple[EFHCState, StepAux]:
     """One universal iteration of Alg. 1 across all m devices.
 
@@ -136,7 +161,17 @@ def step(
     list and the graph's canonical ``EdgeList`` fabric are O(E) host
     staging -- nothing on this path densifies an (m, m) matrix, which is
     what lets the sparse impls step m >= 16384 fleets.
-    """
+
+    ``opt_update``: a functional ``repro.optim`` update,
+    ``(grads, opt_state, params, lr) -> (new_params, new_opt_state)``,
+    applied to the stacked pytree for Event 4 (every provided optimizer is
+    elementwise over the device axis, so stacked application == vmap).
+    ``None`` keeps the inline SGD expression -- bit-identical to
+    ``optimizers.sgd()``, which is what the engines pass by default.
+
+    Events 1-3 run on the canonical (m, D) flat view (one flatten at the
+    top, one ``unflatten_stack`` before Event 4); only local SGD and the
+    w_hat snapshot see the pytree (DESIGN.md "Model plumbing")."""
     if cfg.mix_impl not in MIX_IMPLS:
         raise ValueError(f"unknown mix_impl {cfg.mix_impl!r}; known: {MIX_IMPLS}")
     sparse = cfg.mix_impl in SPARSE_MIX_IMPLS
@@ -186,12 +221,12 @@ def step(
         comm_ell = jnp.logical_or(jnp.logical_and(vv_ell, adj_ell), new_links_ell)
         p_diag, p_off = mixing.build_p_ell(nbr_idx, adj_ell, comm_ell)
         if cfg.mix_impl == "sparse_pallas":
-            w_mixed = mixing_ops.mix_sparse_tree(nbr_idx, p_diag, p_off, state.w,
+            w_mixed_flat = mixing_ops.mix_sparse(nbr_idx, p_diag, p_off, w_flat,
                                                  interpret=cfg.pallas_interpret())
         elif cfg.mix_impl == "sparse_delta":
-            w_mixed = consensus.mix_delta_sparse(nbr_idx, p_off, state.w)
+            w_mixed_flat = consensus.mix_delta_sparse(nbr_idx, p_off, w_flat)
         else:
-            w_mixed = consensus.mix_sparse(nbr_idx, p_diag, p_off, state.w)
+            w_mixed_flat = consensus.mix_sparse(nbr_idx, p_diag, p_off, w_flat)
         comm = topology.scatter_ell(nbr_idx, comm_ell)  # DCE-able, like adj
         p = topology.scatter_ell(nbr_idx, p_off) + jnp.diag(p_diag)
         used_i = comm_ell.sum(axis=1, dtype=jnp.int32)
@@ -202,11 +237,11 @@ def step(
         comm = jnp.logical_or(triggers.communication_matrix(v, adj), new_links)
         p = mixing.build_p(adj, comm)
         if cfg.mix_impl == "pallas":
-            w_mixed = mixing_ops.mix_tree(p, state.w, interpret=cfg.pallas_interpret())
+            w_mixed_flat = mixing_ops.mix(p, w_flat, interpret=cfg.pallas_interpret())
         elif cfg.mix_impl == "delta":
-            w_mixed = consensus.mix_delta_dense(p, state.w)
+            w_mixed_flat = consensus.mix_delta_dense(p, w_flat)
         else:
-            w_mixed = consensus.mix_dense(p, state.w)
+            w_mixed_flat = consensus.mix_dense(p, w_flat)
         used_i = comm.sum(axis=1, dtype=jnp.int32)
         deg_i = adj.sum(axis=1, dtype=jnp.int32)
         prev_adj_next = adj
@@ -219,10 +254,15 @@ def step(
 
     w_hat_new = jax.tree.map(upd_hat, state.w_hat, state.w)
 
-    # ---- Event 4: local SGD ----------------------------------------------
+    # ---- Event 4: local SGD (on the unflattened pytree) -------------------
+    w_mixed = unflatten_stack(w_mixed_flat, state.w)
     grad_keys = jax.random.split(k_grad, m)
     loss, grads = jax.vmap(grad_fn, in_axes=(0, 0, 0))(w_mixed, grad_keys, batch)
-    w_new = jax.tree.map(lambda wm, g: (wm.astype(jnp.float32) - alpha_k * g.astype(jnp.float32)).astype(wm.dtype), w_mixed, grads)
+    if opt_update is None:
+        w_new = jax.tree.map(lambda wm, g: (wm.astype(jnp.float32) - alpha_k * g.astype(jnp.float32)).astype(wm.dtype), w_mixed, grads)
+        opt_state_new = state.opt_state
+    else:
+        w_new, opt_state_new = opt_update(grads, state.opt_state, w_mixed, alpha_k)
 
     # ---- paper metrics (Sec. IV-A) ----------------------------------------
     deg = deg_i.astype(jnp.float32)
@@ -243,7 +283,7 @@ def step(
 
     new_state = EFHCState(
         w=w_new, w_hat=w_hat_new, k=state.k + 1, prev_adj=prev_adj_next,
-        bandwidths=state.bandwidths, key=key, opt_state=state.opt_state,
+        bandwidths=state.bandwidths, key=key, opt_state=opt_state_new,
     )
     return new_state, StepAux(v=v, comm=comm, p=p, loss=loss, tx_time=tx_time,
                               util=util, adj=adj, consensus_err=consensus_err,
@@ -307,6 +347,7 @@ def step_sharded(
     inv_perm: jax.Array,
     axis_name: str = "fl",
     policy_idx: jax.Array | None = None,
+    opt_update: Callable[[Any, Any, Any, jax.Array], tuple[Any, Any]] | None = None,
 ) -> tuple[EFHCState, ShardAux]:
     """One universal iteration of Alg. 1 for this shard's ``ms`` devices.
 
@@ -349,9 +390,11 @@ def step_sharded(
         v = jax.lax.switch(policy_idx, branches,
                            dev, state.bandwidths, gamma_k, k_trig)
 
-    # ---- halo exchange: boundary rows of (w, v, deg) ---------------------
+    # ---- halo exchange: boundary rows of (w_flat, v, deg) ----------------
+    # the halo ships the canonical (ms, D) flat rows -- one gathered array
+    # regardless of how many leaves the model pytree has
     ex = lambda x: halo_exchange(ctx, axis_name, x)
-    w_halo = jax.tree.map(ex, state.w)
+    w_halo_flat = ex(w_flat)
     v_buf = jnp.concatenate([v, ex(v)])
     deg_buf = jnp.concatenate([deg_i, ex(deg_i)])
 
@@ -361,8 +404,8 @@ def step_sharded(
     comm_ell = jnp.logical_or(jnp.logical_and(vv_ell, adj_ell), new_links_ell)
     p_diag, p_off = mixing.build_p_ell_halo(ctx.nbr_loc, adj_ell, comm_ell,
                                             deg_buf)
-    w_mixed = consensus.mix_sparse_halo(ctx.nbr_loc, p_diag, p_off,
-                                        state.w, w_halo)
+    w_mixed_flat = consensus.mix_sparse_halo(ctx.nbr_loc, p_diag, p_off,
+                                             w_flat, w_halo_flat)
     used_i = comm_ell.sum(axis=1, dtype=jnp.int32)
 
     def upd_hat(h, wcur):
@@ -372,12 +415,18 @@ def step_sharded(
     w_hat_new = jax.tree.map(upd_hat, state.w_hat, state.w)
 
     # ---- Event 4: local SGD (global per-device key stream, sliced) -------
+    w_mixed = unflatten_stack(w_mixed_flat, state.w)
     grad_keys = jax.random.split(k_grad, m)[ctx.owned]
     loss, grads = jax.vmap(grad_fn, in_axes=(0, 0, 0))(w_mixed, grad_keys, batch)
-    w_new = jax.tree.map(
-        lambda wm, g: (wm.astype(jnp.float32)
-                       - alpha_k * g.astype(jnp.float32)).astype(wm.dtype),
-        w_mixed, grads)
+    if opt_update is None:
+        w_new = jax.tree.map(
+            lambda wm, g: (wm.astype(jnp.float32)
+                           - alpha_k * g.astype(jnp.float32)).astype(wm.dtype),
+            w_mixed, grads)
+        opt_state_new = state.opt_state
+    else:
+        w_new, opt_state_new = opt_update(grads, state.opt_state, w_mixed,
+                                          alpha_k)
 
     # ---- paper metrics: reduce in single-device order --------------------
     def global_order(x_local):
@@ -400,7 +449,7 @@ def step_sharded(
 
     new_state = EFHCState(
         w=w_new, w_hat=w_hat_new, k=state.k + 1, prev_adj=adj_ell,
-        bandwidths=state.bandwidths, key=key, opt_state=state.opt_state,
+        bandwidths=state.bandwidths, key=key, opt_state=opt_state_new,
     )
     return new_state, ShardAux(v=v, loss=loss, tx_time=tx_time, util=util,
                                consensus_err=consensus_err,

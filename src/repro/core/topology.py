@@ -36,9 +36,11 @@ import numpy as np
 
 Adjacency = jax.Array  # (m, m) bool, symmetric, zero diagonal
 
-# largest m whose canonical edge ids (u * m + v, u < v) fit in int32: the
-# jitted edge_dropout paths keep the ids int32 so the fold_in stream stays
-# bit-compatible with the historical (m, m) grid realization
+# largest m whose canonical edge ids (u * m + v, u < v) fit in int32: at or
+# below this the jitted edge_dropout paths fold in the single int32 id so the
+# stream stays bit-compatible with the historical (m, m) grid realization;
+# above it they switch to the two-word (lo, hi) fold_in stream (x64 is
+# disabled, so int64 ids cannot flow through jitted code)
 _EID_INT32_MAX_M = 46340
 
 
@@ -69,10 +71,11 @@ class EdgeList(NamedTuple):
 
     def eids(self) -> np.ndarray:
         """(E,) int64 canonical edge ids ``u * m + v`` -- the ids the
-        random-access ``_edge_uniforms`` stream is keyed on.  (The jitted
-        consumers compute them as int32 for fold_in bit-compatibility,
-        which bounds ``edge_dropout`` at m <= 46340; ``GraphProcess``
-        rejects larger dropout fleets explicitly.)"""
+        random-access ``_edge_uniforms`` stream is keyed on for
+        m <= 46340.  (Past that the ids overflow int32, so the jitted
+        consumers switch to the two-word ``_edge_uniforms_uv`` stream
+        keyed on the ``(u, v)`` endpoint pair instead; see
+        ``_edge_uniforms_uv``.)"""
         return self.u.astype(np.int64) * self.m + self.v.astype(np.int64)
 
 
@@ -224,6 +227,33 @@ def _edge_uniforms(key: jax.Array, eids: jax.Array) -> jax.Array:
     keys = jax.vmap(jax.random.fold_in, in_axes=(None, 0))(key, flat)
     u = jax.vmap(jax.random.uniform)(keys)
     return u.reshape(eids.shape)
+
+
+def _edge_uniforms_uv(key: jax.Array, lo: jax.Array, hi: jax.Array,
+                      m: int) -> jax.Array:
+    """Random-access per-edge uniforms keyed on the canonical endpoint pair
+    ``(lo, hi)`` with ``lo = min(u, v)``, ``hi = max(u, v)``.
+
+    For m <= 46340 this is exactly ``_edge_uniforms(key, lo * m + hi)`` --
+    the single-word int32 stream every pinned artifact realized -- so the
+    historical trajectories stay bit-identical.  Above that the product
+    overflows int32 (and x64 is disabled, so an int64 id cannot flow through
+    jitted code); there the stream folds the two endpoint words in
+    sequentially, ``fold_in(fold_in(key, lo), hi)``, which is injective on
+    (lo, hi) pairs without ever forming the product.  Both paths stay pure
+    functions of (key, lo, hi), preserving the random-access property the
+    dense / ELL / sharded-row-subset consumers rely on for bit-equality."""
+    if m <= _EID_INT32_MAX_M:
+        return _edge_uniforms(key, lo * m + hi)
+    shape = jnp.broadcast_shapes(jnp.shape(lo), jnp.shape(hi))
+    lo_f = jnp.broadcast_to(lo, shape).reshape(-1)
+    hi_f = jnp.broadcast_to(hi, shape).reshape(-1)
+
+    def one(a, b):
+        return jax.random.uniform(
+            jax.random.fold_in(jax.random.fold_in(key, a), b))
+
+    return jax.vmap(one)(lo_f, hi_f).reshape(shape)
 
 
 # ---------------------------------------------------------------------------
@@ -471,13 +501,6 @@ class GraphProcess:
         if not isinstance(self.edges, EdgeList):
             object.__setattr__(self, "edges",
                                edge_list_from_dense(np.asarray(self.edges)))
-        if self.kind == "edge_dropout" and self.edges.m > _EID_INT32_MAX_M:
-            # the jitted paths compute canonical edge ids as int32 u*m+v to
-            # stay bit-compatible with the historical realization; past this
-            # m the ids wrap and distinct edges would share uniforms
-            raise ValueError(
-                f"edge_dropout supports m <= {_EID_INT32_MAX_M} "
-                f"(int32 canonical edge ids); got m={self.edges.m}")
         object.__setattr__(self, "_base_cache", None)
 
     @property
@@ -504,11 +527,11 @@ class GraphProcess:
             u = jnp.asarray(self.edges.u)
             v = jnp.asarray(self.edges.v)
             # ONE batched O(E) draw over the canonical edge ids -- the same
-            # random-access (key, eid) stream the ELL path and the legacy
+            # random-access (key, edge) stream the ELL path and the legacy
             # per-entry (m, m) grid evaluate, so the realization is
-            # identical while the fold_in count drops from m^2 to E
-            eid = u * m + v  # u < v, so this equals min*m+max on the grid
-            keep = _edge_uniforms(key, eid) >= self.drop
+            # identical while the fold_in count drops from m^2 to E.
+            # (u < v in the edge list, so (u, v) is the canonical pair.)
+            keep = _edge_uniforms_uv(key, u, v, m) >= self.drop
             a = jnp.zeros((m, m), dtype=bool)
             return a.at[u, v].set(keep).at[v, u].set(keep)
         if self.kind == "partition_cycle":
@@ -535,8 +558,8 @@ class GraphProcess:
         present at iteration k.  Realization-exact vs ``adjacency`` (the
         sparse engine's trajectories must match the dense engine's bit for
         bit) at O(m d) cost for every kind: ``edge_dropout`` evaluates the
-        same random-access per-edge uniforms (``_edge_uniforms``) on the
-        slot ids only, never the (m, m) field."""
+        same random-access per-edge uniforms (``_edge_uniforms_uv``) on the
+        slot pairs only, never the (m, m) field."""
         return self.adjacency_ell_rows(
             k, jnp.asarray(nl.idx), jnp.asarray(nl.mask),
             jnp.arange(self.m, dtype=jnp.int32))
@@ -562,8 +585,8 @@ class GraphProcess:
             return jnp.logical_and(mask, keep)
         if self.kind == "edge_dropout":
             key = jax.random.fold_in(jax.random.PRNGKey(self.seed), jnp.asarray(k, jnp.uint32))
-            eid = jnp.minimum(i, idx) * self.m + jnp.maximum(i, idx)
-            keep = _edge_uniforms(key, eid) >= self.drop
+            keep = _edge_uniforms_uv(key, jnp.minimum(i, idx),
+                                     jnp.maximum(i, idx), self.m) >= self.drop
             return jnp.logical_and(mask, keep)
         a = self.adjacency(k)
         return jnp.logical_and(mask, a[i, idx])

@@ -13,7 +13,11 @@ Baselines from Sec. IV-B:
   * EFHC - the paper's personalized policy.
 
 All policies are expressed as pure functions of the flattened per-device
-model deltas so they can be jit'd and vmapped over devices.
+model deltas so they can be jit'd and vmapped over devices.  The flat rows
+are the canonical (m, D) view ``efhc.flatten_stack`` produces from any
+ModelSpec pytree (DESIGN.md "Model plumbing"): triggers never see model
+structure, only D = ``ModelSpec.flat_dim`` wide rows, so a LeNet CNN and
+the dim-32 SVM ride the identical policy code.
 
 Dispatch: every policy is an entry in ``POLICY_TABLE`` with a uniform pure
 signature, so a *traced* policy index can select the policy via

@@ -32,6 +32,7 @@ from repro.core import efhc, topology, triggers
 from repro.core.topology import GraphProcess
 from repro.fl import trace as trace_mod
 from repro.launch.mesh import make_fleet_mesh
+from repro.optim.optimizers import init_opt
 from repro.optim.schedules import paper_diminishing
 
 _AXIS = "fl"
@@ -87,11 +88,13 @@ def make_sharded_engine(
     mesh = make_fleet_mesh(S)
     P = jax.sharding.PartitionSpec
 
-    init_fn, logits_fn, loss_base = simulator.model_fns(sim)
-    grad_fn = simulator._grad_fn(logits_fn, loss_base)
+    spec = simulator.model_spec(sim)
+    grad_fn = spec.grad_fn
+    logits_fn = spec.eval_logits
+    opt = init_opt(sim.optimizer)
     cfg = simulator._efhc_cfg(sim)
     sched = paper_diminishing(sim.alpha0, gamma=1.0, theta=0.5)
-    model_dim = simulator._model_dim(sim)
+    model_dim = spec.flat_dim
     x_all, y_all = jnp.asarray(x), jnp.asarray(y)
     if eval_fn is not None:
         x_test, y_test = eval_fn.x_test, eval_fn.y_test
@@ -112,10 +115,10 @@ def make_sharded_engine(
         # per-device values at every shard count
         bw = triggers.sample_bandwidths(k_bw, m, sim.b_mean, sim.sigma_n)
         bw_l = bw[ctx.owned]
-        keys = jax.random.split(k_init, m)[ctx.owned]
-        w0 = jax.vmap(lambda k: init_fn(k, sim.dim, sim.n_classes))(keys)
+        w0 = spec.init_rows(k_init, m, ctx.owned)
         adj0 = graph.adjacency_ell_rows(0, ctx.nbr_gid, ctx.mask, ctx.owned)
-        state = efhc.init_state(w0, bw_l, adj0, k_state)
+        state = efhc.init_state(w0, bw_l, adj0, k_state,
+                                opt_state=opt.init(w0))
 
         def one_step(st, per):
             ix, alpha = per  # ix: (ms, batch) dataset rows
@@ -123,7 +126,7 @@ def make_sharded_engine(
             st, aux = efhc.step_sharded(
                 cfg, graph, ctx, st, grad_fn=grad_fn, batch=batch,
                 alpha_k=alpha, model_dim=model_dim, m=m, inv_perm=inv_perm,
-                axis_name=_AXIS, policy_idx=policy_idx)
+                axis_name=_AXIS, policy_idx=policy_idx, opt_update=opt.update)
             return st, aux._asdict()
 
         def eval_acc(st):

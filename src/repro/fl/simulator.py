@@ -34,55 +34,36 @@ import numpy as np
 from repro.core import efhc, triggers
 from repro.core.topology import GraphProcess
 from repro.data.loader import FederatedBatches
+from repro.fl import modelspec as modelspec_mod
 from repro.fl import trace as trace_mod
+# canonical model implementations live in repro.fl.modelspec; re-exported
+# here because the simulator was their historical home
+from repro.fl.modelspec import (ModelSpec, init_mlp, init_svm, make_model_spec,
+                                mlp_logits, multi_margin_loss, svm_logits,
+                                xent_loss)
+from repro.optim.optimizers import init_opt
 from repro.optim.schedules import paper_diminishing
 
 
-# ---------------------------------------------------------------------------
-# local models
-# ---------------------------------------------------------------------------
-
-def init_svm(key, dim: int, n_classes: int):
-    return {"w": jax.random.normal(key, (dim, n_classes)) * 0.01,
-            "b": jnp.zeros((n_classes,))}
-
-
-def svm_logits(w, x):
-    return x @ w["w"] + w["b"]
-
-
-def multi_margin_loss(logits, y, margin: float = 1.0):
-    """Paper's SVM loss: mean_j max(0, margin - s_y + s_j), j != y."""
-    correct = jnp.take_along_axis(logits, y[..., None], axis=-1)
-    viol = jnp.maximum(0.0, margin - correct + logits)
-    viol = viol.at[jnp.arange(logits.shape[0]), y].set(0.0)
-    return viol.sum(-1).mean() / logits.shape[-1]
-
-
-def init_mlp(key, dim: int, n_classes: int, hidden: int = 64):
-    k1, k2 = jax.random.split(key)
-    return {
-        "w1": jax.random.normal(k1, (dim, hidden)) * (1.0 / np.sqrt(dim)),
-        "b1": jnp.zeros((hidden,)),
-        "w2": jax.random.normal(k2, (hidden, n_classes)) * (1.0 / np.sqrt(hidden)),
-        "b2": jnp.zeros((n_classes,)),
-    }
-
-
-def mlp_logits(w, x):
-    h = jax.nn.relu(x @ w["w1"] + w["b1"])
-    return h @ w["w2"] + w["b2"]
-
-
-def xent_loss(logits, y):
-    return -jnp.take_along_axis(jax.nn.log_softmax(logits, -1), y[..., None], -1).mean()
-
-
 def model_fns(sim: "SimConfig"):
-    """(init_fn, logits_fn, loss_base) for sim.model."""
+    """Legacy (init_fn, logits_fn, loss_base) triple for the paper models.
+
+    Subsumed by ``model_spec`` / ``repro.fl.modelspec.ModelSpec``, which
+    also covers the real multi-layer networks; kept because the
+    ``init_fn(key, dim, n_classes)`` calling convention is part of old
+    notebooks' muscle memory."""
     if sim.model == "svm":
         return init_svm, svm_logits, multi_margin_loss
-    return init_mlp, mlp_logits, xent_loss
+    if sim.model == "mlp":
+        return init_mlp, mlp_logits, xent_loss
+    raise ValueError(
+        f"model_fns only covers the paper models ('svm'/'mlp'); use "
+        f"model_spec(sim) for model={sim.model!r}")
+
+
+def model_spec(sim: "SimConfig") -> ModelSpec:
+    """The ``ModelSpec`` for this config (DESIGN.md "Model plumbing")."""
+    return make_model_spec(sim.model, dim=sim.dim, n_classes=sim.n_classes)
 
 
 # ---------------------------------------------------------------------------
@@ -92,7 +73,9 @@ def model_fns(sim: "SimConfig"):
 @dataclasses.dataclass
 class SimConfig:
     m: int = 10
-    model: str = "svm"  # svm | mlp
+    # any repro.fl.modelspec registry name: svm | mlp | cnn | mlp_blocks |
+    # tiny_transformer (the last takes (batch, seq) int32 token windows)
+    model: str = "svm"
     n_classes: int = 10
     dim: int = 784
     batch: int = 16
@@ -102,6 +85,10 @@ class SimConfig:
     b_mean: float = 5000.0
     sigma_n: float = 0.9
     alpha0: float = 0.1
+    # Event-4 local update rule: sgd (the paper's; bit-identical to the
+    # historical inline expression) | momentum | adam.  Optimizer state
+    # rides EFHCState.opt_state through the scan carry.
+    optimizer: str = "sgd"
     seed: int = 0
     # dense | delta | pallas (fused kernels) | sparse | sparse_delta |
     # sparse_pallas (neighbor-list aggregation, the m >= 4096 path --
@@ -186,21 +173,11 @@ class EvalFn:
 
 
 def make_eval_fn(sim: SimConfig, x_test: np.ndarray, y_test: np.ndarray) -> EvalFn:
-    logits_fn = svm_logits if sim.model == "svm" else mlp_logits
-    return EvalFn(logits_fn, x_test, y_test)
+    return EvalFn(model_spec(sim).eval_logits, x_test, y_test)
 
 
-def _grad_fn(logits_fn, loss_base):
-    def grad_fn(w, key, batch):
-        x, y = batch
-
-        def lo(w):
-            return loss_base(logits_fn(w, x), y)
-
-        loss, g = jax.value_and_grad(lo)(w)
-        return loss, g
-
-    return grad_fn
+# legacy alias: ModelSpec.grad_fn is built by the same factory
+_grad_fn = modelspec_mod.make_grad_fn
 
 
 def _efhc_cfg(sim: SimConfig) -> efhc.EFHCConfig:
@@ -212,10 +189,9 @@ def _efhc_cfg(sim: SimConfig) -> efhc.EFHCConfig:
 
 
 def _model_dim(sim: SimConfig) -> int:
-    init_fn, _, _ = model_fns(sim)
-    shapes = jax.eval_shape(lambda k: init_fn(k, sim.dim, sim.n_classes),
-                            jax.random.PRNGKey(0))
-    return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(shapes))
+    """Exact parameter count = flat-view width D (the bytes a broadcast
+    actually ships).  Subsumed by ``model_spec(sim).flat_dim``."""
+    return model_spec(sim).flat_dim
 
 
 def make_engine(
@@ -254,11 +230,12 @@ def make_engine(
     E = max(1, int(eval_every))
     m = sim.m
     trace = trace_mod.check_trace_mode(sim.trace)
-    init_fn, logits_fn, loss_base = model_fns(sim)
-    grad_fn = _grad_fn(logits_fn, loss_base)
+    spec = model_spec(sim)
+    grad_fn = spec.grad_fn
+    opt = init_opt(sim.optimizer)
     cfg = _efhc_cfg(sim)
     sched = paper_diminishing(sim.alpha0, gamma=1.0, theta=0.5)
-    model_dim = _model_dim(sim)
+    model_dim = spec.flat_dim
     x_all, y_all = jnp.asarray(x), jnp.asarray(y)
     eval_dev = eval_fn.device if isinstance(eval_fn, EvalFn) else eval_fn
     # sparse impls carry Event-1 state as the ELL slot mask of G^(k-1)
@@ -269,10 +246,9 @@ def make_engine(
         key = jax.random.PRNGKey(seed)
         k_bw, k_init, k_state = jax.random.split(key, 3)
         bw = triggers.sample_bandwidths(k_bw, m, sim.b_mean, sim.sigma_n)
-        keys = jax.random.split(k_init, m)
-        w0 = jax.vmap(lambda k: init_fn(k, sim.dim, sim.n_classes))(keys)
+        w0 = spec.init_stack(k_init, m)
         adj0 = graph.adjacency(0) if nl is None else graph.adjacency_ell(0, nl)
-        state = efhc.init_state(w0, bw, adj0, k_state)
+        state = efhc.init_state(w0, bw, adj0, k_state, opt_state=opt.init(w0))
         alphas = sched(jnp.arange(T))
 
         def trace_ys(aux: efhc.StepAux) -> dict:
@@ -298,7 +274,8 @@ def make_engine(
             batch = (x_all[ix], y_all[ix])
             st, aux = efhc.step(cfg, graph, st, grad_fn=grad_fn, batch=batch,
                                 alpha_k=alpha, model_dim=model_dim,
-                                policy_idx=policy_idx, nl=nl)
+                                policy_idx=policy_idx, nl=nl,
+                                opt_update=opt.update)
             return st, trace_ys(aux)
 
         def eval_acc(st):
@@ -362,8 +339,8 @@ def _graph_cache_key(graph: GraphProcess) -> tuple:
 def _cached_engine(sim: SimConfig, graph: GraphProcess, *, T: int,
                    eval_every: int, x, y, eval_fn):
     key = (sim.m, sim.model, sim.n_classes, sim.dim, sim.batch, sim.r,
-           sim.b_mean, sim.sigma_n, sim.alpha0, sim.mix_impl, sim.trace,
-           int(sim.shards), T, max(1, int(eval_every)),
+           sim.b_mean, sim.sigma_n, sim.alpha0, sim.optimizer, sim.mix_impl,
+           sim.trace, int(sim.shards), T, max(1, int(eval_every)),
            _graph_cache_key(graph), id(x), id(y), id(eval_fn))
     hit = _ENGINE_CACHE.get(key)
     if hit is None:
@@ -449,23 +426,23 @@ def _run_python(
     m = sim.m
     bw = triggers.sample_bandwidths(k_bw, m, sim.b_mean, sim.sigma_n)
 
-    init_fn, logits_fn, loss_base = model_fns(sim)
-    grad_fn = _grad_fn(logits_fn, loss_base)
+    spec = model_spec(sim)
+    grad_fn = spec.grad_fn
+    opt = init_opt(sim.optimizer)
 
-    keys = jax.random.split(k_init, m)
-    w0 = jax.vmap(lambda k: init_fn(k, sim.dim, sim.n_classes))(keys)
-    model_dim = sum(int(np.prod(l.shape[1:])) for l in jax.tree.leaves(w0))
+    w0 = spec.init_stack(k_init, m)
+    model_dim = spec.flat_dim
 
     cfg = _efhc_cfg(sim)
     sched = paper_diminishing(sim.alpha0, gamma=1.0, theta=0.5)
     nl = graph.neighbors() if cfg.mix_impl in efhc.SPARSE_MIX_IMPLS else None
     adj0 = graph.adjacency(0) if nl is None else graph.adjacency_ell(0, nl)
-    state = efhc.init_state(w0, bw, adj0, k_state)
+    state = efhc.init_state(w0, bw, adj0, k_state, opt_state=opt.init(w0))
 
     step_jit = jax.jit(
         lambda st, batch, alpha: efhc.step(
             cfg, graph, st, grad_fn=grad_fn, batch=batch, alpha_k=alpha,
-            model_dim=model_dim, nl=nl
+            model_dim=model_dim, nl=nl, opt_update=opt.update
         )
     )
 

@@ -1,4 +1,9 @@
-"""jit'd wrappers: padding + lane reduction + threshold compare."""
+"""jit'd wrappers: padding + lane reduction + threshold compare.
+
+Inputs are the canonical (m, D) flat rows ``efhc.flatten_stack`` builds
+from the ModelSpec pytree -- D is ``ModelSpec.flat_dim``, so a real
+multi-layer model just means wider rows spanning more column blocks; the
+kernels are architecture-blind (DESIGN.md "Model plumbing")."""
 from __future__ import annotations
 
 import jax

@@ -1,7 +1,9 @@
 """Communication-savings accounting (core/accounting.py)."""
 import numpy as np
+import pytest
 
-from repro.core.accounting import savings_report
+from repro.core.accounting import (model_bytes, report_from_result,
+                                   savings_report)
 
 
 def _ring(m):
@@ -72,3 +74,36 @@ def test_simulator_trace_roundtrip():
                          bandwidths=res.bandwidths)
     assert rep.event_bytes <= rep.dense_bytes + 1e-9
     assert 0.0 <= rep.trigger_rate <= 1.0
+
+
+def test_two_layer_model_reports_two_layer_bytes():
+    """Regression (ISSUE 7 satellite): the accounting must charge the
+    *realized* ModelSpec flat_dim -- the bytes Event 2 actually broadcasts
+    for the full stacked pytree -- never a config-level input-dim scalar.
+    A 2-layer MLP at dim=32 holds 32*64+64 + 64*10+10 = 2762 parameters;
+    the report built from its run must say 2762*4 bytes per model."""
+    import dataclasses
+
+    from repro.core.topology import make_process
+    from repro.data.loader import FederatedBatches
+    from repro.data.partition import by_labels
+    from repro.data.synthetic import image_dataset
+    from repro.fl.simulator import SimConfig, model_spec, run
+
+    x, y = image_dataset(400, seed=0, dim=32)
+    parts = by_labels(y, 4, 3)
+    graph = make_process(4, "ring")
+    sim = SimConfig(m=4, iters=6, model="mlp", dim=32, policy="efhc")
+    two_layer_params = 32 * 64 + 64 + 64 * sim.n_classes + sim.n_classes
+    assert model_spec(sim).flat_dim == two_layer_params
+
+    res = run(sim, graph, FederatedBatches(x, y, parts, 8, seed=1), None,
+              eval_every=6)
+    rep = report_from_result(res)
+    assert rep.n_bytes == model_bytes(two_layer_params) == two_layer_params * 4
+    assert rep.n_bytes != sim.dim * 4  # the old config-scalar trap
+    assert rep.dense_bytes > 0
+
+    # summary traces drop the link matrices the report needs: fail loudly
+    with pytest.raises(ValueError, match="summary"):
+        report_from_result(dataclasses.replace(res, trace="summary"))

@@ -22,11 +22,13 @@ def _doc(entries):
             "entries": entries}
 
 
-def _entry(m, trace, mix_impl, ips, shards=None):
+def _entry(m, trace, mix_impl, ips, shards=None, model=None):
     e = {"m": m, "trace": trace, "mix_impl": mix_impl,
          "iters": 12, "iters_per_sec": ips}
     if shards is not None:
         e["shards"] = shards
+    if model is not None:
+        e["model"] = model
     return e
 
 
@@ -93,6 +95,31 @@ def test_compare_matches_sharded_entries_on_shard_count():
     assert len(regressions) == 1 and regressions[0]["shards"] == 8
     table = check_regression.markdown_table(rows, 0.35)
     assert "| shards |" in table
+
+
+def test_compare_matches_model_entries_on_model_name():
+    """Model rows gate per (m, trace, mix_impl, shards, model): a point
+    measured on a different ModelSpec is a different program (flat_dim,
+    grad cost) and must be 'new', never compared; entries without a model
+    column (every pre-ModelSpec file) default to 'svm' so old pins stay
+    comparable."""
+    ref = _doc([
+        _entry(1024, "summary", "sparse", 30.0, model="mlp_blocks"),
+        _entry(256, "packed", "dense", 40.0),  # no model key: svm
+    ])
+    new = _doc([
+        _entry(1024, "summary", "sparse", 2.0, model="cnn"),  # model mismatch
+        _entry(1024, "summary", "sparse", 29.0, model="mlp_blocks"),
+        _entry(256, "packed", "dense", 39.0, model="svm"),  # explicit == absent
+    ])
+    rows, regressions = check_regression.compare(ref, new, threshold=0.35)
+    assert regressions == []
+    assert [r["status"] for r in rows] == ["new", "ok", "ok"]
+    slow = _doc([_entry(1024, "summary", "sparse", 1.0, model="mlp_blocks")])
+    _, regressions = check_regression.compare(ref, slow, threshold=0.35)
+    assert len(regressions) == 1 and regressions[0]["model"] == "mlp_blocks"
+    table = check_regression.markdown_table(rows, 0.35)
+    assert "| model |" in table and "mlp_blocks" in table
 
 
 def test_compare_legacy_entries_default_to_dense():
@@ -209,21 +236,25 @@ def test_pinned_reference_has_the_m_scaling_grid():
     by_key = {check_regression.entry_key(e): e for e in pinned["entries"]}
     assert any(k[0] == 2048 for k in by_key)
     assert any(k[0] == 4096 for k in by_key)
-    assert ("iters_per_sec" in by_key[(16384, "summary", "sparse", 1)])
-    staging = by_key[(32768, "staging", "staging", 1)]
+    assert ("iters_per_sec" in by_key[(16384, "summary", "sparse", 1, "svm")])
+    staging = by_key[(32768, "staging", "staging", 1, "svm")]
     assert staging["staging_sec"] > 0 and staging["n_edges"] > 32768
-    assert "iters_per_sec" in by_key[(4096, "summary", "sharded", 8)]
-    big = [e for (m, trace, impl, s), e in by_key.items()
+    assert "iters_per_sec" in by_key[(4096, "summary", "sharded", 8, "svm")]
+    big = [e for (m, trace, impl, s, model), e in by_key.items()
            if m >= 100000 and impl == "sharded" and trace == "summary"
            and s >= 8]
     assert big and all("iters_per_sec" in e and e["iters_per_sec"] > 0
                        and e["boundary_frac"] < 0.5 for e in big), \
         "pinned grid must simulate an m >= 100000 sharded summary entry"
+    # every simulation entry carries an explicit model column (staging rows
+    # never simulate a model)
+    assert all("model" in e for e in pinned["entries"]
+               if "iters_per_sec" in e)
     compared = 0
-    for (m, trace, impl, s), e in by_key.items():
+    for (m, trace, impl, s, model), e in by_key.items():
         if impl != "sparse" or m < 4096:
             continue
-        dense = by_key.get((m, trace, "dense", s))
+        dense = by_key.get((m, trace, "dense", s, model))
         if dense is not None:
             compared += 1
             assert e["iters_per_sec"] > dense["iters_per_sec"], \

@@ -273,17 +273,62 @@ def test_complete_staging_is_edge_native():
     assert g.edges.n_edges == 512 * 511 // 2
 
 
-def test_edge_dropout_rejects_m_past_int32_eid_range():
-    """The jitted dropout paths keep canonical edge ids int32 (fold_in
-    bit-compatibility); past m = 46340 the ids would wrap and distinct
-    edges would silently share uniforms -- constructing such a process must
-    fail loudly instead."""
-    e = np.empty(0, np.int32)
-    big = EdgeList(e, e.copy(), 46341)
-    with pytest.raises(ValueError, match="46340"):
-        GraphProcess(edges=big, kind="edge_dropout", drop=0.3)
-    # static kinds never evaluate edge ids: no bound
-    GraphProcess(edges=big, kind="static")
+def test_edge_dropout_past_int32_eid_range():
+    """The int32 canonical-id cap is lifted: past m = 46340 the dropout
+    stream switches to the two-word ``_edge_uniforms_uv`` fold_in keyed on
+    the (min, max) endpoint pair.  Stage a ring at m = 60000 (ids up to
+    ~3.6e9, well past int32) and check the staging contract at O(m) cost:
+    the O(E) edge-list realization, the full ELL slot realization, and an
+    arbitrary ELL row subset all agree edge-for-edge (the sharded engine's
+    bit-exactness hinges on the row-subset property), the (min, max) keying
+    makes the realization symmetric across endpoints, and the empirical
+    keep rate tracks 1 - drop."""
+    m = 60000
+    drop = 0.3
+    g = make_process(m, "ring", time_varying="edge_dropout", drop=drop,
+                     seed=3)
+    nl = g.neighbors()
+    idx, mask = jnp.asarray(nl.idx), jnp.asarray(nl.mask)
+    ell = np.asarray(g.adjacency_ell_rows(
+        5, idx, mask, jnp.arange(m, dtype=jnp.int32)))
+
+    # row subset == the same rows of the full ELL realization
+    rows = np.array([0, 1, 46339, 46340, 46341, m - 1], np.int32)
+    sub = np.asarray(g.adjacency_ell_rows(
+        5, idx[rows], mask[rows], jnp.asarray(rows)))
+    assert np.array_equal(sub, ell[rows])
+
+    # symmetry: edge (i, j) realized identically from both endpoint rows
+    kept = {}
+    for i in range(m):
+        for s in range(nl.d_max):
+            if nl.mask[i, s]:
+                e = (min(i, int(nl.idx[i, s])), max(i, int(nl.idx[i, s])))
+                assert kept.setdefault(e, bool(ell[i, s])) == bool(ell[i, s])
+    assert len(kept) == g.edges.n_edges
+
+    # the O(E) edge-list draw (adjacency's path) realizes the same stream:
+    # evaluate _edge_uniforms_uv directly on the canonical edge list rather
+    # than densifying the 60000^2 adjacency
+    key = jax.random.fold_in(jax.random.PRNGKey(g.seed),
+                             jnp.asarray(5, jnp.uint32))
+    keep_e = np.asarray(T._edge_uniforms_uv(
+        key, jnp.asarray(g.edges.u), jnp.asarray(g.edges.v), m) >= drop)
+    for (u, v), k in zip(zip(g.edges.u, g.edges.v), keep_e):
+        assert kept[(int(u), int(v))] == bool(k)
+
+    # keep rate ~ 1 - drop over E = 60000 edges
+    rate = keep_e.mean()
+    assert abs(rate - (1 - drop)) < 0.02
+
+    # below the cap the single-word stream is untouched (bit-compat with
+    # every pinned artifact): _edge_uniforms_uv == _edge_uniforms(lo*m+hi)
+    ms = 100
+    lo = jnp.arange(ms, dtype=jnp.int32)
+    hi = lo + 7
+    np.testing.assert_array_equal(
+        np.asarray(T._edge_uniforms_uv(key, lo, hi, ms + 7)),
+        np.asarray(T._edge_uniforms(key, lo * (ms + 7) + hi)))
 
 
 def test_base_view_is_lazy_and_cached():

@@ -30,6 +30,8 @@ from repro.data.synthetic import image_dataset
 from repro.fl.simulator import SimConfig, run
 
 GOLDEN = pathlib.Path(__file__).parent / "golden" / "efhc_m8_trajectory.json"
+GOLDEN_BLOCKS = (pathlib.Path(__file__).parent / "golden"
+                 / "efhc_m8_mlp_blocks.json")
 M, T, DIM = 8, 18, 24
 
 INT_FIELDS = ("v", "comm_count", "deg")
@@ -41,6 +43,22 @@ def _golden_run():
     parts = by_labels(y, M, 3)
     graph = make_process(M, "rgg", time_varying="edge_dropout", drop=0.3, seed=0)
     sim = SimConfig(m=M, iters=T, dim=DIM, batch=8, r=50.0, seed=0)
+    batches = FederatedBatches(x, y, parts, sim.batch, seed=2)
+    return run(sim, graph, batches, None, eval_every=5, engine="scan")
+
+
+def _golden_run_blocks():
+    """Same canonical staging, but the device model is the residual
+    pre-norm ``mlp_blocks`` stack from ``repro.models``: a nested pytree
+    (proj / stacked blocks / norms / head) crossing the flatten boundary,
+    so this run pins the (m, D) flat-view realization -- flatten order,
+    mixing on flat rows, unflatten back for Event-4 SGD -- for a model
+    that is NOT a flat dict of 2-D leaves."""
+    x, y = image_dataset(600, seed=0, dim=DIM)
+    parts = by_labels(y, M, 3)
+    graph = make_process(M, "rgg", time_varying="edge_dropout", drop=0.3, seed=0)
+    sim = SimConfig(m=M, iters=T, dim=DIM, batch=8, r=50.0, seed=0,
+                    model="mlp_blocks")
     batches = FederatedBatches(x, y, parts, sim.batch, seed=2)
     return run(sim, graph, batches, None, eval_every=5, engine="scan")
 
@@ -77,6 +95,33 @@ def test_efhc_trajectory_matches_golden_artifact():
             err_msg=f"{f} diverged from the golden trajectory")
 
 
+def test_mlp_blocks_trajectory_matches_golden_artifact():
+    """Pytree state through the flatten boundary (ISSUE 7): seed-fixed m=8
+    run with the ``mlp_blocks`` ModelSpec, asserted against its own golden
+    artifact with the same channel tolerances as the svm run.  Any drift
+    in the flatten/unflatten leaf order, the per-device init_stack split,
+    or the optimizer threading moves these channels."""
+    assert GOLDEN_BLOCKS.exists(), \
+        f"golden artifact missing: {GOLDEN_BLOCKS} (see module docstring)"
+    want = json.loads(GOLDEN_BLOCKS.read_text())
+    assert (want["m"], want["iters"], want["dim"]) == (M, T, DIM)
+    res = _golden_run_blocks()
+    assert res.model_dim == want["model_dim"], \
+        "mlp_blocks flat_dim changed: the flatten boundary shifted"
+    np.testing.assert_allclose(res.bandwidths, np.asarray(want["bandwidths"]),
+                               rtol=1e-5, err_msg="bandwidth draw shifted")
+    for f in INT_FIELDS:
+        got = np.asarray(getattr(res, f), np.int64)
+        ref = np.asarray(want[f], np.int64)
+        assert np.array_equal(got, ref), \
+            f"RNG realization shifted: {f} diverged (mlp_blocks golden)"
+    for f in FLOAT_FIELDS:
+        np.testing.assert_allclose(
+            np.asarray(getattr(res, f), np.float64), np.asarray(want[f]),
+            rtol=2e-4, atol=2e-5,
+            err_msg=f"{f} diverged from the mlp_blocks golden trajectory")
+
+
 def test_sharded_engine_matches_golden_artifact_on_8_devices():
     """The same golden realization, reproduced by the sharded fleet engine
     on 8 forced host devices (8 shards of 1 device each -- the maximal
@@ -107,5 +152,9 @@ if __name__ == "__main__":
         GOLDEN.parent.mkdir(parents=True, exist_ok=True)
         GOLDEN.write_text(json.dumps(_to_doc(_golden_run()), indent=1))
         print(f"wrote {GOLDEN}")
+        res_b = _golden_run_blocks()
+        doc_b = {**_to_doc(res_b), "model_dim": int(res_b.model_dim)}
+        GOLDEN_BLOCKS.write_text(json.dumps(doc_b, indent=1))
+        print(f"wrote {GOLDEN_BLOCKS}")
     else:
         print("pass --write to regenerate the golden artifact")

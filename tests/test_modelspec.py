@@ -1,0 +1,168 @@
+"""ModelSpec registry lockdown (fl/modelspec.py): the model/grad/eval
+contract every engine consumes.
+
+Each registry entry must satisfy the same four-way contract -- stacked
+init, exact flat_dim, logits shape, finite grads with the parameter
+structure -- because the engines treat the spec as opaque: Events 1-3 see
+only the (m, flat_dim) flat view, Event 4 only the pytree ``grad_fn``
+touches.  The legacy ``svm``/``mlp`` functions must remain importable from
+``fl.simulator`` as the SAME objects (downstream code and the golden
+artifacts depend on that stream staying bit-identical).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.fl import modelspec as M
+from repro.fl import simulator
+
+DIM, NC = 64, 10  # square (cnn) and non-trivial for every entry
+
+
+def _batch(name, b=6, seed=0):
+    rng = np.random.default_rng(seed)
+    if name == "tiny_transformer":
+        x = rng.integers(0, NC, (b, 8)).astype(np.int32)
+    else:
+        x = rng.normal(size=(b, DIM)).astype(np.float32)
+    return jnp.asarray(x), jnp.asarray(rng.integers(0, NC, (b,)), jnp.int32)
+
+
+@pytest.mark.parametrize("name", M.MODEL_NAMES)
+def test_registry_contract(name):
+    spec = M.make_model_spec(name, dim=DIM, n_classes=NC)
+    assert spec.name == name
+
+    m = 3
+    w = spec.init_stack(jax.random.PRNGKey(0), m)
+    leaves = jax.tree.leaves(w)
+    assert all(l.shape[0] == m for l in leaves), "stacked device axis"
+    # flat_dim is the EXACT realized per-device parameter count: this is
+    # what the trigger/mixing flat view and the tx-bytes accounting use
+    assert spec.flat_dim == sum(int(np.prod(l.shape[1:])) for l in leaves) > 0
+
+    x, y = _batch(name)
+    w0 = jax.tree.map(lambda l: l[0], w)
+    logits = spec.eval_logits(w0, x)
+    assert logits.shape == (x.shape[0], NC)
+    assert np.isfinite(np.asarray(spec.loss_fn(logits, y)))
+
+    loss, grads = spec.grad_fn(w0, jax.random.PRNGKey(1), (x, y))
+    assert np.isfinite(float(loss))
+    assert jax.tree.structure(grads) == jax.tree.structure(w0)
+    assert any(float(jnp.abs(g).max()) > 0 for g in jax.tree.leaves(grads))
+
+
+def test_init_stack_is_per_device_fold_of_one_key():
+    """Row i of the stack == init_one(split(key, m)[i]): the sharded engine
+    relies on this to initialize only its owned rows bit-identically."""
+    spec = M.make_model_spec("mlp", dim=DIM, n_classes=NC)
+    key = jax.random.PRNGKey(7)
+    w = spec.init_stack(key, 4)
+    k2 = jax.random.split(key, 4)[2]
+    row2 = spec.init_one(k2)
+    for a, b in zip(jax.tree.leaves(w), jax.tree.leaves(row2)):
+        np.testing.assert_array_equal(np.asarray(a[2]), np.asarray(b))
+
+
+def test_shared_init_replicates_one_draw():
+    """Deep models start every device from the SAME init_one(key) draw:
+    weight-space consensus averaging of m independent deep-net inits shrinks
+    every layer ~1/sqrt(m) and the fleet never leaves chance.  svm/mlp keep
+    the legacy per-device stream (golden artifacts).  init_rows must realize
+    the same rows the full stack has, at any rows subset."""
+    for name, shared in [("cnn", True), ("mlp_blocks", True),
+                         ("tiny_transformer", True), ("svm", False),
+                         ("mlp", False)]:
+        spec = M.make_model_spec(name, dim=DIM, n_classes=NC)
+        assert spec.shared_init == shared, name
+
+    spec = M.make_model_spec("cnn", dim=DIM, n_classes=NC)
+    key = jax.random.PRNGKey(11)
+    w = spec.init_stack(key, 4)
+    one = spec.init_one(key)
+    for l, lo in zip(jax.tree.leaves(w), jax.tree.leaves(one)):
+        for i in range(4):
+            np.testing.assert_array_equal(np.asarray(l[i]), np.asarray(lo))
+
+    # the per-device stream still differs row to row for the legacy models
+    wm = M.make_model_spec("mlp", dim=DIM, n_classes=NC).init_stack(key, 4)
+    assert np.abs(np.asarray(wm["w1"][0]) - np.asarray(wm["w1"][1])).max() > 0
+
+    rows = jnp.asarray([2, 0, 3])
+    for full, sub in [(spec.init_stack(key, 4), spec.init_rows(key, 4, rows)),
+                      (wm, M.make_model_spec("mlp", dim=DIM, n_classes=NC)
+                       .init_rows(key, 4, rows))]:
+        for lf, ls in zip(jax.tree.leaves(full), jax.tree.leaves(sub)):
+            np.testing.assert_array_equal(np.asarray(lf[np.asarray(rows)]),
+                                          np.asarray(ls))
+
+
+def test_unknown_model_raises():
+    with pytest.raises(ValueError, match="model"):
+        M.make_model_spec("resnet152", dim=DIM, n_classes=NC)
+
+
+def test_cnn_requires_square_dim():
+    with pytest.raises(ValueError, match="square"):
+        M.make_model_spec("cnn", dim=48, n_classes=NC)
+
+
+def test_simulator_reexports_are_the_same_objects():
+    """The legacy model functions moved, not changed: any consumer (or
+    pinned artifact) built on simulator.init_svm/init_mlp keeps the exact
+    realization."""
+    assert simulator.init_svm is M.init_svm
+    assert simulator.init_mlp is M.init_mlp
+    assert simulator.svm_logits is M.svm_logits
+    assert simulator.mlp_logits is M.mlp_logits
+    assert simulator.multi_margin_loss is M.multi_margin_loss
+    assert simulator.xent_loss is M.xent_loss
+
+
+def test_image_dataset_smooth_contract():
+    """smooth=0 must stay bit-identical to the historical stream (golden
+    trajectories and sweep tests consume it), smooth>0 must only reshape
+    the prototypes -- the label draw precedes the blur, so y is invariant
+    -- and the blur needs a square grid to blur over."""
+    from repro.data.synthetic import image_dataset
+
+    x0, y0 = image_dataset(64, dim=64, seed=5)
+    x0b, y0b = image_dataset(64, dim=64, seed=5, smooth=0)
+    np.testing.assert_array_equal(x0, x0b)
+    np.testing.assert_array_equal(y0, y0b)
+
+    xs, ys = image_dataset(64, dim=64, seed=5, smooth=2)
+    np.testing.assert_array_equal(y0, ys)
+    assert xs.shape == x0.shape and xs.dtype == x0.dtype
+    assert np.abs(xs - x0).max() > 0  # the blur really moved the pixels
+
+    with pytest.raises(ValueError, match="square"):
+        image_dataset(8, dim=48, smooth=1)
+
+
+def test_cnn_avgpool_exact_on_partial_windows():
+    """_avgpool2 divides by the realized window size, so odd-sided images
+    (partial edge windows under SAME) average exactly, not 0.25-weighted."""
+    x = jnp.ones((2, 5, 5, 3), jnp.float32)
+    out = M._avgpool2(x)
+    assert out.shape == (2, 3, 3, 3)
+    np.testing.assert_allclose(np.asarray(out), 1.0, rtol=1e-6)
+
+
+def test_grad_fn_matches_direct_value_and_grad():
+    """make_grad_fn is a thin value_and_grad wrapper -- no key consumption,
+    no loss reweighting -- so engine gradients equal the hand-written
+    reference expression."""
+    spec = M.make_model_spec("svm", dim=8, n_classes=4)
+    w = spec.init_one(jax.random.PRNGKey(3))
+    x, y = (jnp.asarray(np.random.default_rng(0).normal(size=(5, 8)),
+                        jnp.float32),
+            jnp.asarray([0, 1, 2, 3, 0], jnp.int32))
+    loss, grads = spec.grad_fn(w, jax.random.PRNGKey(9), (x, y))
+    ref_loss, ref_grads = jax.value_and_grad(
+        lambda p: M.multi_margin_loss(M.svm_logits(p, x), y))(w)
+    assert float(loss) == float(ref_loss)
+    for a, b in zip(jax.tree.leaves(grads), jax.tree.leaves(ref_grads)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -226,6 +226,48 @@ def test_sharded_at_m256_matches_single_device_on_8_devices():
         f"sharded parity worker failed:\n{proc.stdout}\n{proc.stderr}"
 
 
+def test_flatten_unflatten_roundtrip_on_nested_pytree():
+    """``unflatten_stack`` is the exact inverse of ``flatten_stack`` on the
+    nested ``mlp_blocks`` parameter stack (stacked per-depth blocks, nested
+    dicts) -- the flat-view boundary Events 1-3 ride must reconstruct every
+    leaf's shape, dtype, and bits for Event-4 SGD."""
+    import jax
+
+    from repro.core import efhc
+    from repro.fl.modelspec import make_model_spec
+
+    spec = make_model_spec("mlp_blocks", dim=24, n_classes=10)
+    w = spec.init_stack(jax.random.PRNGKey(0), 3)
+    flat = efhc.flatten_stack(w)
+    assert flat.shape == (3, spec.flat_dim) and spec.flat_dim >= 4096
+    back = efhc.unflatten_stack(flat, w)
+    assert jax.tree.structure(back) == jax.tree.structure(w)
+    for a, b in zip(jax.tree.leaves(back), jax.tree.leaves(w)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("impl", ["sparse", "pallas", "sparse_pallas"])
+def test_mixing_parity_at_large_flat_dim(impl):
+    """Dense vs sparse vs Pallas Event-3 parity on a real multi-layer model
+    (mlp_blocks, flat_dim 13504 >= 4k): the flat (m, D) rows span many
+    kernel column blocks, exercising the padding/tiling paths the dim-32
+    synthetic runs never reach."""
+    m, T, dim, ee = 4, 7, 24, 3
+    x, y = image_dataset(400, seed=0, dim=dim)
+    parts = by_labels(y, m, 3)
+    graph = make_process(m, "rgg", time_varying="edge_dropout", drop=0.3,
+                         seed=0)
+    sim = SimConfig(m=m, iters=T, dim=dim, r=50.0, seed=0,
+                    model="mlp_blocks")
+    assert simulator.model_spec(sim).flat_dim >= 4096
+    mk = lambda: FederatedBatches(x, y, parts, sim.batch, seed=2)
+    dense = run(sim, graph, mk(), None, eval_every=ee)
+    other = run(dataclasses.replace(sim, mix_impl=impl), graph, mk(), None,
+                eval_every=ee)
+    _assert_results_match(other, dense)
+
+
 def test_engine_cache_shares_equal_valued_graphs(setup):
     """Two structurally identical GraphProcess instances (frozen dataclass,
     equal fields + base bytes) must hit ONE cache entry - the old id(graph)
