@@ -1,0 +1,84 @@
+"""Scenario-service throughput benchmark: sims/s under a mixed request mix.
+
+Measures what the serving layer actually sells -- amortized compile reuse
+across a stream of what-if requests.  The same request mix is served twice
+through one resident ``ScenarioService``: the COLD pass pays the engine +
+program compiles, the WARM pass streams cells through the caches.  The
+warm/cold wall-clock ratio is the continuous-batching payoff, and the warm
+``sims_per_s`` is the steady-state serving throughput.
+
+Writes JSON rows compatible with eyeballing next to ``BENCH_fleet.json``
+(this file is informational, not regression-gated: serving walls are
+dominated by compile on cold rounds and host staging, both noisier than
+the >35% gate tolerates).
+
+    PYTHONPATH=src python benchmarks/serve_bench.py [--iters 60] [--m 32]
+        [--requests 12] [--out BENCH_serve.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from repro import api
+
+
+def request_mix(n: int, m: int, iters: int) -> list[api.ScenarioSpec]:
+    """n requests round-robined over 2 signatures x 4 policies."""
+    fleets = [
+        dict(m=m, dim=64, n_train=1600, n_test=400, iters=iters),
+        dict(m=m, topology="er", time_varying="static", dim=64,
+             n_train=1600, n_test=400, iters=iters, r=20.0),
+    ]
+    policies = ("efhc", "zero", "global", "gossip")
+    return [api.ScenarioSpec(**fleets[i % 2], policy=policies[i % 4],
+                             seeds=(i,)) for i in range(n)]
+
+
+def serve_pass(svc: api.ScenarioService, specs) -> dict:
+    t0 = time.perf_counter()
+    reports = svc.serve(specs)
+    wall = time.perf_counter() - t0
+    cells = sum(len(r.results) for r in reports)
+    return {"wall_s": wall, "requests": len(reports), "cells": cells,
+            "sims_per_s": cells / wall,
+            "fleet_iters_per_s": cells * specs[0].iters / wall,
+            "mean_queue_wait_s": sum(r.queue_wait_s for r in reports)
+                                 / len(reports),
+            "engine_hits": sum(r.engine_cache_hit for r in reports),
+            "program_hits": sum(r.program_cache_hit for r in reports)}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--iters", type=int, default=60)
+    ap.add_argument("--m", type=int, default=32)
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--max-cells", type=int, default=8)
+    ap.add_argument("--out", default="BENCH_serve.json")
+    args = ap.parse_args()
+
+    specs = request_mix(args.requests, args.m, args.iters)
+    svc = api.ScenarioService(max_cells=args.max_cells)
+    cold = serve_pass(svc, specs)
+    warm = serve_pass(svc, specs)
+    stats = svc.stats()
+
+    speedup = cold["wall_s"] / max(warm["wall_s"], 1e-9)
+    print(f"cold: {cold['wall_s']:.1f}s ({cold['sims_per_s']:.2f} sims/s) | "
+          f"warm: {warm['wall_s']:.1f}s ({warm['sims_per_s']:.2f} sims/s) | "
+          f"compile-reuse speedup {speedup:.1f}x")
+    print(f"engine cache {stats.engine.hits}h/{stats.engine.misses}m, "
+          f"program cache {stats.program_hits}h/{stats.program_misses}m")
+
+    with open(args.out, "w") as f:
+        json.dump({"m": args.m, "iters": args.iters,
+                   "requests": args.requests, "max_cells": args.max_cells,
+                   "cold": cold, "warm": warm, "warm_speedup": speedup,
+                   "service": stats.as_dict()}, f, indent=2)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -2,24 +2,17 @@
 
 The paper's evaluation workload - four trigger policies (EF-HC / ZT / GT /
 RG) across several data/bandwidth/init seeds - used to run as nested Python
-loops over a host-synced simulator.  With the device-resident scan engine
-the entire grid is a single ``jit(vmap(vmap(engine)))`` call: the policy
-axis dispatches through a ``lax.switch`` table and the seed axis vmaps the
-PRNG-derived bandwidths, initial models, and pre-staged batch indices.
+loops over a host-synced simulator.  Through ``repro.api`` the entire grid
+is a single ``jit(vmap(vmap(engine)))`` call: the policy axis dispatches
+through a ``lax.switch`` table and the seed axis vmaps the PRNG-derived
+bandwidths, initial models, and pre-staged batch indices.
 
     PYTHONPATH=src python examples/policy_seed_sweep.py [--seeds 4] [--iters 150]
 """
 import argparse
 import time
 
-import numpy as np
-
-from repro.core.topology import make_process
-from repro.data.loader import FederatedBatches
-from repro.data.partition import by_labels
-from repro.data.synthetic import image_dataset
-from repro.fl.simulator import SimConfig, make_eval_fn
-from repro.fl.sweep import policy_auc_table, run_sweep
+from repro import api
 
 
 def main():
@@ -28,20 +21,9 @@ def main():
     ap.add_argument("--iters", type=int, default=200)
     args = ap.parse_args()
 
-    m = 10
-    x, y = image_dataset(4000, seed=0)
-    x_test, y_test = image_dataset(800, seed=1)
-    parts = by_labels(y, m, 1)
-    graph = make_process(m, "rgg", time_varying="edge_dropout", drop=0.3, seed=0)
-    sim = SimConfig(m=m, iters=args.iters, r=50.0)
-    eval_fn = make_eval_fn(sim, x_test, y_test)
-
-    seeds = tuple(range(args.seeds))
+    spec = api.ScenarioSpec(m=10, iters=args.iters, r=50.0)
     t0 = time.time()
-    res = run_sweep(
-        sim, graph,
-        lambda s: FederatedBatches(x, y, parts, sim.batch, seed=s + 2),
-        eval_fn, seeds=seeds, eval_every=10)
+    res = api.sweep(spec, seeds=range(args.seeds))
     wall = time.time() - t0
 
     S, P, T = res.acc.shape
@@ -49,7 +31,7 @@ def main():
           f"({S * P} simulations, one compiled call, {wall:.1f}s)\n")
 
     print(f"{'policy':8s} {'acc mean±std':>14s} {'tx/iter':>8s} {'trig':>6s} {'auc':>6s}")
-    auc = policy_auc_table(res)
+    auc = api.policy_auc_table(res)
     for p, policy in enumerate(res.policies):
         accs = res.acc[:, p, -1]
         print(f"{policy:8s} {accs.mean():7.3f}±{accs.std():.3f} "

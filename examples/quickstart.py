@@ -1,36 +1,25 @@
-"""Quickstart: decentralized event-triggered FL (EF-HC) in ~40 lines.
+"""Quickstart: decentralized event-triggered FL (EF-HC) in 5 lines.
 
 Ten devices with non-iid data cooperatively train an SVM with NO central
 server: each device broadcasts its model to graph neighbors only when its
-personalized threshold (paper Eq. 3) fires.  The whole run executes as one
-compiled chunked-scan program on device (see examples/policy_seed_sweep.py
-for vmapping it over seeds and trigger policies).
+personalized threshold (paper Eq. 3) fires.  ``repro.api`` is the stable
+entry point: ``ScenarioSpec`` validates the request up front (try
+``policy="efch"`` -- it fails at construction naming the allowed values),
+and the whole run executes as one compiled chunked-scan program on device.
+See examples/policy_seed_sweep.py for the seeds x policies grid and
+examples/serve_batched.py for continuous-batched serving.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import numpy as np
-
-from repro.core.topology import make_process
-from repro.data.loader import FederatedBatches
-from repro.data.partition import by_labels
-from repro.data.synthetic import image_dataset
-from repro.fl.simulator import SimConfig, make_eval_fn, run
+from repro import api
 
 
 def main():
-    # 1. federated data: 10 devices, 1 label each (extreme non-iid, paper IV-A)
-    x, y = image_dataset(4000, seed=0)
-    x_test, y_test = image_dataset(800, seed=1)
-    parts = by_labels(y, m=10, labels_per_device=1)
-
-    # 2. time-varying peer-to-peer graph (random geometric, links drop 30%)
-    graph = make_process(10, "rgg", time_varying="edge_dropout", drop=0.3, seed=0)
-
-    # 3. run EF-HC
-    sim = SimConfig(m=10, iters=200, policy="efhc", r=50.0)
-    eval_fn = make_eval_fn(sim, x_test, y_test)
-    res = run(sim, graph, FederatedBatches(x, y, parts, sim.batch, seed=2),
-              eval_fn, eval_every=20)
+    # 10 devices, 1 label each (extreme non-iid, paper IV-A), random
+    # geometric peer-to-peer graph with 30% link dropout -- all defaults
+    spec = api.ScenarioSpec(m=10, iters=200, policy="efhc", r=50.0,
+                            eval_every=20)
+    res = api.simulate(spec)
 
     print(f"final mean accuracy      : {res.acc[-1]:.3f}")
     print(f"broadcast trigger rate   : {res.v.mean():.2f} (1.0 = every step)")

@@ -1,24 +1,98 @@
-"""Batched serving demo: prefill-by-replay + sampled decode with KV caches
-(sliding-window layers use ring buffers; SSM/hybrid archs carry recurrent
-state).
+"""Continuous-batched scenario serving: a mixed what-if request set.
 
-    PYTHONPATH=src python examples/serve_batched.py --arch hymba-1.5b
+Eight concurrent requests across two compatibility signatures hit a
+resident ``ScenarioService``: requests sharing a signature (same fleet,
+model, horizon, trace, mix impl) are folded into ONE vmapped launch each
+round, with policy / seed / sampler stream varying per cell inside the
+compiled program.  ``--max-cells`` bounds a launch, so an over-subscribed
+signature drains over several rounds -- the later rounds reuse both the
+compiled engine (value-keyed LRU) and the padded-bucket vmapped program,
+which is the whole serving story: compile once, stream cells through.
+
+Emits a latency/throughput JSON artifact (per-request queue-wait / stage /
+run seconds, cache-hit flags, tx accounting, service-level cache counters)
+and asserts that compile reuse actually happened (>= 1 cache hit).
+
+    PYTHONPATH=src python examples/serve_batched.py [--iters 60] [--out serve_latency.json]
 """
 import argparse
+import json
 import sys
+import time
 
-from repro.launch import serve as serve_mod
+from repro import api
 
 
-def main():
+def request_mix(iters: int) -> list[api.ScenarioSpec]:
+    """>= 6 requests over >= 2 signatures (CI asserts this shape)."""
+    fleet_a = dict(m=10, dim=64, n_train=1200, n_test=300, iters=iters,
+                   eval_every=10, batch=16)  # signature A: rgg svm fleet
+    fleet_b = dict(m=16, topology="ring", time_varying="static", model="mlp",
+                   dim=32, n_train=1200, n_test=300, iters=iters,
+                   eval_every=10, batch=16, r=20.0)  # signature B: ring mlp
+    return [
+        api.ScenarioSpec(**fleet_a, policy="efhc", seeds=(0, 1)),
+        api.ScenarioSpec(**fleet_a, policy="gossip", seeds=(0, 1)),
+        api.ScenarioSpec(**fleet_a, policy="zero", seeds=(2,)),
+        api.ScenarioSpec(**fleet_a, policy="global", seeds=(3,)),
+        api.ScenarioSpec(**fleet_b, policy="efhc", seeds=(0, 1)),
+        api.ScenarioSpec(**fleet_b, policy="gossip", seeds=(0,)),
+        # late wave, same signatures: these ride the caches warmed above
+        api.ScenarioSpec(**fleet_a, policy="efhc", seeds=(7,)),
+        api.ScenarioSpec(**fleet_b, policy="zero", seeds=(7,)),
+    ]
+
+
+def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="hymba-1.5b")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--gen", type=int, default=24)
-    args = ap.parse_args()
-    return serve_mod.main(["--arch", args.arch, "--smoke",
-                           "--batch", str(args.batch),
-                           "--prompt_len", "16", "--gen", str(args.gen)])
+    ap.add_argument("--iters", type=int, default=60)
+    ap.add_argument("--max-cells", type=int, default=4)
+    ap.add_argument("--out", default=None, help="latency/throughput JSON path")
+    args = ap.parse_args(argv)
+
+    specs = request_mix(args.iters)
+    sigs = {s.signature() for s in specs}
+    svc = api.ScenarioService(max_cells=args.max_cells)
+
+    t0 = time.time()
+    reports = svc.serve(specs)
+    wall = time.time() - t0
+    stats = svc.stats()
+
+    print(f"served {len(reports)} requests ({stats.cells} cells, "
+          f"{len(sigs)} signatures) in {stats.launches} launches, {wall:.1f}s")
+    print(f"{'req':>3s} {'launch':>6s} {'cells':>5s} {'queue_ms':>8s} "
+          f"{'run_ms':>7s} {'eng$':>4s} {'prog$':>5s} {'acc':>6s} {'tx':>8s}")
+    rows = []
+    for rep in reports:
+        acc = sum(r.acc[-1] for r in rep.results.values()) / len(rep.results)
+        tx = sum(t.tx_time for t in rep.tx.values())
+        print(f"{rep.request_id:3d} {rep.launch_id:6d} "
+              f"{len(rep.results):5d} {1e3 * rep.queue_wait_s:8.1f} "
+              f"{1e3 * rep.run_s:7.0f} {str(rep.engine_cache_hit)[0]:>4s} "
+              f"{str(rep.program_cache_hit)[0]:>5s} {acc:6.3f} {tx:8.2f}")
+        rows.append({**rep.timing_dict(), "policy": rep.spec.policy,
+                     "mean_final_acc": float(acc), "tx_time": float(tx),
+                     "tx": {s: t.as_dict() for s, t in rep.tx.items()}})
+
+    hits = stats.program_hits + stats.engine.hits
+    print(f"\ncache: engine {stats.engine.hits} hits / "
+          f"{stats.engine.misses} misses ({stats.engine.key_bytes} key "
+          f"bytes), program {stats.program_hits} hits / "
+          f"{stats.program_misses} misses, {stats.padded_cells} padded cells")
+    print(f"throughput: {stats.cells / wall:.2f} sims/s "
+          f"({stats.cells * args.iters / wall:.0f} fleet-iters/s)")
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({"requests": rows, "service": stats.as_dict(),
+                       "signatures": len(sigs), "wall_s": wall,
+                       "sims_per_s": stats.cells / wall}, f, indent=2)
+        print(f"wrote {args.out}")
+
+    assert len(reports) >= 6 and len(sigs) >= 2, "request mix shrank"
+    assert hits >= 1, "expected >= 1 compiled-program cache hit"
+    return 0
 
 
 if __name__ == "__main__":

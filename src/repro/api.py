@@ -1,0 +1,67 @@
+"""Stable public API for the decentralized-FL reproduction.
+
+This facade is the supported first touch -- everything else under
+``repro.fl``/``repro.core`` is implementation that may move between PRs:
+
+    from repro import api
+
+    res = api.simulate(api.ScenarioSpec(m=10, iters=200, r=50.0))
+    grid = api.sweep(api.ScenarioSpec(m=10, iters=150, r=50.0),
+                     seeds=range(4))
+    reports = api.serve([spec_a, spec_b, ...])  # continuous-batched
+
+* ``ScenarioSpec`` -- the single validated request schema (fails fast at
+  construction on unknown policies/models/mix impls/traces and on illegal
+  combinations, with the allowed values named).
+* ``simulate(spec)`` -- one scenario, one seed, solo: returns ``SimResult``.
+* ``sweep(spec, seeds=..., policies=...)`` -- the seeds x policies grid as
+  one compiled call: returns ``SweepResult``.
+* ``serve(specs)`` -- continuous-batched serving of a mixed request set
+  through a ``ScenarioService``; returns per-request ``ScenarioReport``s
+  (results + latency/cache accounting), bit-identical to solo runs.
+
+All entry points share staging caches, so repeated calls with compatible
+specs reuse compiled engines (observable via ``engine_cache_stats``).
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+from repro.core.accounting import TxSummary, tx_summary_from_result
+from repro.fl.service import (Dataset, ScenarioReport, ScenarioService,
+                              ScenarioSpec, ServiceStats, SyntheticProvider,
+                              solo_run, sweep_run)
+from repro.fl.simulator import (EngineCacheStats, SimConfig, SimResult,
+                                engine_cache_stats)
+from repro.fl.sweep import SweepResult, acc_per_tx_auc, policy_auc_table
+
+__all__ = [
+    "ScenarioSpec", "ScenarioService", "ScenarioReport", "ServiceStats",
+    "SyntheticProvider", "Dataset", "SimConfig", "SimResult", "SweepResult",
+    "TxSummary", "EngineCacheStats", "simulate", "sweep", "serve",
+    "engine_cache_stats", "tx_summary_from_result", "acc_per_tx_auc",
+    "policy_auc_table",
+]
+
+
+def simulate(spec: ScenarioSpec, *, seed: int | None = None,
+             provider=None) -> SimResult:
+    """Runs one scenario solo (single seed, unbatched engine call)."""
+    return solo_run(spec, seed=seed, provider=provider)
+
+
+def sweep(spec: ScenarioSpec, *, seeds: Sequence[int] | None = None,
+          policies: Sequence[str] | None = None,
+          provider=None) -> SweepResult:
+    """Runs the scenario's seeds x policies grid in one compiled call."""
+    kw = {} if policies is None else {"policies": tuple(policies)}
+    return sweep_run(spec, seeds=seeds, provider=provider, **kw)
+
+
+def serve(specs: Sequence[ScenarioSpec], *, provider=None,
+          max_cells: int = 16,
+          service: ScenarioService | None = None) -> list[ScenarioReport]:
+    """Serves a mixed request set with continuous batching; pass a resident
+    ``service`` to accumulate cache state across calls."""
+    svc = service or ScenarioService(provider, max_cells=max_cells)
+    return svc.serve(specs)

@@ -104,6 +104,60 @@ def model_bytes(flat_dim: int, elem_bytes: int = 4) -> int:
     return int(flat_dim) * int(elem_bytes)
 
 
+@dataclasses.dataclass
+class TxSummary:
+    """Per-request transmission accounting from row-sum traces only.
+
+    ``savings_report`` needs the full (T, m, m) link matrices; a scenario
+    service running at fleet scale keeps ``trace="summary"`` and never has
+    them.  This report is computed from the per-device row sums
+    ``comm_count``/``deg`` that every trace mode records (identical numbers
+    where both paths apply: ``comm.sum((1, 2)) == comm_count.sum(1)``), so
+    the service can attach tx accounting to EVERY request.
+    """
+
+    steps: int
+    m: int
+    n_bytes: int
+    event_bytes: float  # cumulative, per-device average
+    dense_bytes: float
+    trigger_rate: float
+    link_utilization: float  # used links / physical links
+    tx_time: float  # paper Sec. IV metric, cumulative (engine-computed)
+
+    @property
+    def event_vs_dense(self) -> float:
+        return self.event_bytes / max(self.dense_bytes, 1e-30)
+
+    def as_dict(self) -> dict:
+        return {"steps": self.steps, "m": self.m, "n_bytes": self.n_bytes,
+                "event_bytes": self.event_bytes,
+                "dense_bytes": self.dense_bytes,
+                "event_vs_dense": self.event_vs_dense,
+                "trigger_rate": self.trigger_rate,
+                "link_utilization": self.link_utilization,
+                "tx_time": self.tx_time}
+
+
+def tx_summary_from_result(res, *, elem_bytes: int = 4) -> TxSummary:
+    """``TxSummary`` for a ``fl.simulator.SimResult`` in ANY trace mode.
+
+    Charges the realized model payload (``res.model_dim`` is the engine's
+    ModelSpec flat_dim) against the recorded per-device link counts."""
+    n_bytes = model_bytes(res.model_dim, elem_bytes)
+    t, m = res.v.shape
+    comm_total = float(res.comm_count.sum())
+    deg_total = float(res.deg.sum())
+    return TxSummary(
+        steps=t, m=m, n_bytes=n_bytes,
+        event_bytes=n_bytes * comm_total / m,
+        dense_bytes=n_bytes * deg_total / m,
+        trigger_rate=float(res.v.mean()),
+        link_utilization=comm_total / max(deg_total, 1.0),
+        tx_time=float(res.tx_time.sum()),
+    )
+
+
 def report_from_result(res, *, bandwidths=None, every_k: int = 4,
                        elem_bytes: int = 4) -> SavingsReport:
     """``savings_report`` driven by a ``fl.simulator.SimResult``: charges

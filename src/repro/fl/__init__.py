@@ -1,1 +1,10 @@
-from repro.fl import baselines, simulator, sweep
+"""FL engines and serving internals.
+
+Deprecation note: importing simulator/sweep/service symbols from here (or
+from their modules directly) still works and stays bit-compatible, but the
+*stable* entry points live in ``repro.api`` (``ScenarioSpec`` /
+``simulate`` / ``sweep`` / ``serve``) -- new code and notebooks should
+start there; module paths under ``repro.fl`` may be reorganized between
+PRs without a shim.
+"""
+from repro.fl import baselines, service, simulator, sweep

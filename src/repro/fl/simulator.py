@@ -41,7 +41,7 @@ from repro.fl import trace as trace_mod
 from repro.fl.modelspec import (ModelSpec, init_mlp, init_svm, make_model_spec,
                                 mlp_logits, multi_margin_loss, svm_logits,
                                 xent_loss)
-from repro.optim.optimizers import init_opt
+from repro.optim.optimizers import OPT_NAMES, init_opt
 from repro.optim.schedules import paper_diminishing
 
 
@@ -69,6 +69,11 @@ def model_spec(sim: "SimConfig") -> ModelSpec:
 # ---------------------------------------------------------------------------
 # runner
 # ---------------------------------------------------------------------------
+
+# every mix_impl a SimConfig may name: the efhc-level impls plus "sharded",
+# which routes to the shard_map fleet engine (repro.fl.sharded)
+SIM_MIX_IMPLS: tuple[str, ...] = efhc.MIX_IMPLS + ("sharded",)
+
 
 @dataclasses.dataclass
 class SimConfig:
@@ -104,6 +109,47 @@ class SimConfig:
     # counts only (O(T m); required for m >~ 512 horizons) -- DESIGN.md
     # "Trace modes"
     trace: str = "full"
+
+    def __post_init__(self):
+        """Fail-fast field validation (DESIGN.md "Scenario service").
+
+        Every registry-valued field is checked against its registry here,
+        at construction, with the allowed values named -- instead of
+        surfacing later as a KeyError in ``init_opt``, a ``lax.switch``
+        branch-count blowup, or a shape error three engines deep.  Illegal
+        combinations (``shards`` without the sharded engine, a sharded run
+        asking for link-matrix traces) are rejected the same way."""
+        if self.m < 1:
+            raise ValueError(f"m must be >= 1, got {self.m}")
+        if self.iters < 1:
+            raise ValueError(f"iters must be >= 1, got {self.iters}")
+        if self.batch < 1:
+            raise ValueError(f"batch must be >= 1, got {self.batch}")
+        if self.policy not in triggers.POLICIES:
+            raise ValueError(f"unknown policy {self.policy!r}; "
+                             f"allowed: {triggers.POLICIES}")
+        if self.model not in modelspec_mod.MODEL_NAMES:
+            raise ValueError(f"unknown model {self.model!r}; "
+                             f"allowed: {modelspec_mod.MODEL_NAMES}")
+        if self.optimizer not in OPT_NAMES:
+            raise ValueError(f"unknown optimizer {self.optimizer!r}; "
+                             f"allowed: {OPT_NAMES}")
+        if self.mix_impl not in SIM_MIX_IMPLS:
+            raise ValueError(f"unknown mix_impl {self.mix_impl!r}; "
+                             f"allowed: {SIM_MIX_IMPLS}")
+        trace_mod.check_trace_mode(self.trace)
+        if self.shards < 1:
+            raise ValueError(f"shards must be >= 1, got {self.shards}")
+        if self.shards > 1 and self.mix_impl != "sharded":
+            raise ValueError(
+                f"shards={self.shards} requires mix_impl='sharded' "
+                f"(got mix_impl={self.mix_impl!r}); every other impl runs "
+                f"single-device")
+        if self.mix_impl == "sharded" and self.trace != "summary":
+            raise ValueError(
+                f"mix_impl='sharded' keeps only summary traces (per-device "
+                f"counts); got trace={self.trace!r} -- link matrices would "
+                f"densify (T, m, m) at fleet scale")
 
 
 @dataclasses.dataclass
@@ -319,9 +365,93 @@ def make_engine(
 # fields + base-adjacency bytes): two structurally identical GraphProcess
 # instances must share a compile.  Data/eval stay id()-keyed; those entries
 # keep their referents alive so a recycled id cannot alias a stale entry.
-# The cache is a small LRU.
-_ENGINE_CACHE: "OrderedDict[tuple, tuple]" = OrderedDict()
-_ENGINE_CACHE_SIZE = 8
+# The cache is a small LRU, instrumented so the scenario service can report
+# compile reuse per request (ISSUE 8: hits were previously unobservable).
+
+
+@dataclasses.dataclass
+class EngineCacheStats:
+    """Point-in-time counters for the compiled-engine LRU.
+
+    ``hits``/``misses``/``evictions`` are lifetime (survive ``clear()``
+    resets of the entries, reset only by ``reset_stats=True``); ``entries``
+    and ``key_bytes`` describe the current contents -- ``key_bytes`` is the
+    total size of the byte-valued key components (the lexsorted edge-list
+    arrays), i.e. what "keyed on edge bytes O(E)" costs in cache memory."""
+
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+    entries: int = 0
+    key_bytes: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        n = self.hits + self.misses
+        return self.hits / n if n else 0.0
+
+    def as_dict(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions, "entries": self.entries,
+                "key_bytes": self.key_bytes, "hit_rate": self.hit_rate}
+
+
+def _key_nbytes(key) -> int:
+    if isinstance(key, bytes):
+        return len(key)
+    if isinstance(key, tuple):
+        return sum(_key_nbytes(k) for k in key)
+    return 0
+
+
+class EngineCache:
+    """LRU of built (jitted engine, model_dim, keepalive) entries with
+    hit/miss accounting.  Supports ``len()`` and ``clear()`` like the plain
+    OrderedDict it replaces."""
+
+    def __init__(self, size: int = 8):
+        self.size = size
+        self._d: "OrderedDict[tuple, tuple]" = OrderedDict()
+        self._hits = 0
+        self._misses = 0
+        self._evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    def clear(self, *, reset_stats: bool = False) -> None:
+        self._d.clear()
+        if reset_stats:
+            self._hits = self._misses = self._evictions = 0
+
+    def get_or_build(self, key: tuple, build) -> tuple:
+        hit = self._d.get(key)
+        if hit is None:
+            self._misses += 1
+            hit = build()
+            self._d[key] = hit
+            while len(self._d) > self.size:
+                self._d.popitem(last=False)
+                self._evictions += 1
+        else:
+            self._hits += 1
+            self._d.move_to_end(key)
+        return hit
+
+    def stats(self) -> EngineCacheStats:
+        return EngineCacheStats(
+            hits=self._hits, misses=self._misses, evictions=self._evictions,
+            entries=len(self._d),
+            key_bytes=sum(_key_nbytes(k) for k in self._d))
+
+
+_ENGINE_CACHE = EngineCache(size=8)
+
+
+def engine_cache_stats() -> EngineCacheStats:
+    """Snapshot of the compiled-engine cache counters (public observability
+    hook; the scenario service surfaces this in per-request reports)."""
+    return _ENGINE_CACHE.stats()
 
 
 def _graph_cache_key(graph: GraphProcess) -> tuple:
@@ -342,16 +472,13 @@ def _cached_engine(sim: SimConfig, graph: GraphProcess, *, T: int,
            sim.b_mean, sim.sigma_n, sim.alpha0, sim.optimizer, sim.mix_impl,
            sim.trace, int(sim.shards), T, max(1, int(eval_every)),
            _graph_cache_key(graph), id(x), id(y), id(eval_fn))
-    hit = _ENGINE_CACHE.get(key)
-    if hit is None:
+
+    def build():
         eng, model_dim = make_engine(sim, graph, T=T, eval_every=eval_every,
                                      x=x, y=y, eval_fn=eval_fn)
-        hit = (jax.jit(eng), model_dim, (graph, x, y, eval_fn))
-        _ENGINE_CACHE[key] = hit
-        while len(_ENGINE_CACHE) > _ENGINE_CACHE_SIZE:
-            _ENGINE_CACHE.popitem(last=False)
-    else:
-        _ENGINE_CACHE.move_to_end(key)
+        return (jax.jit(eng), model_dim, (graph, x, y, eval_fn))
+
+    hit = _ENGINE_CACHE.get_or_build(key, build)
     return hit[0], hit[1]
 
 

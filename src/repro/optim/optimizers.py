@@ -70,8 +70,16 @@ def adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> Optimizer:
     return Optimizer(init, update)
 
 
+# canonical Event-4 update rules; SimConfig/ScenarioSpec validate against this
+OPT_NAMES: tuple[str, ...] = ("sgd", "momentum", "adam")
+
+_OPTS = {"sgd": sgd, "momentum": momentum, "adam": adam}
+
+
 def init_opt(name: str) -> Optimizer:
-    return {"sgd": sgd, "momentum": momentum, "adam": adam}[name]()
+    if name not in _OPTS:
+        raise ValueError(f"unknown optimizer {name!r}; allowed: {OPT_NAMES}")
+    return _OPTS[name]()
 
 
 def apply_updates(params, updates):

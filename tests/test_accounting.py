@@ -107,3 +107,50 @@ def test_two_layer_model_reports_two_layer_bytes():
     # summary traces drop the link matrices the report needs: fail loudly
     with pytest.raises(ValueError, match="summary"):
         report_from_result(dataclasses.replace(res, trace="summary"))
+
+
+def test_tx_summary_matches_full_report_and_survives_summary_trace():
+    """ISSUE 8 satellite: the service's per-request accounting
+    (``tx_summary_from_result``) is computed from the row-sum traces every
+    mode records, so it must (a) agree with ``savings_report`` where the
+    full link matrices exist and (b) keep working under trace='summary',
+    where ``report_from_result`` refuses."""
+    import dataclasses
+
+    from repro.core.accounting import tx_summary_from_result
+    from repro.core.topology import make_process
+    from repro.data.loader import FederatedBatches
+    from repro.data.partition import by_labels
+    from repro.data.synthetic import image_dataset
+    from repro.fl.simulator import SimConfig, run
+
+    x, y = image_dataset(400, seed=0, dim=32)
+    parts = by_labels(y, 6, 2)
+    graph = make_process(6, "rgg", time_varying="edge_dropout", drop=0.3,
+                         seed=0)
+    sim = SimConfig(m=6, iters=20, dim=32, policy="efhc", r=50.0)
+    res = run(sim, graph, FederatedBatches(x, y, parts, 8, seed=1), None,
+              eval_every=10)
+
+    full = report_from_result(res)
+    summ = tx_summary_from_result(res)
+    assert summ.n_bytes == full.n_bytes
+    assert summ.trigger_rate == pytest.approx(full.trigger_rate)
+    assert summ.tx_time == pytest.approx(float(res.tx_time.sum()))
+    # the row sums are exact marginals of the recorded link matrices (the
+    # engine's comm includes Event-1 memory links, so compare against the
+    # stored matrices, not savings_report's v-derived reconstruction)
+    assert summ.event_bytes == pytest.approx(
+        summ.n_bytes * res.comm.sum() / res.m)
+    assert summ.dense_bytes == pytest.approx(
+        summ.n_bytes * res.adj.sum() / res.m)
+    assert summ.link_utilization == pytest.approx(
+        res.comm.sum() / res.adj.sum())
+    assert summ.event_vs_dense > 0.0
+
+    # same numbers from a summary-trace result (no link matrices stored)
+    lean = dataclasses.replace(res, trace="summary", _comm=None, _adj=None)
+    summ2 = tx_summary_from_result(lean)
+    assert summ2.as_dict() == summ.as_dict()
+    with pytest.raises(ValueError, match="summary"):
+        report_from_result(lean)

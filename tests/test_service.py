@@ -1,0 +1,206 @@
+"""Scenario-serving subsystem (ISSUE 8): request validation, compatibility
+grouping, batched-vs-solo bit-identity, and cache observability.
+
+The parity tests ride the repo's standing pattern (tests/test_scan_parity):
+every channel of a batched cell must match its solo counterpart -- here
+BIT-identical, since the vmapped grid runs the same compiled arithmetic."""
+import dataclasses
+import itertools
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.fl import service as service_mod
+from repro.fl import simulator
+
+BASE = dict(m=8, dim=16, n_train=320, n_test=80, iters=8, eval_every=3,
+            batch=8)
+
+CHANNELS = ("loss", "acc", "tx_time", "util", "v", "comm_count", "deg",
+            "consensus_err", "bandwidths")
+
+
+def assert_bit_identical(got, want, label=""):
+    assert got.model_dim == want.model_dim
+    for f in CHANNELS:
+        assert np.array_equal(np.asarray(getattr(got, f)),
+                              np.asarray(getattr(want, f))), f"{label}: {f}"
+
+
+# ------------------------------------------------------------ validation --
+
+def test_spec_defaults_valid_and_frozen():
+    spec = api.ScenarioSpec()
+    assert spec.seeds == (0,)
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        spec.m = 4
+
+
+def test_spec_seed_list_normalized_to_tuple():
+    assert api.ScenarioSpec(seeds=[3, 1]).seeds == (3, 1)
+
+
+@pytest.mark.parametrize("field,bad,allowed", [
+    ("topology", "smallworld", str(service_mod.TOPOLOGIES)),
+    ("time_varying", "churn", str(service_mod.TIME_VARYING)),
+    ("partition", "iid", str(service_mod.PARTITIONS)),
+    # SimConfig-level fields must reject through the spec too
+    ("policy", "efch", "efhc"),
+    ("model", "resnet", "svm"),
+    ("mix_impl", "sparse_ell", "sparse"),
+    ("trace", "fulll", "summary"),
+    ("optimizer", "adamw", "sgd"),
+])
+def test_spec_rejects_unknown_values_naming_allowed(field, bad, allowed):
+    with pytest.raises(ValueError) as ei:
+        api.ScenarioSpec(**{field: bad})
+    assert bad in str(ei.value) and allowed in str(ei.value)
+
+
+@pytest.mark.parametrize("kw", [
+    dict(seeds=()), dict(eval_every=0), dict(n_train=0), dict(n_test=0),
+    dict(m=0), dict(iters=0), dict(shards=2, mix_impl="dense"),
+    dict(mix_impl="sharded", shards=2, trace="full"),
+])
+def test_spec_rejects_illegal_combos(kw):
+    with pytest.raises(ValueError):
+        api.ScenarioSpec(**kw)
+
+
+def test_service_rejects_non_spec_and_bad_max_cells():
+    with pytest.raises(TypeError, match="ScenarioSpec"):
+        api.ScenarioService().submit({"m": 8})
+    with pytest.raises(ValueError, match="max_cells"):
+        api.ScenarioService(max_cells=0)
+
+
+def test_provider_rejects_token_models():
+    with pytest.raises(ValueError, match="provider"):
+        api.simulate(api.ScenarioSpec(model="tiny_transformer", dim=16,
+                                      n_classes=32))
+
+
+# ----------------------------------------------------- signature/grouping --
+
+def test_signature_ignores_exactly_the_cell_fields():
+    """Property-style sweep: toggling any cell-varying field keeps the
+    signature; toggling any compile-shaping field changes it."""
+    base = api.ScenarioSpec(**BASE)
+    cell_variants = dict(policy="gossip", seeds=(4, 5), sample_seed=9)
+    for f, v in cell_variants.items():
+        other = dataclasses.replace(base, **{f: v})
+        assert other.signature() == base.signature(), f
+    shaping_variants = dict(
+        m=10, topology="ring", time_varying="static", drop=0.1, cycle_len=3,
+        graph_seed=1, model="mlp", dim=20, n_classes=5, n_train=300,
+        n_test=100, data_seed=1, partition="dirichlet", labels_per_device=2,
+        dirichlet_alpha=0.5, smooth=1, r=10.0, b_mean=1000.0, sigma_n=0.5,
+        alpha0=0.2, optimizer="adam", batch=4, iters=6, mix_impl="sparse",
+        trace="packed", eval_every=2)
+    for f, v in shaping_variants.items():
+        other = dataclasses.replace(base, **{f: v})
+        assert other.signature() != base.signature(), f
+    # shards can only legally vary under the sharded engine
+    sharded = dataclasses.replace(base, mix_impl="sharded", trace="summary")
+    assert (dataclasses.replace(sharded, shards=2).signature()
+            != sharded.signature())
+    # the sweep above must cover every declared field
+    covered = set(cell_variants) | set(shaping_variants) | {"shards"}
+    assert covered == {f.name for f in dataclasses.fields(base)}
+
+
+def test_incompatible_specs_never_co_batch():
+    """Requests only share a launch when their signatures match, for every
+    pairing in a small property grid."""
+    grid = [api.ScenarioSpec(**BASE, policy=p, r=r, seeds=(s,))
+            for p, r, s in itertools.product(("efhc", "gossip"),
+                                             (50.0, 10.0), (0, 1))]
+    svc = api.ScenarioService(max_cells=16)
+    reports = svc.serve(grid)
+    by_launch = {}
+    for rep in reports:
+        by_launch.setdefault(rep.launch_id, []).append(rep.spec)
+    assert len(by_launch) == 2  # exactly one launch per distinct r
+    for specs in by_launch.values():
+        sigs = {s.signature() for s in specs}
+        assert len(sigs) == 1, "co-batched requests must share a signature"
+        assert len(specs) == 4  # all 4 compatible requests rode together
+
+
+# ------------------------------------------------------------ bit-parity --
+
+@pytest.fixture(scope="module")
+def served():
+    """A mixed 3-request / 2-signature batch served with forced bucketing
+    (max_cells=2 splits signature A's 3 cells over two launches)."""
+    specs = [api.ScenarioSpec(**BASE, policy="efhc", seeds=(0, 1)),
+             api.ScenarioSpec(**BASE, policy="gossip", seeds=(2,)),
+             api.ScenarioSpec(**BASE, policy="efhc", r=10.0, seeds=(0,))]
+    svc = api.ScenarioService(max_cells=2)
+    return specs, svc.serve(specs), svc
+
+
+def test_batched_results_bit_identical_to_solo(served):
+    specs, reports, _ = served
+    for spec, rep in zip(specs, reports):
+        for s in spec.seeds:
+            solo = api.simulate(spec, seed=s)
+            assert_bit_identical(rep.results[s], solo,
+                                 f"req {rep.request_id} seed {s}")
+
+
+def test_report_accounting_shape(served):
+    specs, reports, svc = served
+    assert [r.request_id for r in reports] == [0, 1, 2]
+    for rep in reports:
+        assert set(rep.results) == set(rep.spec.seeds)
+        assert set(rep.tx) == set(rep.spec.seeds)
+        assert rep.queue_wait_s >= 0 and rep.run_s > 0
+        for s, tx in rep.tx.items():
+            assert tx.tx_time == pytest.approx(
+                float(rep.results[s].tx_time.sum()))
+    stats = svc.stats()
+    assert stats.requests == 3 and stats.cells == 4
+    assert stats.launches == 3  # sig A split in two (max_cells=2) + sig B
+    # the split rounds ran at different bucket sizes (2 cells, then 1), so
+    # no program reuse yet -- round 2 below is what must hit
+    assert (stats.program_hits, stats.program_misses) == (0, 3)
+
+
+def test_round2_hits_engine_and_program_cache(served):
+    specs, _, svc = served
+    rep = svc.serve([dataclasses.replace(specs[0], policy="zero",
+                                         seeds=(9, 11))])[0]
+    assert rep.engine_cache_hit and rep.program_cache_hit
+    assert_bit_identical(
+        rep.results[9],
+        api.simulate(dataclasses.replace(specs[0], policy="zero"), seed=9),
+        "round-2 cell")
+
+
+# --------------------------------------------------------- cache counters --
+
+def test_engine_cache_stats_observable():
+    simulator._ENGINE_CACHE.clear(reset_stats=True)
+    spec = api.ScenarioSpec(**{**BASE, "dim": 12}, policy="efhc")
+    api.simulate(spec)
+    s1 = simulator.engine_cache_stats()
+    assert (s1.misses, s1.entries) == (1, 1) and s1.key_bytes > 0
+    api.simulate(spec, seed=5)  # same engine, traced seed
+    s2 = simulator.engine_cache_stats()
+    assert s2.hits == s1.hits + 1 and s2.misses == s1.misses
+    assert 0 < s2.hit_rate < 1
+    d = s2.as_dict()
+    assert d["entries"] == 1 and d["hits"] == s2.hits
+
+
+def test_sweep_entry_point_matches_service_cells():
+    spec = api.ScenarioSpec(**BASE, seeds=(0,))
+    grid = api.sweep(spec, policies=("efhc", "gossip"))
+    svc = api.ScenarioService(max_cells=4)
+    reports = svc.serve([dataclasses.replace(spec, policy=p)
+                         for p in ("efhc", "gossip")])
+    for rep, policy in zip(reports, ("efhc", "gossip")):
+        assert_bit_identical(rep.results[0], grid.result(0, policy),
+                             f"sweep vs service {policy}")

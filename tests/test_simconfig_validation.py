@@ -1,0 +1,76 @@
+"""SimConfig fail-fast validation (ISSUE 8 satellite): every registry-valued
+field rejects unknown values AT CONSTRUCTION with the allowed values named,
+instead of failing deep in ``lax.switch`` / registry lookups; illegal
+combinations are rejected the same way."""
+import dataclasses
+
+import pytest
+
+from repro.core.efhc import MIX_IMPLS
+from repro.core.triggers import POLICIES
+from repro.fl.modelspec import MODEL_NAMES
+from repro.fl.simulator import SIM_MIX_IMPLS, SimConfig
+from repro.fl.trace import TRACE_MODES
+from repro.optim.optimizers import OPT_NAMES
+
+
+def test_default_config_is_valid():
+    SimConfig()
+
+
+def test_all_registry_values_construct():
+    for policy in POLICIES:
+        SimConfig(policy=policy)
+    for model in MODEL_NAMES:
+        SimConfig(model=model)
+    for opt in OPT_NAMES:
+        SimConfig(optimizer=opt)
+    for impl in MIX_IMPLS:
+        SimConfig(mix_impl=impl)
+    for trace in TRACE_MODES:
+        SimConfig(trace=trace)
+    SimConfig(mix_impl="sharded", shards=4, trace="summary")
+
+
+@pytest.mark.parametrize("field,bad,expect", [
+    ("policy", "efch", str(POLICIES)),
+    ("model", "resnet", str(MODEL_NAMES)),
+    ("optimizer", "adamw", str(OPT_NAMES)),
+    ("mix_impl", "sparse_ell", str(SIM_MIX_IMPLS)),
+    ("trace", "fulll", str(TRACE_MODES)),
+])
+def test_unknown_registry_value_rejected_naming_allowed(field, bad, expect):
+    with pytest.raises(ValueError) as ei:
+        SimConfig(**{field: bad})
+    msg = str(ei.value)
+    assert bad in msg, "error must echo the offending value"
+    assert expect in msg, "error must name the allowed values"
+
+
+@pytest.mark.parametrize("field,bad", [
+    ("m", 0), ("m", -3), ("iters", 0), ("batch", 0), ("shards", 0),
+])
+def test_nonpositive_sizes_rejected(field, bad):
+    with pytest.raises(ValueError, match=field):
+        SimConfig(**{field: bad})
+
+
+def test_shards_without_sharded_engine_rejected():
+    with pytest.raises(ValueError, match="sharded"):
+        SimConfig(mix_impl="dense", shards=4)
+    with pytest.raises(ValueError, match="sharded"):
+        SimConfig(mix_impl="sparse", shards=2, trace="summary")
+
+
+def test_sharded_with_link_trace_rejected():
+    for trace in ("full", "packed"):
+        with pytest.raises(ValueError, match="summary"):
+            SimConfig(mix_impl="sharded", shards=2, trace=trace)
+
+
+def test_dataclasses_replace_revalidates():
+    sim = SimConfig(trace="summary")
+    with pytest.raises(ValueError, match="sharded"):
+        dataclasses.replace(sim, shards=8)
+    ok = dataclasses.replace(sim, shards=8, mix_impl="sharded")
+    assert ok.shards == 8
