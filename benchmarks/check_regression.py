@@ -2,10 +2,11 @@
 
 Compares a freshly measured fleet-scale benchmark against the pinned
 reference checked into the repo, matching entries on
-``(m, trace, mix_impl, shards, model)`` (``shards`` defaults to 1 for
-every entry that predates the sharded fleet engine and ``model`` to
-``"svm"`` for entries that predate the ModelSpec registry, so old files
-stay comparable):
+``(m, trace, mix_impl, shards, model, churn)`` (``shards`` defaults to 1
+for every entry that predates the sharded fleet engine, ``model`` to
+``"svm"`` for entries that predate the ModelSpec registry, and ``churn``
+to 0.0 for entries that predate resource dynamics, so old files stay
+comparable):
 
 * fresh entries **slower than the reference by more than the threshold**
   (default 35%, i.e. ``new < 0.65 * ref`` iters/s) are regressions and the
@@ -41,10 +42,12 @@ import sys
 
 def entry_key(e: dict) -> tuple:
     # older benchmark files predate the mix_impl column (they measured
-    # dense), the shards column (they ran single-device), and the model
-    # column (they simulated the dim-32 svm)
+    # dense), the shards column (they ran single-device), the model column
+    # (they simulated the dim-32 svm), and the churn column (they ran the
+    # static-resource engine, i.e. churn 0.0)
     return (int(e["m"]), str(e["trace"]), str(e.get("mix_impl", "dense")),
-            int(e.get("shards", 1)), str(e.get("model", "svm")))
+            int(e.get("shards", 1)), str(e.get("model", "svm")),
+            float(e.get("churn", 0.0)))
 
 
 def compare(ref_doc: dict, new_doc: dict, threshold: float = 0.35) -> tuple[list[dict], list[dict]]:
@@ -63,14 +66,14 @@ def compare(ref_doc: dict, new_doc: dict, threshold: float = 0.35) -> tuple[list
             # simulation): informational, never gated -- staging walls are
             # sub-second and would flake any relative threshold
             rows.append({"m": key[0], "trace": key[1], "mix_impl": key[2],
-                         "shards": key[3], "model": key[4],
+                         "shards": key[3], "model": key[4], "churn": key[5],
                          "new_ips": None, "ref_ips": None, "slowdown": None,
                          "staging_sec": e.get("staging_sec"),
                          "status": "staging"})
             continue
         new_ips = float(e["iters_per_sec"])
         row = {"m": key[0], "trace": key[1], "mix_impl": key[2],
-               "shards": key[3], "model": key[4],
+               "shards": key[3], "model": key[4], "churn": key[5],
                "new_ips": new_ips, "ref_ips": None, "slowdown": None,
                "status": "new"}
         match = ref.get(key)
@@ -89,8 +92,8 @@ def markdown_table(rows: list[dict], threshold: float) -> str:
     lines = [
         f"### Fleet-scale benchmark delta (fail above {threshold:.0%} slowdown)",
         "",
-        "| m | trace | mix_impl | shards | model | ref iters/s | new iters/s | delta | status |",
-        "|---:|---|---|---:|---|---:|---:|---:|---|",
+        "| m | trace | mix_impl | shards | model | churn | ref iters/s | new iters/s | delta | status |",
+        "|---:|---|---|---:|---|---:|---:|---:|---:|---|",
     ]
     for r in rows:
         ref = "—" if r["ref_ips"] is None else f"{r['ref_ips']:.2f}"
@@ -104,6 +107,7 @@ def markdown_table(rows: list[dict], threshold: float) -> str:
             new = f"{r['new_ips']:.2f}"
         lines.append(f"| {r['m']} | {r['trace']} | {r['mix_impl']} "
                      f"| {r.get('shards', 1)} | {r.get('model', 'svm')} "
+                     f"| {r.get('churn', 0.0):g} "
                      f"| {ref} | {new} | {delta} | {mark} |")
     return "\n".join(lines) + "\n"
 
@@ -142,14 +146,15 @@ def main(argv: list[str] | None = None) -> int:
         # a gate that compares nothing is a disabled gate: fail loudly so a
         # grid typo / key rename cannot silently turn CI green
         print("ERROR: no fresh entry matched the pinned reference grid "
-              "(m, trace, mix_impl, shards, model) -- the gate compared "
-              "nothing", file=sys.stderr)
+              "(m, trace, mix_impl, shards, model, churn) -- the gate "
+              "compared nothing", file=sys.stderr)
         return 1
     if regressions:
         for r in regressions:
             print(f"REGRESSION m={r['m']} trace={r['trace']} "
                   f"mix_impl={r['mix_impl']} shards={r.get('shards', 1)} "
-                  f"model={r.get('model', 'svm')}: "
+                  f"model={r.get('model', 'svm')} "
+                  f"churn={r.get('churn', 0.0):g}: "
                   f"{r['ref_ips']:.2f} -> "
                   f"{r['new_ips']:.2f} iters/s "
                   f"({r['slowdown']:.1%} slower)", file=sys.stderr)

@@ -140,10 +140,16 @@ def bench_staging(m: int, *, repeats: int = 3) -> dict:
 
 
 def bench_fleet(m: int, trace: str, mix_impl: str = "dense", shards: int = 1,
-                *, iters: int, dim: int, repeats: int = 3) -> dict:
+                *, iters: int, dim: int, repeats: int = 3,
+                churn: float = 0.0) -> dict:
     if trace == "staging":
         return bench_staging(m, repeats=repeats)
     sim, graph, batches, x, y = _setup(m, iters, dim)
+    if churn:
+        # resource dynamics add a per-iteration state walk (churn draws,
+        # liveness masks) to the scan body; benching with --churn > 0 prices
+        # that overhead as its own gated grid point
+        sim = dataclasses.replace(sim, churn_rate=churn)
     idx = jnp.asarray(batches.stage(iters))
 
     if mix_impl == "sharded":
@@ -173,7 +179,7 @@ def bench_fleet(m: int, trace: str, mix_impl: str = "dense", shards: int = 1,
 
     entry = {
         "m": m, "trace": trace, "mix_impl": mix_impl, "shards": shards,
-        "model": sim.model, "iters": iters,
+        "model": sim.model, "churn": churn, "iters": iters,
         "model_dim": model_dim, "d_max": graph.neighbors().d_max,
         "sec_per_iter": wall / iters, "iters_per_sec": iters / wall,
         "traj_bytes": traj,
@@ -234,6 +240,10 @@ def main() -> None:
     ap.add_argument("--repeats", type=int, default=3,
                     help="timed repeats per entry; best-of is reported")
     ap.add_argument("--dim", type=int, default=32)
+    ap.add_argument("--churn", type=float, default=0.0,
+                    help="per-iteration device down-probability applied to "
+                         "every simulated entry (0 keeps the static-resource "
+                         "engine; > 0 prices the resource-dynamics walk)")
     ap.add_argument("--sizes", type=str, default=None,
                     help="comma list m:trace[:mix_impl], e.g. "
                          "16:full,1024:summary:sparse")
@@ -250,7 +260,8 @@ def main() -> None:
     entries = []
     for m, trace, mix_impl, shards in grid:
         e = bench_fleet(m, trace, mix_impl, shards, iters=args.iters,
-                        dim=args.dim, repeats=args.repeats)
+                        dim=args.dim, repeats=args.repeats,
+                        churn=args.churn)
         entries.append(e)
         if trace == "staging":
             print(f"m={m:6d} trace={trace:8s} impl={mix_impl:8s} "

@@ -83,11 +83,19 @@ def savings_report(
     tx_event = float((frac_used * (n_bytes / bandwidths[None, :])).mean(axis=1).sum())
     tx_dense = float(((adj_trace.sum(axis=2) > 0) * (n_bytes / bandwidths[None, :])).mean(axis=1).sum())
 
+    # every-K baseline: the collective fires at steps 0, K, 2K, ... and each
+    # firing moves the *actual* graph at that step.  Summing the realized
+    # dense bytes over the fired steps is exact for time-varying G^(k);
+    # the old ``total / K`` shortcut only matches when the per-step dense
+    # volume is constant (static fabrics with T divisible by K).
+    every_k = max(1, int(every_k))
+    every_k_bytes = float(dense_per_step[::every_k].sum())
+
     return SavingsReport(
         steps=t, m=m, n_bytes=n_bytes,
         dense_bytes=float(dense_per_step.sum()),
         event_bytes=float(event_per_step.sum()),
-        every_k_bytes=float(dense_per_step.sum()) / every_k,
+        every_k_bytes=every_k_bytes,
         every_k=every_k,
         trigger_rate=float(v_trace.mean()),
         link_utilization=float(used_links.sum() / max(phys_links.sum(), 1.0)),
@@ -124,6 +132,10 @@ class TxSummary:
     trigger_rate: float
     link_utilization: float  # used links / physical links
     tx_time: float  # paper Sec. IV metric, cumulative (engine-computed)
+    # resource-dynamics exposure (0 when the run had none): total
+    # device-steps spent down via churn / out of broadcast budget
+    down_device_steps: int = 0
+    exhausted_device_steps: int = 0
 
     @property
     def event_vs_dense(self) -> float:
@@ -136,7 +148,9 @@ class TxSummary:
                 "event_vs_dense": self.event_vs_dense,
                 "trigger_rate": self.trigger_rate,
                 "link_utilization": self.link_utilization,
-                "tx_time": self.tx_time}
+                "tx_time": self.tx_time,
+                "down_device_steps": self.down_device_steps,
+                "exhausted_device_steps": self.exhausted_device_steps}
 
 
 def tx_summary_from_result(res, *, elem_bytes: int = 4) -> TxSummary:
@@ -148,6 +162,8 @@ def tx_summary_from_result(res, *, elem_bytes: int = 4) -> TxSummary:
     t, m = res.v.shape
     comm_total = float(res.comm_count.sum())
     deg_total = float(res.deg.sum())
+    down = getattr(res, "down_count", None)
+    exhausted = getattr(res, "exhausted_count", None)
     return TxSummary(
         steps=t, m=m, n_bytes=n_bytes,
         event_bytes=n_bytes * comm_total / m,
@@ -155,6 +171,9 @@ def tx_summary_from_result(res, *, elem_bytes: int = 4) -> TxSummary:
         trigger_rate=float(res.v.mean()),
         link_utilization=comm_total / max(deg_total, 1.0),
         tx_time=float(res.tx_time.sum()),
+        down_device_steps=int(down.sum()) if down is not None else 0,
+        exhausted_device_steps=(int(exhausted.sum())
+                                if exhausted is not None else 0),
     )
 
 

@@ -24,7 +24,8 @@ from typing import Any, Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import consensus, mixing, topology, triggers
+from repro.core import accounting, consensus, mixing, topology, triggers
+from repro.core import resources as resources_mod
 from repro.core.topology import GraphProcess
 from repro.kernels.mixing import ops as mixing_ops
 from repro.kernels.trigger import ops as trigger_ops
@@ -40,6 +41,9 @@ class EFHCState(NamedTuple):
     bandwidths: jax.Array  # (m,)
     key: jax.Array
     opt_state: Any = None
+    # resource-dynamics carry (live bandwidth / budgets / liveness), None
+    # unless cfg.resources is enabled (DESIGN.md "Resource dynamics")
+    resources: Any = None
 
 
 MIX_IMPLS: tuple[str, ...] = ("dense", "delta", "pallas",
@@ -64,6 +68,14 @@ class EFHCConfig:
     mix_impl: str = "dense"  # see MIX_IMPLS
     # Pallas interpret mode: None = auto (interpret off only on TPU)
     interpret: bool | None = None
+    # resource dynamics (churn/stragglers/budgets/bandwidth walk); None or a
+    # disabled config keeps the step structurally identical to the
+    # pre-resource program -- the gate is a Python-level branch, so golden
+    # trajectories stay bit-exact (DESIGN.md "Resource dynamics")
+    resources: resources_mod.ResourceConfig | None = None
+
+    def resources_enabled(self) -> bool:
+        return self.resources is not None and self.resources.enabled
 
     def pallas_interpret(self) -> bool:
         if self.interpret is not None:
@@ -71,7 +83,7 @@ class EFHCConfig:
         return jax.default_backend() != "tpu"
 
 
-def init_state(w_stack, bandwidths: jax.Array, adjacency0: jax.Array, key: jax.Array, opt_state=None) -> EFHCState:
+def init_state(w_stack, bandwidths: jax.Array, adjacency0: jax.Array, key: jax.Array, opt_state=None, resources=None) -> EFHCState:
     return EFHCState(
         w=w_stack,
         w_hat=jax.tree.map(jnp.copy, w_stack),
@@ -80,6 +92,7 @@ def init_state(w_stack, bandwidths: jax.Array, adjacency0: jax.Array, key: jax.A
         bandwidths=bandwidths,
         key=key,
         opt_state=opt_state,
+        resources=resources,
     )
 
 
@@ -131,6 +144,24 @@ class StepAux(NamedTuple):
     # that XLA dead-code-eliminates when nothing reads them)
     comm_count: jax.Array  # (m,) int32: links used per device
     deg: jax.Array  # (m,) int32: physical degree per device
+    # resource-dynamics counters (zeros when disabled): devices down via
+    # churn / out of broadcast budget this iteration
+    down_count: jax.Array  # scalar int32
+    exhausted_count: jax.Array  # scalar int32
+
+
+def _mask_update_rows(upd: jax.Array, m: int, new_tree, old_tree):
+    """Event-4 straggler/churn mask: rows of ``new_tree`` where ``upd`` is
+    False are replaced by ``old_tree``'s.  Leaves without a leading device
+    axis (e.g. Adam's step count) pass through -- they are fleet-global."""
+
+    def keep(new_leaf, old_leaf):
+        if new_leaf.ndim >= 1 and new_leaf.shape[0] == m:
+            mask = upd.reshape((m,) + (1,) * (new_leaf.ndim - 1))
+            return jnp.where(mask, new_leaf, old_leaf)
+        return new_leaf
+
+    return jax.tree.map(keep, new_tree, old_tree)
 
 
 def step(
@@ -178,6 +209,25 @@ def step(
     m = state.bandwidths.shape[0]
     key, k_trig, k_grad = jax.random.split(state.key, 3)
 
+    # resource dynamics: Python-level gate -- the disabled path is the
+    # pre-resource program verbatim (no extra RNG splits, no masking ops)
+    rcfg = cfg.resources
+    dyn = rcfg is not None and rcfg.enabled
+    if dyn:
+        res = state.resources
+        r_key, k_evolve = jax.random.split(res.key)
+        up, straggle, bw_live = resources_mod.evolve(
+            rcfg, k_evolve, res.up, res.bw, state.bandwidths, m)
+        exhausted = resources_mod.exhausted_mask(rcfg, res.budget)
+        # exhausted devices see a collapsed threshold bandwidth: rho = 1/b
+        # explodes and the personalized trigger goes quiet on its own
+        bw_thresh = jnp.where(
+            exhausted, resources_mod.EXHAUSTED_BW_FRAC * state.bandwidths,
+            bw_live)
+    else:
+        bw_thresh = state.bandwidths
+        bw_live = state.bandwidths
+
     if sparse:
         if nl is None:
             # setup-time numpy, traced in as constants; built straight from
@@ -185,11 +235,20 @@ def step(
             nl = graph.neighbors()
         nbr_idx = jnp.asarray(nl.idx)
         adj_ell = graph.adjacency_ell(state.k, nl)
+        if dyn:
+            # churn masks Events 1-3: a down endpoint removes the edge from
+            # the effective G^(k); reconnection later fires Event 1 through
+            # the ordinary prev-adjacency delta
+            adj_ell = jnp.logical_and(
+                adj_ell, jnp.logical_and(up[:, None], up[nbr_idx]))
         # dense view for StepAux consumers only; dead code whenever the ys
         # stick to the ELL-derived row sums (trace="summary")
         adj = topology.scatter_ell(nbr_idx, adj_ell)
     else:
         adj = graph.adjacency(state.k)
+        if dyn:
+            adj = jnp.logical_and(
+                adj, jnp.logical_and(up[:, None], up[None, :]))
 
     # ---- Event 2: broadcast triggers -------------------------------------
     w_flat = _flatten_stack(state.w)
@@ -206,9 +265,14 @@ def step(
         dev = triggers.rms_deviation(w_flat, w_hat_flat)
     v = triggers.broadcast_events(
         cfg.trigger, dev=dev,
-        bandwidths=state.bandwidths, gamma_k=gamma_k, key=k_trig,
+        bandwidths=bw_thresh, gamma_k=gamma_k, key=k_trig,
         policy_idx=policy_idx,
     )
+    if dyn:
+        # hard mask: down and budget-exhausted devices fire nothing -- this
+        # also stops the threshold-blind policies (ZT/gossip) from spending
+        # past their budget
+        v = jnp.logical_and(v, jnp.logical_and(up, ~exhausted))
 
     # ---- Event 1: neighbor connection ------------------------------------
     # Links that newly appeared vs k-1 exchange parameters unconditionally.
@@ -263,31 +327,54 @@ def step(
         opt_state_new = state.opt_state
     else:
         w_new, opt_state_new = opt_update(grads, state.opt_state, w_mixed, alpha_k)
+    if dyn:
+        # stragglers delay Event 4 (carry the mixed model); down devices do
+        # not compute at all -- both keep their pre-update rows + opt state
+        upd = jnp.logical_and(up, ~straggle)
+        w_new = _mask_update_rows(upd, m, w_new, w_mixed)
+        opt_state_new = _mask_update_rows(upd, m, opt_state_new,
+                                          state.opt_state)
 
     # ---- paper metrics (Sec. IV-A) ----------------------------------------
     deg = deg_i.astype(jnp.float32)
     used = used_i.astype(jnp.float32)
     frac = jnp.where(deg > 0, used / jnp.maximum(deg, 1.0), 0.0)
-    tx_time = jnp.mean(frac * model_dim / state.bandwidths)
+    tx_time = jnp.mean(frac * model_dim / bw_live)
     # resource utilization (Sec. IV-A): fraction of the network's aggregate
     # one-hop link capacity consumed this iteration -- bits pushed over the
     # activated links vs. the capacity of every physical link.  A ratio of
     # sums, NOT the mean of per-device ratios (that would collapse back into
     # tx_time): heterogeneous bandwidths weight the two differently.
-    capacity = jnp.sum(deg * state.bandwidths)
+    capacity = jnp.sum(deg * bw_live)
     util = jnp.sum(used * model_dim) / jnp.maximum(capacity, 1e-12)
 
     # consensus error on the post-update stack (the paper's ||W - 1 w_bar||_F^2)
     w_new_flat = _flatten_stack(w_new)
     consensus_err = jnp.sum((w_new_flat - w_new_flat.mean(0)) ** 2)
 
+    if dyn:
+        # budget debit: each realized broadcast ships one model payload
+        n_bytes = float(accounting.model_bytes(model_dim))
+        res_new = resources_mod.ResourceState(
+            bw=bw_live, budget=res.budget - n_bytes * v.astype(jnp.float32),
+            up=up, key=r_key)
+        down_count = jnp.sum(~up).astype(jnp.int32)
+        exhausted_count = jnp.sum(exhausted).astype(jnp.int32)
+    else:
+        res_new = state.resources
+        down_count = jnp.zeros((), jnp.int32)
+        exhausted_count = jnp.zeros((), jnp.int32)
+
     new_state = EFHCState(
         w=w_new, w_hat=w_hat_new, k=state.k + 1, prev_adj=prev_adj_next,
         bandwidths=state.bandwidths, key=key, opt_state=opt_state_new,
+        resources=res_new,
     )
     return new_state, StepAux(v=v, comm=comm, p=p, loss=loss, tx_time=tx_time,
                               util=util, adj=adj, consensus_err=consensus_err,
-                              comm_count=used_i, deg=deg_i)
+                              comm_count=used_i, deg=deg_i,
+                              down_count=down_count,
+                              exhausted_count=exhausted_count)
 
 
 # ---------------------------------------------------------------------------
@@ -322,6 +409,9 @@ class ShardAux(NamedTuple):
     consensus_err: jax.Array  # scalar, replicated (hierarchical fp32 sum)
     comm_count: jax.Array  # (ms,) int32
     deg: jax.Array  # (ms,) int32
+    # fleet-global resource counters (psum'd, replicated; zeros if disabled)
+    down_count: jax.Array  # scalar int32
+    exhausted_count: jax.Array  # scalar int32
 
 
 def halo_exchange(ctx: ShardCtx, axis_name: str, x: jax.Array) -> jax.Array:
@@ -373,8 +463,34 @@ def step_sharded(
     order, and tested with tolerance, never bit-compared."""
     ms = state.bandwidths.shape[0]
     key, k_trig, k_grad = jax.random.split(state.key, 3)
+    ex = lambda x: halo_exchange(ctx, axis_name, x)
+
+    # resource dynamics: the same Python-level gate as ``step``; draws are
+    # positional (m,) sliced by ``ctx.owned`` so every shard count realizes
+    # the identical per-device stream (DESIGN.md "Resource dynamics")
+    rcfg = cfg.resources
+    dyn = rcfg is not None and rcfg.enabled
+    if dyn:
+        res = state.resources
+        r_key, k_evolve = jax.random.split(res.key)
+        up, straggle, bw_live = resources_mod.evolve(
+            rcfg, k_evolve, res.up, res.bw, state.bandwidths, m,
+            rows=ctx.owned)
+        exhausted = resources_mod.exhausted_mask(rcfg, res.budget)
+        bw_thresh = jnp.where(
+            exhausted, resources_mod.EXHAUSTED_BW_FRAC * state.bandwidths,
+            bw_live)
+    else:
+        bw_thresh = state.bandwidths
+        bw_live = state.bandwidths
 
     adj_ell = graph.adjacency_ell_rows(state.k, ctx.nbr_gid, ctx.mask, ctx.owned)
+    if dyn:
+        # churn masks Events 1-3; neighbor liveness arrives over the halo
+        # (pad slots carry junk up-bits, but adj_ell is already False there)
+        up_buf = jnp.concatenate([up, ex(up)])
+        adj_ell = jnp.logical_and(
+            adj_ell, jnp.logical_and(up[:, None], up_buf[ctx.nbr_loc]))
     deg_i = adj_ell.sum(axis=1, dtype=jnp.int32)
 
     # ---- Event 2: broadcast triggers (local rows) ------------------------
@@ -385,15 +501,18 @@ def step_sharded(
     branches = triggers.policy_branches_rows(cfg.trigger, m, ctx.owned)
     if policy_idx is None:
         v = branches[triggers.policy_index(cfg.trigger.policy)](
-            dev, state.bandwidths, gamma_k, k_trig)
+            dev, bw_thresh, gamma_k, k_trig)
     else:
         v = jax.lax.switch(policy_idx, branches,
-                           dev, state.bandwidths, gamma_k, k_trig)
+                           dev, bw_thresh, gamma_k, k_trig)
+    if dyn:
+        # hard mask before the halo ships v: down / exhausted devices fire
+        # nothing, and their neighbors must agree
+        v = jnp.logical_and(v, jnp.logical_and(up, ~exhausted))
 
     # ---- halo exchange: boundary rows of (w_flat, v, deg) ----------------
     # the halo ships the canonical (ms, D) flat rows -- one gathered array
     # regardless of how many leaves the model pytree has
-    ex = lambda x: halo_exchange(ctx, axis_name, x)
     w_halo_flat = ex(w_flat)
     v_buf = jnp.concatenate([v, ex(v)])
     deg_buf = jnp.concatenate([deg_i, ex(deg_i)])
@@ -427,6 +546,11 @@ def step_sharded(
     else:
         w_new, opt_state_new = opt_update(grads, state.opt_state, w_mixed,
                                           alpha_k)
+    if dyn:
+        upd = jnp.logical_and(up, ~straggle)
+        w_new = _mask_update_rows(upd, ms, w_new, w_mixed)
+        opt_state_new = _mask_update_rows(upd, ms, opt_state_new,
+                                          state.opt_state)
 
     # ---- paper metrics: reduce in single-device order --------------------
     def global_order(x_local):
@@ -437,8 +561,8 @@ def step_sharded(
     deg = deg_i.astype(jnp.float32)
     used = used_i.astype(jnp.float32)
     frac = jnp.where(deg > 0, used / jnp.maximum(deg, 1.0), 0.0)
-    tx_time = jnp.mean(global_order(frac * model_dim / state.bandwidths))
-    capacity = jnp.sum(global_order(deg * state.bandwidths))
+    tx_time = jnp.mean(global_order(frac * model_dim / bw_live))
+    capacity = jnp.sum(global_order(deg * bw_live))
     util = (jnp.sum(global_order(used * model_dim))
             / jnp.maximum(capacity, 1e-12))
 
@@ -447,10 +571,26 @@ def step_sharded(
     consensus_err = jax.lax.psum(jnp.sum((w_new_flat - col_mean) ** 2),
                                  axis_name)
 
+    if dyn:
+        n_bytes = float(accounting.model_bytes(model_dim))
+        res_new = resources_mod.ResourceState(
+            bw=bw_live, budget=res.budget - n_bytes * v.astype(jnp.float32),
+            up=up, key=r_key)
+        down_count = jax.lax.psum(jnp.sum(~up).astype(jnp.int32), axis_name)
+        exhausted_count = jax.lax.psum(
+            jnp.sum(exhausted).astype(jnp.int32), axis_name)
+    else:
+        res_new = state.resources
+        down_count = jnp.zeros((), jnp.int32)
+        exhausted_count = jnp.zeros((), jnp.int32)
+
     new_state = EFHCState(
         w=w_new, w_hat=w_hat_new, k=state.k + 1, prev_adj=adj_ell,
         bandwidths=state.bandwidths, key=key, opt_state=opt_state_new,
+        resources=res_new,
     )
     return new_state, ShardAux(v=v, loss=loss, tx_time=tx_time, util=util,
                                consensus_err=consensus_err,
-                               comm_count=used_i, deg=deg_i)
+                               comm_count=used_i, deg=deg_i,
+                               down_count=down_count,
+                               exhausted_count=exhausted_count)

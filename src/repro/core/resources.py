@@ -1,0 +1,151 @@
+"""Resource dynamics: churn, stragglers, budgets, time-varying bandwidth.
+
+The paper's trigger is *personalized by resources* -- threshold
+r * rho_i * gamma^(k) with rho_i = 1 / b_i -- but a static b_i sampled once
+at k=0 only exercises half the story.  This module evolves per-device
+resource state **inside the scan** (DESIGN.md "Resource dynamics"):
+
+* time-varying bandwidth ``b_i^(k)``: a mean-reverting log-space random
+  walk around the sampled b_i, feeding Event-2 thresholds live so a device
+  whose link degrades raises its own bar;
+* depleting byte budgets: each realized broadcast debits
+  ``accounting.model_bytes(model_dim)`` from the device's budget; an
+  exhausted device has its threshold bandwidth clamped to a tiny positive
+  floor (rho_i = 1/b explodes => EF-HC goes quiet *naturally*) and is
+  hard-masked from firing (so ZT/gossip cannot spend past the budget);
+* device churn: a down device neither fires nor mixes -- its incident
+  edges are masked out of G^(k) for Events 1-3, and reconnection fires
+  Event 1 through the ordinary prev-adjacency delta;
+* stragglers: a straggling device skips its Event-4 local update for the
+  iteration (the mixed model is carried unchanged).
+
+RNG discipline: the resource stream is derived by ``fold_in`` from the
+engine's root key (``resource_key``) and carried in ``ResourceState.key``
+-- it never touches the ``k_bw``/``k_init``/``k_state`` splits or the
+per-step ``key/k_trig/k_grad`` stream, so a disabled config is
+bit-identical to a pre-resource run.  All per-step draws are *positional*
+(m,) arrays sliced by row subset (``rows``), the same trick
+``triggers.policy_branches_rows`` uses, so sharded fleets realize the
+identical stream at any shard count.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.triggers import BW_FLOOR_FRAC
+
+# bandwidth fraction an exhausted device's *threshold* sees: small enough
+# that rho = 1/b pushes the EF-HC threshold out of reach, while tx/util
+# metrics keep using the real live bandwidth (receiving is not metered)
+EXHAUSTED_BW_FRAC = 1e-6
+
+# fold_in salt separating the resource stream from every engine stream
+_STREAM_SALT = 0x7E50
+
+
+@dataclasses.dataclass(frozen=True)
+class ResourceConfig:
+    """Static knobs of the per-device resource process.
+
+    All-defaults means *disabled* (``enabled`` False): the engines take a
+    Python-level branch on that, so the disabled step is structurally the
+    pre-resource program -- bit-compat with the golden trajectories is by
+    construction, not by tolerance."""
+
+    churn_rate: float = 0.0  # P(up device goes down) per iteration
+    recover_rate: float = 0.5  # P(down device comes back up) per iteration
+    straggle_rate: float = 0.0  # P(device delays its Event-4 update)
+    bw_walk: float = 0.0  # log-space random-walk std per iteration
+    bw_revert: float = 0.1  # mean-reversion rate toward the sampled b_i
+    budget_bytes: float = 0.0  # per-device broadcast budget; 0 = unlimited
+    seed: int = 0  # resource-stream offset (folded into the key)
+
+    def __post_init__(self):
+        for name in ("churn_rate", "recover_rate", "straggle_rate"):
+            val = getattr(self, name)
+            if not 0.0 <= val <= 1.0:
+                raise ValueError(f"{name} must be in [0, 1]; got {name}={val}")
+        if not 0.0 <= self.bw_revert <= 1.0:
+            raise ValueError(
+                f"bw_revert must be in [0, 1]; got bw_revert={self.bw_revert}")
+        if self.bw_walk < 0.0:
+            raise ValueError(f"bw_walk must be >= 0; got bw_walk={self.bw_walk}")
+        if self.budget_bytes < 0.0:
+            raise ValueError(
+                f"budget_bytes must be >= 0 (0 disables the budget); got "
+                f"budget_bytes={self.budget_bytes}")
+
+    @property
+    def enabled(self) -> bool:
+        return (self.churn_rate > 0.0 or self.straggle_rate > 0.0
+                or self.bw_walk > 0.0 or self.budget_bytes > 0.0)
+
+
+class ResourceState(NamedTuple):
+    """Per-device resource state carried through the scan (local rows on a
+    shard; ``key`` is the fleet-global resource stream, replicated)."""
+
+    bw: jax.Array  # (m,) float32 live bandwidth b_i^(k)
+    budget: jax.Array  # (m,) float32 remaining broadcast bytes (inf = none)
+    up: jax.Array  # (m,) bool device liveness
+    key: jax.Array  # resource PRNG stream (global, replicated on shards)
+
+
+def resource_key(key: jax.Array, cfg: ResourceConfig) -> jax.Array:
+    """Derives the resource stream from the engine root key without
+    consuming any split the pre-resource engine performs."""
+    return jax.random.fold_in(jax.random.fold_in(key, _STREAM_SALT),
+                              int(cfg.seed) & 0x7FFFFFFF)
+
+
+def init_state(cfg: ResourceConfig, bw0: jax.Array, key: jax.Array) -> ResourceState:
+    m = bw0.shape[0]
+    budget0 = float(cfg.budget_bytes) if cfg.budget_bytes > 0 else jnp.inf
+    return ResourceState(
+        bw=jnp.asarray(bw0, jnp.float32),
+        budget=jnp.full((m,), budget0, jnp.float32),
+        up=jnp.ones((m,), bool),
+        key=key,
+    )
+
+
+def evolve(cfg: ResourceConfig, key: jax.Array, up: jax.Array, bw: jax.Array,
+           bw0: jax.Array, m: int, rows: jax.Array | None = None):
+    """One step of churn + straggle + bandwidth walk.
+
+    Draws are positional (m,) arrays sliced by ``rows`` (a shard's owned
+    global ids), so any row partition realizes the same per-device stream
+    -- the sharded engine's bit-compat contract.  ``bw0`` is the sampled
+    static bandwidth the walk reverts toward.  Returns
+    ``(up_new, straggle, bw_new)`` with the shapes of ``up``."""
+    k_churn, k_straggle, k_walk = jax.random.split(key, 3)
+    take = (lambda a: a) if rows is None else (lambda a: a[rows])
+    if cfg.churn_rate > 0.0:
+        u = take(jax.random.uniform(k_churn, (m,)))
+        up_new = jnp.where(up, u >= cfg.churn_rate, u < cfg.recover_rate)
+    else:
+        up_new = up
+    if cfg.straggle_rate > 0.0:
+        straggle = take(jax.random.uniform(k_straggle, (m,))) < cfg.straggle_rate
+    else:
+        straggle = jnp.zeros(up.shape, bool)
+    if cfg.bw_walk > 0.0:
+        eps = take(jax.random.normal(k_walk, (m,)))
+        log_ratio = jnp.log(jnp.maximum(bw, 1e-20) / bw0)
+        log_ratio = (1.0 - cfg.bw_revert) * log_ratio + cfg.bw_walk * eps
+        bw_new = jnp.maximum(bw0 * jnp.exp(log_ratio), BW_FLOOR_FRAC * bw0)
+    else:
+        bw_new = bw
+    return up_new, straggle, bw_new
+
+
+def exhausted_mask(cfg: ResourceConfig, budget: jax.Array) -> jax.Array:
+    """(m,) bool: True where the broadcast budget ran out (never True when
+    the budget is disabled -- the state carries +inf there)."""
+    if cfg.budget_bytes > 0.0:
+        return budget <= 0.0
+    return jnp.zeros(budget.shape, bool)

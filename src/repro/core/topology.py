@@ -410,6 +410,120 @@ def erdos_renyi_edges(m: int, p: float, seed: int) -> EdgeList:
     raise RuntimeError("could not build a connected ER graph")
 
 
+def _dedup_canonical(u: np.ndarray, v: np.ndarray, m: int) -> EdgeList:
+    """Endpoint arrays (possibly with duplicates / self loops from composed
+    construction rules) -> canonical EdgeList.  np.unique on the linear pair
+    id both dedups and yields the lexsorted (u, v) order."""
+    u = np.asarray(u, np.int64).ravel()
+    v = np.asarray(v, np.int64).ravel()
+    lo = np.minimum(u, v)
+    hi = np.maximum(u, v)
+    keep = lo != hi
+    lin = np.unique(lo[keep] * m + hi[keep])
+    return EdgeList(u=(lin // m).astype(np.int32),
+                    v=(lin % m).astype(np.int32), m=int(m))
+
+
+def scale_free_edges(m: int, m_attach: int = 2, seed: int = 0) -> EdgeList:
+    """Scale-free fabric via Barabási–Albert preferential attachment: start
+    from a clique on ``m_attach + 1`` seed nodes, then each new node attaches
+    to ``m_attach`` *distinct* existing nodes drawn degree-proportionally
+    (uniform sampling from the repeated-endpoints pool -- every edge
+    contributes both endpoints, so pool frequency == degree).  Hub-heavy
+    degree distributions are the complex-network regime of Valerio et al.
+    (arXiv:2312.04504).  Connected by construction (every node has a path to
+    the seed clique), O(E) staging."""
+    if m <= 1:
+        e = np.empty(0, np.int32)
+        return EdgeList(u=e, v=e.copy(), m=m)
+    rng = np.random.default_rng(seed)
+    m_attach = max(1, min(int(m_attach), m - 1))
+    m0 = m_attach + 1
+    if m <= m0:
+        return complete_edges(m)
+    seed_edges = complete_edges(m0)
+    n_new = (m - m0) * m_attach
+    pool = np.empty(2 * (seed_edges.n_edges + n_new), np.int64)
+    n_pool = 2 * seed_edges.n_edges
+    pool[0:n_pool:2] = seed_edges.u
+    pool[1:n_pool:2] = seed_edges.v
+    new_u = np.repeat(np.arange(m0, m, dtype=np.int64), m_attach)
+    new_v = np.empty(n_new, np.int64)
+    e = 0
+    for node in range(m0, m):
+        targets: set[int] = set()
+        while len(targets) < m_attach:  # resample until distinct
+            targets.add(int(pool[int(rng.integers(n_pool))]))
+        for t in sorted(targets):
+            new_v[e] = t
+            pool[n_pool] = node
+            pool[n_pool + 1] = t
+            n_pool += 2
+            e += 1
+    u = np.concatenate([seed_edges.u.astype(np.int64), new_u])
+    v = np.concatenate([seed_edges.v.astype(np.int64), new_v])
+    return _canonical_edges(u, v, m)
+
+
+def clustered_edges(m: int, n_clusters: int = 0,
+                    seed: int = 0) -> tuple[EdgeList, np.ndarray]:
+    """Location-clustered hierarchical D2D fabric: devices drawn uniformly on
+    the unit square are k-means clustered (a few vectorized Lloyd rounds);
+    inside each cluster every device links to the cluster head (the member
+    nearest the centroid) plus its nearest same-cluster neighbor (the D2D
+    short link); cluster heads form the backhaul -- a ring over heads plus a
+    nearest-other-head bridge each.  ``n_clusters <= 0`` picks ~sqrt(m)/2.
+    Connected by construction (member -> head star, heads ringed).  Returns
+    ``(edges, points)``; the positions feed the sharded engine's Morton
+    partitioner, exactly like the RGG builder."""
+    rng = np.random.default_rng(seed)
+    pts = rng.uniform(size=(m, 2))
+    if m <= 2:
+        return ring_edges(m), pts
+    k = int(n_clusters) if n_clusters > 0 else max(2, int(round(np.sqrt(m) / 2.0)))
+    k = min(k, m)
+    centers = pts[rng.choice(m, size=k, replace=False)].copy()
+    for _ in range(8):
+        d2 = ((pts[:, None, :] - centers[None, :, :]) ** 2).sum(-1)
+        labels = d2.argmin(axis=1)
+        for c in range(k):
+            sel = labels == c
+            if sel.any():
+                centers[c] = pts[sel].mean(axis=0)
+    d2 = ((pts[:, None, :] - centers[None, :, :]) ** 2).sum(-1)
+    labels = d2.argmin(axis=1)
+
+    us: list[np.ndarray] = []
+    vs: list[np.ndarray] = []
+    heads: list[int] = []
+    for c in range(k):
+        members = np.nonzero(labels == c)[0]
+        if members.size == 0:
+            continue
+        head = int(members[d2[members, c].argmin()])
+        heads.append(head)
+        others = members[members != head]
+        if others.size:
+            us.append(others)  # star to the cluster head
+            vs.append(np.full(others.size, head, np.int64))
+        if members.size >= 2:  # nearest same-cluster neighbor (D2D link)
+            local = ((pts[members][:, None, :]
+                      - pts[members][None, :, :]) ** 2).sum(-1)
+            np.fill_diagonal(local, np.inf)
+            us.append(members)
+            vs.append(members[local.argmin(axis=1)])
+    heads_arr = np.asarray(heads, np.int64)
+    if heads_arr.size >= 2:
+        us.append(heads_arr)  # backhaul ring over heads
+        vs.append(np.roll(heads_arr, -1))
+        hd = ((pts[heads_arr][:, None, :]
+               - pts[heads_arr][None, :, :]) ** 2).sum(-1)
+        np.fill_diagonal(hd, np.inf)
+        us.append(heads_arr)  # nearest-other-head bridges
+        vs.append(heads_arr[hd.argmin(axis=1)])
+    return _dedup_canonical(np.concatenate(us), np.concatenate(vs), m), pts
+
+
 # ---------------------------------------------------------------------------
 # Dense constructors: small-m views over the edge builders, except
 # rgg/ring/complete which keep their original standalone implementations as
@@ -757,6 +871,8 @@ def make_process(
     er_p: float = 0.4,
     drop: float = 0.3,
     cycle_len: int = 2,
+    m_attach: int = 2,
+    n_clusters: int = 0,
     seed: int = 0,
 ) -> GraphProcess:
     """Factory used by configs / the FL simulator.  Every builtin kind
@@ -771,6 +887,10 @@ def make_process(
         edges = ring_edges(m)
     elif topology == "complete":
         edges = complete_edges(m)
+    elif topology == "scale_free":
+        edges = scale_free_edges(m, m_attach=m_attach, seed=seed)
+    elif topology == "clustered":
+        edges, coords = clustered_edges(m, n_clusters=n_clusters, seed=seed)
     else:
         raise ValueError(f"unknown topology: {topology}")
     return GraphProcess(edges=edges, kind=time_varying, drop=drop,

@@ -167,7 +167,34 @@ def communication_matrix(v: jax.Array, adjacency: jax.Array) -> jax.Array:
     return jnp.logical_and(vv, adjacency)
 
 
+# smallest bandwidth any sampler may emit, as a fraction of b_mean: rho_i =
+# 1/b_i thresholds and the tx-time divisions must never see a ~0 bandwidth
+BW_FLOOR_FRAC = 1e-3
+
+
+def check_sigma_n(sigma_n: float) -> float:
+    """Validates the bandwidth-heterogeneity fraction sigma_N.
+
+    The paper's draw is U((1-sigma_N) b_M, (1+sigma_N) b_M): at sigma_n = 1
+    the lower edge collapses to 0, so rho_i = 1/b_i thresholds explode
+    (devices never fire) and tx-time accounting divides by ~0.  Fail fast
+    at construction instead."""
+    if not 0.0 <= sigma_n < 1.0:
+        raise ValueError(
+            f"sigma_n must be in [0, 1) -- sigma_n=1 collapses the lower "
+            f"bandwidth bound to 0, exploding 1/b_i thresholds; got "
+            f"sigma_n={sigma_n}")
+    return sigma_n
+
+
 def sample_bandwidths(key: jax.Array, m: int, b_mean: float = 5000.0, sigma_n: float = 0.9) -> jax.Array:
-    """b_i ~ U((1-sigma_N) b_M, (1+sigma_N) b_M)  (paper Sec. IV-A)."""
-    lo, hi = (1.0 - sigma_n) * b_mean, (1.0 + sigma_n) * b_mean
+    """b_i ~ U((1-sigma_N) b_M, (1+sigma_N) b_M)  (paper Sec. IV-A).
+
+    The lower bound is clamped to ``BW_FLOOR_FRAC * b_mean`` so that even
+    sigma_n -> 1 (heterogeneity pushed to the validator's edge) cannot
+    yield near-zero b_i; at the paper's sigma_n = 0.9 the clamp is inert
+    (lo = 0.1 b_M >> floor), keeping historical draws bit-identical."""
+    check_sigma_n(sigma_n)
+    lo = max((1.0 - sigma_n) * b_mean, BW_FLOOR_FRAC * b_mean)
+    hi = (1.0 + sigma_n) * b_mean
     return jax.random.uniform(key, (m,), minval=lo, maxval=hi)

@@ -52,7 +52,8 @@ from repro.data.synthetic import image_dataset
 from repro.fl import simulator, sweep as sweep_mod
 from repro.fl.simulator import EvalFn, SimConfig, SimResult, make_eval_fn
 
-TOPOLOGIES: tuple[str, ...] = ("rgg", "er", "ring", "complete")
+TOPOLOGIES: tuple[str, ...] = ("rgg", "er", "ring", "complete",
+                               "scale_free", "clustered")
 TIME_VARYING: tuple[str, ...] = ("static", "edge_dropout", "partition_cycle")
 PARTITIONS: tuple[str, ...] = ("by_labels", "dirichlet")
 
@@ -98,6 +99,12 @@ class ScenarioSpec:
     alpha0: float = 0.1
     optimizer: str = "sgd"
     batch: int = 16
+    # --- resource dynamics (compile-shaping; zero defaults = disabled) ----
+    churn_rate: float = 0.0
+    recover_rate: float = 0.5
+    straggle_rate: float = 0.0
+    bw_walk: float = 0.0
+    budget_bytes: float = 0.0
     # --- engine ----------------------------------------------------------
     iters: int = 300
     mix_impl: str = "dense"  # see simulator.SIM_MIX_IMPLS
@@ -144,7 +151,10 @@ class ScenarioSpec:
             r=self.r, b_mean=self.b_mean, sigma_n=self.sigma_n,
             alpha0=self.alpha0, optimizer=self.optimizer,
             seed=self.seeds[0] if seed is None else int(seed),
-            mix_impl=self.mix_impl, shards=self.shards, trace=self.trace)
+            mix_impl=self.mix_impl, shards=self.shards, trace=self.trace,
+            churn_rate=self.churn_rate, recover_rate=self.recover_rate,
+            straggle_rate=self.straggle_rate, bw_walk=self.bw_walk,
+            budget_bytes=self.budget_bytes)
 
     def signature(self) -> tuple:
         """Batch-compatibility key: every compile-shaping field.
@@ -325,8 +335,19 @@ class ScenarioReport:
     launch_cells: int  # real cells co-batched in this launch
     engine_cache_hit: bool
     program_cache_hit: bool
+    # non-None when this request's round failed: the error message, with
+    # ``results``/``tx`` empty.  Other rounds keep draining (a poisoned spec
+    # must not strand the rest of the queue).
+    error: str | None = None
+
+    @property
+    def ok(self) -> bool:
+        return self.error is None
 
     def result(self, seed: int | None = None) -> SimResult:
+        if self.error is not None:
+            raise RuntimeError(
+                f"request {self.request_id} failed: {self.error}")
         return self.results[self.spec.seeds[0] if seed is None else seed]
 
     def timing_dict(self) -> dict:
@@ -346,6 +367,7 @@ class ServiceStats:
     program_hits: int = 0
     program_misses: int = 0
     padded_cells: int = 0  # bucket-padding overhead cells executed
+    failures: int = 0  # requests answered with error-tagged reports
     engine: simulator.EngineCacheStats = dataclasses.field(
         default_factory=simulator.EngineCacheStats)
 
@@ -354,6 +376,7 @@ class ServiceStats:
                 "launches": self.launches, "program_hits": self.program_hits,
                 "program_misses": self.program_misses,
                 "padded_cells": self.padded_cells,
+                "failures": self.failures,
                 "engine_cache": self.engine.as_dict()}
 
 
@@ -427,7 +450,12 @@ class ScenarioService:
 
     # ------------------------------------------------------------- rounds --
     def poll(self) -> list[ScenarioReport]:
-        """Serves one batch round; [] when the queue is empty."""
+        """Serves one batch round; [] when the queue is empty.
+
+        A staging/engine failure is contained to the round: the failed
+        requests (already dequeued) come back as error-tagged reports and
+        the rest of the queue keeps draining on later polls -- one poisoned
+        spec must not strand every request behind it in ``serve``."""
         if not self._queue:
             return []
         sig = self._queue[0].sig
@@ -439,7 +467,17 @@ class ScenarioService:
                 group.append(p)
                 budget -= n
                 self._queue.remove(p)
-        return self._launch(group)
+        try:
+            return self._launch(group)
+        except Exception as e:  # noqa: BLE001 -- contain any round failure
+            self._stats.failures += len(group)
+            t_now = time.perf_counter()
+            return [ScenarioReport(
+                request_id=p.rid, spec=p.spec, launch_id=-1, results={},
+                tx={}, queue_wait_s=t_now - p.t_submit, stage_s=0.0,
+                run_s=0.0, launch_cells=0, engine_cache_hit=False,
+                program_cache_hit=False,
+                error=f"{type(e).__name__}: {e}") for p in group]
 
     def serve(self, specs: Sequence[ScenarioSpec] = ()) -> list[ScenarioReport]:
         """Submit ``specs``, drain the queue, return reports by request id."""

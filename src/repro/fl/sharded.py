@@ -29,6 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import efhc, topology, triggers
+from repro.core import resources as resources_mod
 from repro.core.topology import GraphProcess
 from repro.fl import trace as trace_mod
 from repro.launch.mesh import make_fleet_mesh
@@ -105,7 +106,10 @@ def make_sharded_engine(
     perm_flat = plan.owned.reshape(-1)  # shard-major device order
     inv_perm = jnp.asarray(plan.inv_perm)
 
-    def shard_body(policy_idx, k_bw, k_init, k_state, alphas, idx_sh, *tabs):
+    rcfg = cfg.resources
+
+    def shard_body(policy_idx, k_bw, k_init, k_state, k_res, alphas, idx_sh,
+                   *tabs):
         ctx = efhc.ShardCtx(*(t[0] for t in tabs))  # drop the shard dim
 
         def global_order(x_local):
@@ -117,8 +121,11 @@ def make_sharded_engine(
         bw_l = bw[ctx.owned]
         w0 = spec.init_rows(k_init, m, ctx.owned)
         adj0 = graph.adjacency_ell_rows(0, ctx.nbr_gid, ctx.mask, ctx.owned)
+        # resource state: local rows, fleet-global stream key (replicated)
+        res0 = (resources_mod.init_state(rcfg, bw_l, k_res)
+                if rcfg is not None else None)
         state = efhc.init_state(w0, bw_l, adj0, k_state,
-                                opt_state=opt.init(w0))
+                                opt_state=opt.init(w0), resources=res0)
 
         def one_step(st, per):
             ix, alpha = per  # ix: (ms, batch) dataset rows
@@ -171,8 +178,9 @@ def make_sharded_engine(
     dev_spec = P(None, _AXIS)  # (T, m) per-device channels, sharded on m
     out_specs = {"v": dev_spec, "loss": dev_spec, "comm_count": dev_spec,
                  "deg": dev_spec, "tx_time": P(), "util": P(),
-                 "consensus_err": P(), "acc": P(), "bandwidths": P(_AXIS)}
-    in_specs = ((P(), P(), P(), P(), P(), P(None, _AXIS, None))
+                 "consensus_err": P(), "acc": P(), "bandwidths": P(_AXIS),
+                 "down_count": P(), "exhausted_count": P()}
+    in_specs = ((P(), P(), P(), P(), P(), P(), P(None, _AXIS, None))
                 + (P(_AXIS),) * len(tables))
     mapped = _shard_map(shard_body, mesh, in_specs, out_specs)
 
@@ -180,9 +188,11 @@ def make_sharded_engine(
         policy_idx = jnp.asarray(policy_idx, jnp.int32)
         key = jax.random.PRNGKey(seed)
         k_bw, k_init, k_state = jax.random.split(key, 3)
+        k_res = (resources_mod.resource_key(key, rcfg)
+                 if rcfg is not None else k_state)
         alphas = sched(jnp.arange(T))
         idx_p = jnp.asarray(idx)[:, perm_flat]  # shard-major rows
-        out = mapped(policy_idx, k_bw, k_init, k_state, alphas, idx_p,
+        out = mapped(policy_idx, k_bw, k_init, k_state, k_res, alphas, idx_p,
                      *[jnp.asarray(t) for t in tables])
         # per-device channels come back in shard-major order; restore the
         # global device order the SimResult contract promises

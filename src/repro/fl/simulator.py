@@ -32,6 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import efhc, triggers
+from repro.core import resources as resources_mod
 from repro.core.topology import GraphProcess
 from repro.data.loader import FederatedBatches
 from repro.fl import modelspec as modelspec_mod
@@ -109,6 +110,15 @@ class SimConfig:
     # counts only (O(T m); required for m >~ 512 horizons) -- DESIGN.md
     # "Trace modes"
     trace: str = "full"
+    # resource dynamics (DESIGN.md "Resource dynamics"): all-zero defaults
+    # keep the engines on the structurally identical pre-resource path
+    # (golden trajectories stay bit-exact); any nonzero knob enables the
+    # per-device resource process inside the scan
+    churn_rate: float = 0.0  # P(up device goes down) per iteration
+    recover_rate: float = 0.5  # P(down device comes back) per iteration
+    straggle_rate: float = 0.0  # P(device delays its Event-4 update)
+    bw_walk: float = 0.0  # log-space bandwidth random-walk std per iter
+    budget_bytes: float = 0.0  # per-device broadcast budget; 0 = unlimited
 
     def __post_init__(self):
         """Fail-fast field validation (DESIGN.md "Scenario service").
@@ -150,6 +160,23 @@ class SimConfig:
                 f"mix_impl='sharded' keeps only summary traces (per-device "
                 f"counts); got trace={self.trace!r} -- link matrices would "
                 f"densify (T, m, m) at fleet scale")
+        triggers.check_sigma_n(self.sigma_n)
+        self.resources()  # ResourceConfig.__post_init__ validates the knobs
+
+    def resources(self) -> resources_mod.ResourceConfig | None:
+        """The run's ``ResourceConfig``, or None when every knob is at its
+        disabled default (the engines branch on this at Python level).
+
+        ``ResourceConfig.seed`` stays 0: the resource stream already derives
+        from the engine's TRACED root key (``PRNGKey(seed)``), so per-run
+        variation rides the run seed -- and a batched service cell realizes
+        the same stream as its solo counterpart, which a static config-seed
+        fold (baked into the shared compiled engine) would break."""
+        rcfg = resources_mod.ResourceConfig(
+            churn_rate=self.churn_rate, recover_rate=self.recover_rate,
+            straggle_rate=self.straggle_rate, bw_walk=self.bw_walk,
+            budget_bytes=self.budget_bytes)
+        return rcfg if rcfg.enabled else None
 
 
 @dataclasses.dataclass
@@ -176,6 +203,11 @@ class SimResult:
     trace: str = "full"
     _comm: np.ndarray | None = None  # (T,m,m) bool | (T,m,W) uint32 | None
     _adj: np.ndarray | None = None
+    # resource-dynamics channels (trace.RESOURCE_CHANNELS): (T,) int32
+    # per-iteration counts of down / budget-exhausted devices; all-zero for
+    # runs without a resource process (None only from pre-resource pickles)
+    down_count: np.ndarray | None = None
+    exhausted_count: np.ndarray | None = None
 
     @property
     def m(self) -> int:
@@ -231,6 +263,7 @@ def _efhc_cfg(sim: SimConfig) -> efhc.EFHCConfig:
         trigger=triggers.TriggerConfig(policy=sim.policy, r=sim.r, b_mean=sim.b_mean),
         gamma=None,
         mix_impl=sim.mix_impl,
+        resources=sim.resources(),
     )
 
 
@@ -287,6 +320,8 @@ def make_engine(
     # sparse impls carry Event-1 state as the ELL slot mask of G^(k-1)
     nl = graph.neighbors() if cfg.mix_impl in efhc.SPARSE_MIX_IMPLS else None
 
+    rcfg = cfg.resources
+
     def engine(policy_idx, seed, idx):
         policy_idx = jnp.asarray(policy_idx, jnp.int32)
         key = jax.random.PRNGKey(seed)
@@ -294,7 +329,11 @@ def make_engine(
         bw = triggers.sample_bandwidths(k_bw, m, sim.b_mean, sim.sigma_n)
         w0 = spec.init_stack(k_init, m)
         adj0 = graph.adjacency(0) if nl is None else graph.adjacency_ell(0, nl)
-        state = efhc.init_state(w0, bw, adj0, k_state, opt_state=opt.init(w0))
+        res0 = (resources_mod.init_state(
+                    rcfg, bw, resources_mod.resource_key(key, rcfg))
+                if rcfg is not None else None)
+        state = efhc.init_state(w0, bw, adj0, k_state, opt_state=opt.init(w0),
+                                resources=res0)
         alphas = sched(jnp.arange(T))
 
         def trace_ys(aux: efhc.StepAux) -> dict:
@@ -307,7 +346,9 @@ def make_engine(
             the sparse mix impls dead-code-eliminate the dense scatters."""
             ys = {"loss": aux.loss, "tx_time": aux.tx_time, "util": aux.util,
                   "v": aux.v, "consensus_err": aux.consensus_err,
-                  "comm_count": aux.comm_count, "deg": aux.deg}
+                  "comm_count": aux.comm_count, "deg": aux.deg,
+                  "down_count": aux.down_count,
+                  "exhausted_count": aux.exhausted_count}
             if trace == "full":
                 ys["comm"], ys["adj"] = aux.comm, aux.adj
             elif trace == "packed":
@@ -471,6 +512,8 @@ def _cached_engine(sim: SimConfig, graph: GraphProcess, *, T: int,
     key = (sim.m, sim.model, sim.n_classes, sim.dim, sim.batch, sim.r,
            sim.b_mean, sim.sigma_n, sim.alpha0, sim.optimizer, sim.mix_impl,
            sim.trace, int(sim.shards), T, max(1, int(eval_every)),
+           sim.churn_rate, sim.recover_rate, sim.straggle_rate, sim.bw_walk,
+           sim.budget_bytes,
            _graph_cache_key(graph), id(x), id(y), id(eval_fn))
 
     def build():
@@ -500,6 +543,8 @@ def _result_from_device(out: dict, model_dim: int, trace: str) -> SimResult:
                if "comm" in host else None),
         _adj=(np.asarray(host["adj"], trace_mod.link_dtype(trace))
               if "adj" in host else None),
+        down_count=np.asarray(host["down_count"], np.int32),
+        exhausted_count=np.asarray(host["exhausted_count"], np.int32),
     )
 
 
@@ -564,7 +609,12 @@ def _run_python(
     sched = paper_diminishing(sim.alpha0, gamma=1.0, theta=0.5)
     nl = graph.neighbors() if cfg.mix_impl in efhc.SPARSE_MIX_IMPLS else None
     adj0 = graph.adjacency(0) if nl is None else graph.adjacency_ell(0, nl)
-    state = efhc.init_state(w0, bw, adj0, k_state, opt_state=opt.init(w0))
+    rcfg = cfg.resources
+    res0 = (resources_mod.init_state(
+                rcfg, bw, resources_mod.resource_key(key, rcfg))
+            if rcfg is not None else None)
+    state = efhc.init_state(w0, bw, adj0, k_state, opt_state=opt.init(w0),
+                            resources=res0)
 
     step_jit = jax.jit(
         lambda st, batch, alpha: efhc.step(
@@ -582,6 +632,8 @@ def _run_python(
     comm_t = np.zeros((T, m, m), bool)
     adj_t = np.zeros((T, m, m), bool)
     cons_t = np.zeros(T, np.float32)
+    down_t = np.zeros(T, np.int32)
+    exh_t = np.zeros(T, np.int32)
 
     last_acc = 0.0
     for k in range(T):
@@ -594,6 +646,8 @@ def _run_python(
         comm_t[k] = np.asarray(aux.comm)
         adj_t[k] = np.asarray(aux.adj)
         cons_t[k] = float(aux.consensus_err)
+        down_t[k] = int(aux.down_count)
+        exh_t[k] = int(aux.exhausted_count)
         if eval_fn is not None and (k % eval_every == 0 or k == T - 1):
             last_acc = eval_fn(jax.device_get(state.w))
         acc_t[k] = last_acc
@@ -611,4 +665,5 @@ def _run_python(
         deg=adj_t.sum(-1).astype(np.int32),
         consensus_err=cons_t, model_dim=model_dim,
         bandwidths=np.asarray(bw), trace=trace, _comm=comm_s, _adj=adj_s,
+        down_count=down_t, exhausted_count=exh_t,
     )

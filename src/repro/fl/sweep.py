@@ -68,6 +68,9 @@ class SweepResult:
     trace: str = "full"
     _comm: np.ndarray | None = None  # (S,P,T,m,m) bool | (S,P,T,m,W) uint32
     _adj: np.ndarray | None = None
+    # resource channels (S, P, T) int32; all-zero without a resource process
+    down_count: np.ndarray | None = None
+    exhausted_count: np.ndarray | None = None
 
     @property
     def m(self) -> int:
@@ -94,6 +97,10 @@ class SweepResult:
             trace=self.trace,
             _comm=None if self._comm is None else self._comm[s, p],
             _adj=None if self._adj is None else self._adj[s, p],
+            down_count=(None if self.down_count is None
+                        else self.down_count[s, p]),
+            exhausted_count=(None if self.exhausted_count is None
+                             else self.exhausted_count[s, p]),
         )
 
     @property
@@ -172,6 +179,8 @@ def run_sweep(
         trace=trace,
         _comm=(np.asarray(out["comm"], link_dtype) if "comm" in out else None),
         _adj=(np.asarray(out["adj"], link_dtype) if "adj" in out else None),
+        down_count=np.asarray(out["down_count"], np.int32),
+        exhausted_count=np.asarray(out["exhausted_count"], np.int32),
     )
 
 
@@ -200,6 +209,8 @@ def _run_sweep_sharded(sim, graph, batches_factory, eval_fn, *,
         bandwidths=stack("bandwidths", np.float32),
         model_dim=cells[0][0].model_dim,
         trace=trace_mod.check_trace_mode(sim.trace),
+        down_count=stack("down_count", np.int32),
+        exhausted_count=stack("exhausted_count", np.int32),
     )
 
 

@@ -31,6 +31,12 @@ import numpy as np
 TRACE_MODES: tuple[str, ...] = ("full", "packed", "summary")
 WORD = 32  # bits per packed word
 
+# resource-dynamics scan channels (scalar int32 per iteration, recorded in
+# EVERY trace mode like the row sums): devices down via churn / out of
+# broadcast budget at each step.  All-zero whenever the run had no resource
+# process -- SimResult/SweepResult carry them as optional trajectories.
+RESOURCE_CHANNELS: tuple[str, ...] = ("down_count", "exhausted_count")
+
 
 def check_trace_mode(trace: str) -> str:
     if trace not in TRACE_MODES:

@@ -46,6 +46,58 @@ def test_partial_triggers_between_bounds_and_every_k():
     assert "dense" in rep.summary()
 
 
+def test_every_k_sums_realized_graphs_on_time_varying_fabrics():
+    """Regression (ISSUE 9 satellite): the every-K baseline used to be
+    ``dense_bytes / every_k``, which is only correct when every step moves
+    the same graph.  Under a partition-cycle-style fabric that alternates
+    between an EMPTY phase and a full ring, the collective fires at steps
+    0, K, 2K, ... and must be charged the *realized* graph at those steps."""
+    t, m, nb = 14, 8, 1000
+    ring = _ring(m)
+    empty = np.zeros((m, m), bool)
+    # phase 0 empty, phase 1 full ring, alternating
+    adj = np.stack([empty if k % 2 == 0 else ring for k in range(t)])
+    v = np.ones((t, m), bool)
+
+    rep = savings_report(v, adj, n_bytes=nb, every_k=2)
+    # every-2 samples the even (empty) steps: nothing to move
+    assert rep.every_k_bytes == 0.0
+    # the old shortcut would have charged half the cumulative dense volume
+    old_formula = rep.dense_bytes / 2
+    assert old_formula > 0.0
+    assert rep.every_k_bytes != old_formula
+
+    # K=3 hits steps 0,3,6,9,12 -> ring only at 3 and 9; the exact sum is
+    # 2 * (ring dense bytes per step), while total/3 would be 7/3 of one
+    ring_step = nb * ring.sum() / m
+    rep3 = savings_report(v, adj, n_bytes=nb, every_k=3)
+    assert rep3.every_k_bytes == pytest.approx(2 * ring_step)
+    assert rep3.dense_bytes == pytest.approx(7 * ring_step)
+    assert rep3.every_k_bytes != pytest.approx(rep3.dense_bytes / 3)
+
+    # static fabrics with T divisible by K keep the historical value
+    adj_static = np.broadcast_to(ring, (t, m, m))
+    rep_s = savings_report(v, adj_static, n_bytes=nb, every_k=2)
+    assert rep_s.every_k_bytes == pytest.approx(rep_s.dense_bytes / 2)
+
+
+def test_every_k_differs_from_shortcut_on_partition_cycle():
+    """The realized partition_cycle fabric (not a synthetic alternation):
+    phases have different edge counts, so sampling steps 0, K, 2K, ... must
+    disagree with the dense_bytes / K shortcut."""
+    from repro.core.topology import make_process
+
+    t, m, nb = 9, 8, 1000
+    g = make_process(m, "ring", time_varying="partition_cycle", cycle_len=2,
+                     seed=0)
+    adj = np.stack([np.asarray(g.adjacency(k)) for k in range(t)])
+    v = np.ones((t, m), bool)
+    rep = savings_report(v, adj, n_bytes=nb, every_k=2)
+    sampled = nb * adj[::2].sum(axis=(1, 2)) / m
+    assert rep.every_k_bytes == pytest.approx(sampled.sum())
+    assert rep.every_k_bytes != pytest.approx(rep.dense_bytes / 2)
+
+
 def test_heterogeneous_bandwidth_tx_time():
     t, m = 20, 4
     v = np.ones((t, m), bool)

@@ -22,13 +22,15 @@ def _doc(entries):
             "entries": entries}
 
 
-def _entry(m, trace, mix_impl, ips, shards=None, model=None):
+def _entry(m, trace, mix_impl, ips, shards=None, model=None, churn=None):
     e = {"m": m, "trace": trace, "mix_impl": mix_impl,
          "iters": 12, "iters_per_sec": ips}
     if shards is not None:
         e["shards"] = shards
     if model is not None:
         e["model"] = model
+    if churn is not None:
+        e["churn"] = churn
     return e
 
 
@@ -120,6 +122,31 @@ def test_compare_matches_model_entries_on_model_name():
     assert len(regressions) == 1 and regressions[0]["model"] == "mlp_blocks"
     table = check_regression.markdown_table(rows, 0.35)
     assert "| model |" in table and "mlp_blocks" in table
+
+
+def test_compare_matches_churn_entries_on_churn_value():
+    """Resource-dynamics rows gate per (m, trace, mix_impl, shards, model,
+    churn): a point measured under device churn runs a different scan body
+    (liveness draws + masks) and must be 'new' against a static pin, never
+    compared; entries without a churn column (every pre-resource file)
+    default to 0.0 so old pins stay comparable."""
+    ref = _doc([
+        _entry(1024, "summary", "sparse", 25.0, churn=0.2),
+        _entry(256, "packed", "dense", 40.0),  # no churn key: 0.0
+    ])
+    new = _doc([
+        _entry(1024, "summary", "sparse", 2.0, churn=0.1),  # churn mismatch
+        _entry(1024, "summary", "sparse", 24.0, churn=0.2),
+        _entry(256, "packed", "dense", 39.0, churn=0.0),  # explicit == absent
+    ])
+    rows, regressions = check_regression.compare(ref, new, threshold=0.35)
+    assert regressions == []
+    assert [r["status"] for r in rows] == ["new", "ok", "ok"]
+    slow = _doc([_entry(1024, "summary", "sparse", 1.0, churn=0.2)])
+    _, regressions = check_regression.compare(ref, slow, threshold=0.35)
+    assert len(regressions) == 1 and regressions[0]["churn"] == 0.2
+    table = check_regression.markdown_table(rows, 0.35)
+    assert "| churn |" in table and "| 0.2 |" in table
 
 
 def test_compare_legacy_entries_default_to_dense():
@@ -236,11 +263,13 @@ def test_pinned_reference_has_the_m_scaling_grid():
     by_key = {check_regression.entry_key(e): e for e in pinned["entries"]}
     assert any(k[0] == 2048 for k in by_key)
     assert any(k[0] == 4096 for k in by_key)
-    assert ("iters_per_sec" in by_key[(16384, "summary", "sparse", 1, "svm")])
-    staging = by_key[(32768, "staging", "staging", 1, "svm")]
+    assert ("iters_per_sec"
+            in by_key[(16384, "summary", "sparse", 1, "svm", 0.0)])
+    staging = by_key[(32768, "staging", "staging", 1, "svm", 0.0)]
     assert staging["staging_sec"] > 0 and staging["n_edges"] > 32768
-    assert "iters_per_sec" in by_key[(4096, "summary", "sharded", 8, "svm")]
-    big = [e for (m, trace, impl, s, model), e in by_key.items()
+    assert "iters_per_sec" in by_key[(4096, "summary", "sharded", 8, "svm",
+                                      0.0)]
+    big = [e for (m, trace, impl, s, model, churn), e in by_key.items()
            if m >= 100000 and impl == "sharded" and trace == "summary"
            and s >= 8]
     assert big and all("iters_per_sec" in e and e["iters_per_sec"] > 0
@@ -251,10 +280,10 @@ def test_pinned_reference_has_the_m_scaling_grid():
     assert all("model" in e for e in pinned["entries"]
                if "iters_per_sec" in e)
     compared = 0
-    for (m, trace, impl, s, model), e in by_key.items():
+    for (m, trace, impl, s, model, churn), e in by_key.items():
         if impl != "sparse" or m < 4096:
             continue
-        dense = by_key.get((m, trace, "dense", s, model))
+        dense = by_key.get((m, trace, "dense", s, model, churn))
         if dense is not None:
             compared += 1
             assert e["iters_per_sec"] > dense["iters_per_sec"], \

@@ -97,7 +97,8 @@ def test_signature_ignores_exactly_the_cell_fields():
         n_test=100, data_seed=1, partition="dirichlet", labels_per_device=2,
         dirichlet_alpha=0.5, smooth=1, r=10.0, b_mean=1000.0, sigma_n=0.5,
         alpha0=0.2, optimizer="adam", batch=4, iters=6, mix_impl="sparse",
-        trace="packed", eval_every=2)
+        trace="packed", eval_every=2, churn_rate=0.1, recover_rate=0.25,
+        straggle_rate=0.1, bw_walk=0.05, budget_bytes=1e6)
     for f, v in shaping_variants.items():
         other = dataclasses.replace(base, **{f: v})
         assert other.signature() != base.signature(), f
@@ -177,6 +178,37 @@ def test_round2_hits_engine_and_program_cache(served):
         rep.results[9],
         api.simulate(dataclasses.replace(specs[0], policy="zero"), seed=9),
         "round-2 cell")
+
+
+# ------------------------------------------------------- failure isolation --
+
+def test_poisoned_spec_mid_batch_keeps_the_queue_draining():
+    """Regression (ISSUE 9 satellite): ``serve`` drains via
+    ``while queue: poll()``, so an exception escaping one round used to
+    abort the loop and strand every request queued behind it.  A failed
+    round must come back as error-tagged reports while the healthy rounds
+    before AND after it complete, bit-identical to solo."""
+    svc = api.ScenarioService(max_cells=4)
+    healthy1 = api.ScenarioSpec(**BASE, seeds=(0, 1))
+    # constructs fine (registry-valid model) but the synthetic provider
+    # raises at staging time: the natural poisoned-round failure
+    poisoned = api.ScenarioSpec(**BASE, model="tiny_transformer",
+                                n_classes=32)
+    healthy2 = api.ScenarioSpec(**BASE, r=10.0, seeds=(1,))
+    reports = svc.serve([healthy1, poisoned, healthy2])
+
+    assert [r.request_id for r in reports] == [0, 1, 2]
+    bad = reports[1]
+    assert not bad.ok and "provider" in bad.error
+    assert bad.results == {} and bad.tx == {} and bad.launch_id == -1
+    with pytest.raises(RuntimeError, match="request 1 failed"):
+        bad.result()
+    assert svc.stats().failures == 1
+    for rep in (reports[0], reports[2]):
+        assert rep.ok and rep.error is None
+        for s in rep.spec.seeds:
+            assert_bit_identical(rep.results[s], api.simulate(rep.spec, seed=s),
+                                 f"healthy req {rep.request_id} seed {s}")
 
 
 # --------------------------------------------------------- cache counters --

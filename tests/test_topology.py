@@ -8,7 +8,8 @@ from repro.core.topology import (GraphProcess, complete_adjacency, erdos_renyi_a
                                  scatter_ell)
 
 
-@pytest.mark.parametrize("topology", ["rgg", "er", "ring", "complete"])
+@pytest.mark.parametrize("topology", ["rgg", "er", "ring", "complete",
+                                      "scale_free", "clustered"])
 def test_base_graphs_connected_symmetric(topology):
     g = make_process(8, topology, seed=3)
     a = np.asarray(g.adjacency(0))
@@ -16,6 +17,63 @@ def test_base_graphs_connected_symmetric(topology):
     assert not a.diagonal().any(), "no self loops"
     assert (a == a.T).all(), "symmetric"
     assert flow.union_connectivity(a[None]) == 1, "base graph connected"
+
+
+# ------------------------------------------------- resource-aware fabrics --
+
+@pytest.mark.parametrize("topology,kw", [
+    ("scale_free", dict(m_attach=2)),
+    ("scale_free", dict(m_attach=4)),
+    ("clustered", dict(n_clusters=0)),
+    ("clustered", dict(n_clusters=7)),
+])
+@pytest.mark.parametrize("m", [2, 3, 9, 64, 257])
+def test_new_fabrics_connected_at_any_size(topology, kw, m):
+    """ISSUE 9 fabrics are connected BY CONSTRUCTION at every size (seed
+    clique / member->head star), including the degenerate m <= 3 corners
+    and a prime m that does not divide into clusters evenly."""
+    g = make_process(m, topology, seed=5, **kw)
+    e = g.edges
+    assert e.m == m
+    assert (e.u < e.v).all(), "canonical lexsorted half-edges"
+    a = np.asarray(g.adjacency(0))
+    assert (a == a.T).all() and not a.diagonal().any()
+    assert flow.union_connectivity(a[None]) == 1
+
+
+def test_scale_free_degree_distribution_is_hub_heavy():
+    """Preferential attachment must actually produce hubs: the max degree
+    far exceeds the mean (an ER/RGG draw at the same edge count stays within
+    a small factor of its mean degree)."""
+    g = make_process(512, "scale_free", seed=0, m_attach=2)
+    deg = g.edges.degrees()
+    assert deg.min() >= 2, "every attached node keeps its m_attach stubs"
+    assert deg.max() >= 5 * deg.mean(), "no hubs -- not a scale-free draw"
+    # edge count: clique on m0=3 + 2 per later node
+    assert g.edges.n_edges == 3 + 2 * (512 - 3)
+
+
+def test_clustered_fabric_exposes_coords_for_sharding():
+    """The clustered builder returns device positions (like RGG) so the
+    Morton shard partitioner can keep clusters shard-local."""
+    g = make_process(64, "clustered", seed=1)
+    assert g.coords is not None and g.coords.shape == (64, 2)
+    assert (g.coords >= 0).all() and (g.coords <= 1).all()
+    # deterministic staging
+    g2 = make_process(64, "clustered", seed=1)
+    assert np.array_equal(g.coords, g2.coords)
+    assert np.array_equal(g.edges.u, g2.edges.u)
+    assert np.array_equal(g.edges.v, g2.edges.v)
+
+
+@pytest.mark.parametrize("topology", ["scale_free", "clustered"])
+def test_new_fabrics_mixing_matrix_doubly_stochastic(topology):
+    from repro.core import mixing
+
+    g = make_process(32, topology, seed=2)
+    a = np.asarray(g.adjacency(0))
+    p = mixing.build_p(a, a)  # all links active
+    mixing.assert_doubly_stochastic(p)
 
 
 def test_edge_dropout_is_subgraph_and_varies():

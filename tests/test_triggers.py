@@ -81,6 +81,42 @@ def test_bandwidth_sampling_range():
     assert abs(bw.mean() - 5000.0) < 200
 
 
+def test_bandwidth_sampling_near_one_sigma_clamps_to_floor():
+    """Regression (ISSUE 9 satellite): sigma_n -> 1 used to collapse the
+    lower bandwidth bound to ~0, so rho_i = 1/b_i thresholds exploded and
+    tx-time accounting divided by ~0.  The sampler now clamps the lower
+    bound to BW_FLOOR_FRAC * b_mean."""
+    b_mean = 5000.0
+    bw = np.asarray(triggers.sample_bandwidths(
+        jax.random.PRNGKey(0), 4096, b_mean, 0.999999))
+    assert bw.min() >= triggers.BW_FLOOR_FRAC * b_mean
+    # thresholds built on the draw stay finite and bounded
+    cfg = triggers.TriggerConfig(policy="efhc", r=1.0, b_mean=b_mean)
+    thr = np.asarray(triggers.thresholds(cfg, jnp.asarray(bw),
+                                         jnp.asarray(1.0)))
+    assert np.isfinite(thr).all()
+    assert thr.max() <= 1.0 / (triggers.BW_FLOOR_FRAC * b_mean) + 1e-9
+
+
+@pytest.mark.parametrize("bad", [1.0, 1.5, -0.1])
+def test_bandwidth_sampling_rejects_out_of_range_sigma(bad):
+    """sigma_n is validated in [0, 1) with the offending value named."""
+    with pytest.raises(ValueError, match=f"sigma_n={bad}"):
+        triggers.sample_bandwidths(jax.random.PRNGKey(0), 8, 5000.0, bad)
+    with pytest.raises(ValueError, match=f"sigma_n={bad}"):
+        triggers.check_sigma_n(bad)
+
+
+def test_bandwidth_sampling_paper_sigma_unchanged_by_clamp():
+    """At the paper's sigma_n = 0.9 the clamp is inert (lo = 0.1 b_M is far
+    above the floor), so historical draws are bit-identical."""
+    key = jax.random.PRNGKey(7)
+    got = triggers.sample_bandwidths(key, 64, 5000.0, 0.9)
+    want = jax.random.uniform(key, (64,), minval=0.1 * 5000.0,
+                              maxval=1.9 * 5000.0)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
 def test_trigger_strict_at_exact_threshold_kernel_vs_reference():
     """Eq. 7 is a STRICT inequality: dev == threshold must not fire.  Pins
     the kernel <-> reference parity at the boundary (the kernel used to fire
