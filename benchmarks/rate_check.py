@@ -45,16 +45,52 @@ def run_rate(iters: int = 1500, m: int = 8, n: int = 4, seed: int = 0):
     return gaps
 
 
-def run_all() -> list[str]:
-    gaps = run_rate()
+def check(iters: int = 1500) -> dict:
+    """Runs the quadratic benchmark and judges the Thm 2 rate: the tail
+    must stay under the mid-run-fitted C * ln k / sqrt(k) envelope and the
+    gap must have decayed >100x between k=10 and the horizon."""
+    gaps = run_rate(iters=iters)
     ks = np.arange(1, len(gaps) + 1)
     bound_shape = np.log(ks + 1) / np.sqrt(ks)
-    # fit C on k in [100, 500], check tail k > 800 under the bound
-    fit = slice(100, 500)
+    # fit C on the mid-run, check the tail under the bound
+    fit = slice(iters // 15, iters // 3)
+    tail = int(iters * 8 / 15)
     c = np.max(gaps[fit] / bound_shape[fit])
-    tail_ok = bool(np.all(gaps[800:] <= 1.5 * c * bound_shape[800:]))
-    improvement = gaps[10] / max(gaps[-1], 1e-30)
+    tail_ok = bool(np.all(gaps[tail:] <= 1.5 * c * bound_shape[tail:]))
+    improvement = float(gaps[10] / max(gaps[-1], 1e-30))
+    return {"iters": iters, "c_fit": float(c), "tail_ok": tail_ok,
+            "gap_improvement_x": improvement,
+            "rate_holds": tail_ok and improvement > 100.0}
+
+
+def run_all() -> list[str]:
+    res = check()
     return [
         csv_line("thm2_rate_check", 0.0,
-                 f"tail_under_lnk_sqrtk_bound={tail_ok};gap_impr_x={improvement:.1f}"),
+                 f"tail_under_lnk_sqrtk_bound={res['tail_ok']};"
+                 f"gap_impr_x={res['gap_improvement_x']:.1f}"),
     ]
+
+
+def main() -> None:
+    """CI smoke entry point: exit 1 when the Thm 2 rate regresses.
+
+        PYTHONPATH=src python -m benchmarks.rate_check [--iters 1500]
+    """
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--iters", type=int, default=1500,
+                    help="horizon; the envelope fit/tail splits scale with it")
+    args = ap.parse_args()
+    res = check(iters=args.iters)
+    print(f"thm2 rate check: iters={res['iters']} C={res['c_fit']:.3g} "
+          f"tail_under_bound={res['tail_ok']} "
+          f"gap_improvement={res['gap_improvement_x']:.1f}x "
+          f"-> {'OK' if res['rate_holds'] else 'REGRESSED'}")
+    if not res["rate_holds"]:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,11 +1,28 @@
 """msgpack pytree checkpointing (offline container: no orbax).
 
 Layout: <dir>/step_<k>.msgpack, each file a self-describing tree:
-arrays encoded as {"__nd__": shape, "dtype": str, "data": bytes}.
-``save`` writes atomically (tmp + rename) and rotates old checkpoints.
+
+* arrays      -> {"__nd__": shape, "dtype": str, "data": bytes}
+* NamedTuples -> {"__nt__": "module.QualName", "data": [fields...]}
+* plain tuple -> {"__tuple__": [items...]}
+* None        -> {"__none__": true}  (only where a bare nil is ambiguous:
+  inside containers None round-trips natively)
+
+The structural tags are what make full engine carries restorable:
+msgpack itself packs tuples as lists, so the seed's ``jax.tree.map``
+encoder silently flattened ``EFHCState``/``AdamState``/``ResourceState``
+into lists on restore — unusable as a scan carry.  ``restore`` now
+rebuilds the exact pytree (NamedTuple classes re-imported by qualified
+name, dtypes byte-exact), which the crash-safe resume path in
+``fl/simulator.run_checkpointed`` relies on for bit-identical resumption.
+Old-format files (untagged nested lists) still decode as before.
+
+``save`` writes atomically (tmp + rename) and rotates old checkpoints
+(``keep=0`` disables rotation and keeps every step).
 """
 from __future__ import annotations
 
+import importlib
 import os
 import re
 from typing import Any
@@ -15,7 +32,11 @@ import msgpack
 import numpy as np
 
 
-def _encode(obj):
+def _is_namedtuple(obj) -> bool:
+    return isinstance(obj, tuple) and hasattr(type(obj), "_fields")
+
+
+def _tree_encode(obj):
     if isinstance(obj, (np.ndarray, jax.Array)):
         arr = np.asarray(obj)
         return {
@@ -23,28 +44,49 @@ def _encode(obj):
             "dtype": str(arr.dtype),
             "data": arr.tobytes(),
         }
-    if isinstance(obj, (np.integer,)):
+    if isinstance(obj, np.integer):
         return int(obj)
-    if isinstance(obj, (np.floating,)):
+    if isinstance(obj, np.floating):
         return float(obj)
-    return obj
+    if obj is None:
+        return {"__none__": True}
+    if _is_namedtuple(obj):
+        cls = type(obj)
+        return {
+            "__nt__": f"{cls.__module__}.{cls.__qualname__}",
+            "data": [_tree_encode(v) for v in obj],
+        }
+    if isinstance(obj, tuple):
+        return {"__tuple__": [_tree_encode(v) for v in obj]}
+    if isinstance(obj, list):
+        return [_tree_encode(v) for v in obj]
+    if isinstance(obj, dict):
+        return {k: _tree_encode(v) for k, v in obj.items()}
+    if isinstance(obj, (bool, int, float, str, bytes)):
+        return obj
+    raise TypeError(f"cannot serialize {type(obj)}")
 
 
-def _default(obj):
-    enc = _encode(obj)
-    if enc is obj:
-        raise TypeError(f"cannot serialize {type(obj)}")
-    return enc
-
-
-def _tree_encode(tree):
-    return jax.tree.map(_encode, tree)
+def _nt_class(qualname: str):
+    module, _, name = qualname.rpartition(".")
+    cls = importlib.import_module(module)
+    for part in name.split("."):  # handles nested QualNames
+        cls = getattr(cls, part)
+    return cls
 
 
 def _tree_decode(obj):
     if isinstance(obj, dict):
         if "__nd__" in obj:
-            return np.frombuffer(obj["data"], dtype=np.dtype(obj["dtype"])).reshape(obj["__nd__"]).copy()
+            return (np.frombuffer(obj["data"], dtype=np.dtype(obj["dtype"]))
+                    .reshape(obj["__nd__"]).copy())
+        if "__none__" in obj:
+            return None
+        if "__nt__" in obj:
+            return _nt_class(obj["__nt__"])(*[_tree_decode(v)
+                                              for v in obj["data"]])
+        if "__tuple__" in obj:
+            return tuple(_tree_decode(v) for v in obj["__tuple__"])
         return {k: _tree_decode(v) for k, v in obj.items()}
     if isinstance(obj, list):
         return [_tree_decode(v) for v in obj]

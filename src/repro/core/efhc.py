@@ -25,6 +25,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import accounting, consensus, mixing, topology, triggers
+from repro.core import faults as faults_mod
+from repro.core import flow as flow_mod
 from repro.core import resources as resources_mod
 from repro.core.topology import GraphProcess
 from repro.kernels.mixing import ops as mixing_ops
@@ -44,6 +46,12 @@ class EFHCState(NamedTuple):
     # resource-dynamics carry (live bandwidth / budgets / liveness), None
     # unless cfg.resources is enabled (DESIGN.md "Resource dynamics")
     resources: Any = None
+    # correlated-fault carry (crash bits / staleness / cluster outages),
+    # None unless cfg.faults is enabled (DESIGN.md "Fault injection")
+    faults: Any = None
+    # B-connectivity watchdog carry (per-slot edge ages), None unless
+    # cfg.watchdog is enabled
+    watchdog: Any = None
 
 
 MIX_IMPLS: tuple[str, ...] = ("dense", "delta", "pallas",
@@ -73,9 +81,22 @@ class EFHCConfig:
     # pre-resource program -- the gate is a Python-level branch, so golden
     # trajectories stay bit-exact (DESIGN.md "Resource dynamics")
     resources: resources_mod.ResourceConfig | None = None
+    # correlated fault injection (cluster outages / scripted partition /
+    # flapping links / crash-rejoin); the same Python-level-gate contract
+    # as ``resources`` (DESIGN.md "Fault injection & resilience")
+    faults: faults_mod.FaultConfig | None = None
+    # in-scan B-connectivity watchdog over the information-flow graph;
+    # None or window=0 keeps the step structurally watchdog-free
+    watchdog: flow_mod.WatchdogConfig | None = None
 
     def resources_enabled(self) -> bool:
         return self.resources is not None and self.resources.enabled
+
+    def faults_enabled(self) -> bool:
+        return self.faults is not None and self.faults.enabled
+
+    def watchdog_enabled(self) -> bool:
+        return self.watchdog is not None and self.watchdog.enabled
 
     def pallas_interpret(self) -> bool:
         if self.interpret is not None:
@@ -83,7 +104,7 @@ class EFHCConfig:
         return jax.default_backend() != "tpu"
 
 
-def init_state(w_stack, bandwidths: jax.Array, adjacency0: jax.Array, key: jax.Array, opt_state=None, resources=None) -> EFHCState:
+def init_state(w_stack, bandwidths: jax.Array, adjacency0: jax.Array, key: jax.Array, opt_state=None, resources=None, faults=None, watchdog=None) -> EFHCState:
     return EFHCState(
         w=w_stack,
         w_hat=jax.tree.map(jnp.copy, w_stack),
@@ -93,6 +114,8 @@ def init_state(w_stack, bandwidths: jax.Array, adjacency0: jax.Array, key: jax.A
         key=key,
         opt_state=opt_state,
         resources=resources,
+        faults=faults,
+        watchdog=watchdog,
     )
 
 
@@ -148,6 +171,14 @@ class StepAux(NamedTuple):
     # churn / out of broadcast budget this iteration
     down_count: jax.Array  # scalar int32
     exhausted_count: jax.Array  # scalar int32
+    # fault-injection counters (zeros when disabled): devices silenced by
+    # crash or cluster outage / worst staleness carried by a crashed device
+    fault_down_count: jax.Array  # scalar int32
+    stale_max: jax.Array  # scalar int32
+    # watchdog channels (True / 0 when disabled): is the sliding union
+    # window connected, and the smallest window that would connect it
+    window_connected: jax.Array  # scalar bool
+    window_needed: jax.Array  # scalar int32
 
 
 def _mask_update_rows(upd: jax.Array, m: int, new_tree, old_tree):
@@ -176,6 +207,7 @@ def step(
     policy_idx: jax.Array | None = None,
     nl: topology.NeighborList | None = None,
     opt_update: Callable[[Any, Any, Any, jax.Array], tuple[Any, Any]] | None = None,
+    ftabs: faults_mod.FaultTabs | None = None,
 ) -> tuple[EFHCState, StepAux]:
     """One universal iteration of Alg. 1 across all m devices.
 
@@ -228,6 +260,22 @@ def step(
         bw_thresh = state.bandwidths
         bw_live = state.bandwidths
 
+    # correlated faults: an independent Python-level gate with its own
+    # carried stream -- crash/rejoin + cluster-outage Markov bits evolve
+    # here; edge-level faults (partition window, flapping) mask below
+    fcfg = cfg.faults
+    fdyn = fcfg is not None and fcfg.enabled
+    if fdyn:
+        fstate = state.faults
+        f_key, k_fevolve = jax.random.split(fstate.key)
+        crashed, rejoined, staleness, cluster_down = faults_mod.evolve(
+            fcfg, k_fevolve, fstate.crashed, fstate.staleness,
+            fstate.cluster_down, m)
+        f_up = faults_mod.device_up(crashed, cluster_down, ftabs.labels)
+
+    wcfg = cfg.watchdog
+    wdog = wcfg is not None and wcfg.enabled
+
     if sparse:
         if nl is None:
             # setup-time numpy, traced in as constants; built straight from
@@ -241,6 +289,14 @@ def step(
             # the ordinary prev-adjacency delta
             adj_ell = jnp.logical_and(
                 adj_ell, jnp.logical_and(up[:, None], up[nbr_idx]))
+        if fdyn:
+            # crashed / clustered-out devices drop off the fabric entirely;
+            # edge faults kill individual links on their own schedule
+            adj_ell = jnp.logical_and(
+                adj_ell, jnp.logical_and(f_up[:, None], f_up[nbr_idx]))
+            if fcfg.edge_faults:
+                adj_ell = jnp.logical_and(
+                    adj_ell, faults_mod.edge_keep(fcfg, state.k, ftabs))
         # dense view for StepAux consumers only; dead code whenever the ys
         # stick to the ELL-derived row sums (trace="summary")
         adj = topology.scatter_ell(nbr_idx, adj_ell)
@@ -249,6 +305,12 @@ def step(
         if dyn:
             adj = jnp.logical_and(
                 adj, jnp.logical_and(up[:, None], up[None, :]))
+        if fdyn:
+            adj = jnp.logical_and(
+                adj, jnp.logical_and(f_up[:, None], f_up[None, :]))
+            if fcfg.edge_faults:
+                adj = jnp.logical_and(
+                    adj, faults_mod.edge_keep(fcfg, state.k, ftabs))
 
     # ---- Event 2: broadcast triggers -------------------------------------
     w_flat = _flatten_stack(state.w)
@@ -273,6 +335,9 @@ def step(
         # also stops the threshold-blind policies (ZT/gossip) from spending
         # past their budget
         v = jnp.logical_and(v, jnp.logical_and(up, ~exhausted))
+    if fdyn:
+        # crashed / clustered-out devices broadcast nothing
+        v = jnp.logical_and(v, f_up)
 
     # ---- Event 1: neighbor connection ------------------------------------
     # Links that newly appeared vs k-1 exchange parameters unconditionally.
@@ -310,6 +375,44 @@ def step(
         deg_i = adj.sum(axis=1, dtype=jnp.int32)
         prev_adj_next = adj
 
+    if fdyn and fcfg.warm_start:
+        # staleness-aware rejoin (ROADMAP recovery item (d)): a device
+        # rejoining this iteration replaces its frozen stale model with the
+        # plain average of its *live* neighbors' pre-mix models, instead of
+        # re-entering consensus self-weighted by Metropolis p_ii.  Computed
+        # from w_flat (pre-patch values), so multiple simultaneous rejoins
+        # are order-independent -- and shard-consistent.
+        if sparse:
+            nb_sum = jnp.where(adj_ell[..., None], w_flat[nbr_idx], 0.0
+                               ).sum(axis=1)
+            nb_cnt = adj_ell.sum(axis=1, dtype=jnp.float32)
+        else:
+            a_f = adj.astype(jnp.float32)
+            nb_sum = a_f @ w_flat
+            nb_cnt = a_f.sum(axis=1)
+        nb_avg = nb_sum / jnp.maximum(nb_cnt, 1.0)[:, None]
+        patch = jnp.logical_and(rejoined, nb_cnt > 0)
+        w_mixed_flat = jnp.where(patch[:, None], nb_avg, w_mixed_flat)
+
+    # in-scan B-connectivity watchdog over the realized information-flow
+    # edges E'^(k); under a dense mix_impl the (m, m) comm matrix is
+    # gathered into ELL slots first (the engines pass ``nl`` whenever the
+    # watchdog is on)
+    if wdog:
+        if sparse:
+            w_idx, w_comm = nbr_idx, comm_ell
+        else:
+            w_idx = jnp.asarray(nl.idx)
+            w_comm = flow_mod.comm_ell_from_dense(
+                comm, w_idx, jnp.asarray(nl.mask))
+        wd_age, window_connected, window_needed = flow_mod.watchdog_step(
+            wcfg, w_idx, w_comm, state.watchdog.age)
+        wd_new = flow_mod.WatchdogState(age=wd_age)
+    else:
+        wd_new = state.watchdog
+        window_connected = jnp.ones((), bool)
+        window_needed = jnp.zeros((), jnp.int32)
+
     # w_hat update: devices that broadcast snapshot their *pre-mix* model
     # (Alg. 1 line 12: w_hat^(k+1) = w^(k))
     def upd_hat(h, wcur):
@@ -327,10 +430,16 @@ def step(
         opt_state_new = state.opt_state
     else:
         w_new, opt_state_new = opt_update(grads, state.opt_state, w_mixed, alpha_k)
-    if dyn:
-        # stragglers delay Event 4 (carry the mixed model); down devices do
-        # not compute at all -- both keep their pre-update rows + opt state
-        upd = jnp.logical_and(up, ~straggle)
+    if dyn or fdyn:
+        # stragglers delay Event 4 (carry the mixed model); down / crashed
+        # devices do not compute at all -- both keep their pre-update rows
+        # + opt state (a crashed device's edges are all masked, so its
+        # "mixed" row IS its frozen theta)
+        upd = None
+        if dyn:
+            upd = jnp.logical_and(up, ~straggle)
+        if fdyn:
+            upd = f_up if upd is None else jnp.logical_and(upd, f_up)
         w_new = _mask_update_rows(upd, m, w_new, w_mixed)
         opt_state_new = _mask_update_rows(upd, m, opt_state_new,
                                           state.opt_state)
@@ -365,16 +474,30 @@ def step(
         down_count = jnp.zeros((), jnp.int32)
         exhausted_count = jnp.zeros((), jnp.int32)
 
+    if fdyn:
+        f_new = faults_mod.FaultState(crashed=crashed, staleness=staleness,
+                                      cluster_down=cluster_down, key=f_key)
+        fault_down_count = jnp.sum(~f_up).astype(jnp.int32)
+        stale_max = jnp.max(staleness)
+    else:
+        f_new = state.faults
+        fault_down_count = jnp.zeros((), jnp.int32)
+        stale_max = jnp.zeros((), jnp.int32)
+
     new_state = EFHCState(
         w=w_new, w_hat=w_hat_new, k=state.k + 1, prev_adj=prev_adj_next,
         bandwidths=state.bandwidths, key=key, opt_state=opt_state_new,
-        resources=res_new,
+        resources=res_new, faults=f_new, watchdog=wd_new,
     )
     return new_state, StepAux(v=v, comm=comm, p=p, loss=loss, tx_time=tx_time,
                               util=util, adj=adj, consensus_err=consensus_err,
                               comm_count=used_i, deg=deg_i,
                               down_count=down_count,
-                              exhausted_count=exhausted_count)
+                              exhausted_count=exhausted_count,
+                              fault_down_count=fault_down_count,
+                              stale_max=stale_max,
+                              window_connected=window_connected,
+                              window_needed=window_needed)
 
 
 # ---------------------------------------------------------------------------
@@ -412,6 +535,12 @@ class ShardAux(NamedTuple):
     # fleet-global resource counters (psum'd, replicated; zeros if disabled)
     down_count: jax.Array  # scalar int32
     exhausted_count: jax.Array  # scalar int32
+    # fleet-global fault counters (psum/pmax'd, replicated)
+    fault_down_count: jax.Array  # scalar int32
+    stale_max: jax.Array  # scalar int32
+    # watchdog channels (pmax'd inside the watchdog, replicated)
+    window_connected: jax.Array  # scalar bool
+    window_needed: jax.Array  # scalar int32
 
 
 def halo_exchange(ctx: ShardCtx, axis_name: str, x: jax.Array) -> jax.Array:
@@ -438,6 +567,7 @@ def step_sharded(
     axis_name: str = "fl",
     policy_idx: jax.Array | None = None,
     opt_update: Callable[[Any, Any, Any, jax.Array], tuple[Any, Any]] | None = None,
+    ftabs: faults_mod.FaultTabs | None = None,
 ) -> tuple[EFHCState, ShardAux]:
     """One universal iteration of Alg. 1 for this shard's ``ms`` devices.
 
@@ -484,6 +614,22 @@ def step_sharded(
         bw_thresh = state.bandwidths
         bw_live = state.bandwidths
 
+    # correlated faults: per-device draws are positional (m,) sliced by
+    # ``ctx.owned``; cluster bits evolve from the replicated global key, so
+    # every shard realizes the identical outage pattern
+    fcfg = cfg.faults
+    fdyn = fcfg is not None and fcfg.enabled
+    if fdyn:
+        fstate = state.faults
+        f_key, k_fevolve = jax.random.split(fstate.key)
+        crashed, rejoined, staleness, cluster_down = faults_mod.evolve(
+            fcfg, k_fevolve, fstate.crashed, fstate.staleness,
+            fstate.cluster_down, m, rows=ctx.owned)
+        f_up = faults_mod.device_up(crashed, cluster_down, ftabs.labels)
+
+    wcfg = cfg.watchdog
+    wdog = wcfg is not None and wcfg.enabled
+
     adj_ell = graph.adjacency_ell_rows(state.k, ctx.nbr_gid, ctx.mask, ctx.owned)
     if dyn:
         # churn masks Events 1-3; neighbor liveness arrives over the halo
@@ -491,6 +637,15 @@ def step_sharded(
         up_buf = jnp.concatenate([up, ex(up)])
         adj_ell = jnp.logical_and(
             adj_ell, jnp.logical_and(up[:, None], up_buf[ctx.nbr_loc]))
+    if fdyn:
+        f_up_buf = jnp.concatenate([f_up, ex(f_up)])
+        adj_ell = jnp.logical_and(
+            adj_ell, jnp.logical_and(f_up[:, None], f_up_buf[ctx.nbr_loc]))
+        if fcfg.edge_faults:
+            # edge tables are keyed by canonical global edge id, so the
+            # shard's rows see the identical (k, edge) schedule
+            adj_ell = jnp.logical_and(
+                adj_ell, faults_mod.edge_keep(fcfg, state.k, ftabs))
     deg_i = adj_ell.sum(axis=1, dtype=jnp.int32)
 
     # ---- Event 2: broadcast triggers (local rows) ------------------------
@@ -509,6 +664,8 @@ def step_sharded(
         # hard mask before the halo ships v: down / exhausted devices fire
         # nothing, and their neighbors must agree
         v = jnp.logical_and(v, jnp.logical_and(up, ~exhausted))
+    if fdyn:
+        v = jnp.logical_and(v, f_up)
 
     # ---- halo exchange: boundary rows of (w_flat, v, deg) ----------------
     # the halo ships the canonical (ms, D) flat rows -- one gathered array
@@ -526,6 +683,29 @@ def step_sharded(
     w_mixed_flat = consensus.mix_sparse_halo(ctx.nbr_loc, p_diag, p_off,
                                              w_flat, w_halo_flat)
     used_i = comm_ell.sum(axis=1, dtype=jnp.int32)
+
+    if fdyn and fcfg.warm_start:
+        # staleness-aware rejoin: neighbor values come out of the [own;
+        # halo] buffer of *pre-patch* rows -- the identical slot-order sum
+        # the single-device sparse impl performs, so owned-row trajectories
+        # stay bit-exact
+        w_buf = jnp.concatenate([w_flat, w_halo_flat])
+        nb_sum = jnp.where(adj_ell[..., None], w_buf[ctx.nbr_loc], 0.0
+                           ).sum(axis=1)
+        nb_cnt = adj_ell.sum(axis=1, dtype=jnp.float32)
+        nb_avg = nb_sum / jnp.maximum(nb_cnt, 1.0)[:, None]
+        patch = jnp.logical_and(rejoined, nb_cnt > 0)
+        w_mixed_flat = jnp.where(patch[:, None], nb_avg, w_mixed_flat)
+
+    if wdog:
+        wd_age, window_connected, window_needed = flow_mod.watchdog_step_halo(
+            wcfg, m, ctx.nbr_loc, ctx.owned, comm_ell, state.watchdog.age,
+            ex, axis_name)
+        wd_new = flow_mod.WatchdogState(age=wd_age)
+    else:
+        wd_new = state.watchdog
+        window_connected = jnp.ones((), bool)
+        window_needed = jnp.zeros((), jnp.int32)
 
     def upd_hat(h, wcur):
         mask = v.reshape((ms,) + (1,) * (wcur.ndim - 1))
@@ -546,8 +726,12 @@ def step_sharded(
     else:
         w_new, opt_state_new = opt_update(grads, state.opt_state, w_mixed,
                                           alpha_k)
-    if dyn:
-        upd = jnp.logical_and(up, ~straggle)
+    if dyn or fdyn:
+        upd = None
+        if dyn:
+            upd = jnp.logical_and(up, ~straggle)
+        if fdyn:
+            upd = f_up if upd is None else jnp.logical_and(upd, f_up)
         w_new = _mask_update_rows(upd, ms, w_new, w_mixed)
         opt_state_new = _mask_update_rows(upd, ms, opt_state_new,
                                           state.opt_state)
@@ -584,13 +768,28 @@ def step_sharded(
         down_count = jnp.zeros((), jnp.int32)
         exhausted_count = jnp.zeros((), jnp.int32)
 
+    if fdyn:
+        f_new = faults_mod.FaultState(crashed=crashed, staleness=staleness,
+                                      cluster_down=cluster_down, key=f_key)
+        fault_down_count = jax.lax.psum(jnp.sum(~f_up).astype(jnp.int32),
+                                        axis_name)
+        stale_max = jax.lax.pmax(jnp.max(staleness), axis_name)
+    else:
+        f_new = state.faults
+        fault_down_count = jnp.zeros((), jnp.int32)
+        stale_max = jnp.zeros((), jnp.int32)
+
     new_state = EFHCState(
         w=w_new, w_hat=w_hat_new, k=state.k + 1, prev_adj=adj_ell,
         bandwidths=state.bandwidths, key=key, opt_state=opt_state_new,
-        resources=res_new,
+        resources=res_new, faults=f_new, watchdog=wd_new,
     )
     return new_state, ShardAux(v=v, loss=loss, tx_time=tx_time, util=util,
                                consensus_err=consensus_err,
                                comm_count=used_i, deg=deg_i,
                                down_count=down_count,
-                               exhausted_count=exhausted_count)
+                               exhausted_count=exhausted_count,
+                               fault_down_count=fault_down_count,
+                               stale_max=stale_max,
+                               window_connected=window_connected,
+                               window_needed=window_needed)

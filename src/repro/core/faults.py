@@ -1,0 +1,329 @@
+"""Correlated fault injection: cluster outages, scripted partitions,
+flapping links, crash/rejoin with staleness (DESIGN.md "Fault injection &
+resilience").
+
+PR 9's resource process (``core.resources``) models *iid per-device* churn
+-- every device flips a private Bernoulli coin.  Real D2D fleets fail in
+correlated ways (Savazzi et al., arXiv:1912.13163; Imteaj et al.,
+arXiv:2002.10610): a basestation outage takes a whole spatial cluster down
+at once, a backhaul cut severs the graph into components for a window, a
+marginal radio link flaps on a timescale of its own, and a crashed device
+rejoins later carrying a *stale* model.  This module injects exactly those
+four, as a process evolved **inside the scan**:
+
+* **cluster outages** -- the fleet is grouped into spatial clusters (the
+  clustered fabric's own k-means labels when available, Morton-order blocks
+  over coords or contiguous id blocks otherwise); each cluster carries one
+  fleet-global up/down Markov bit, and a down cluster silences every member
+  device at once (edges masked, triggers masked, Event 4 skipped);
+* **scripted bridge partition** -- every *cross-cluster* edge is severed
+  for the window ``[partition_start, partition_start + partition_len)``,
+  a deterministic worst-case attack on Assumption 8's B-connectivity that
+  the in-scan watchdog (``core.flow``) must flag;
+* **flapping links** -- a static ``flap_rate`` fraction of base edges is
+  marked flapping at staging; a flapping edge follows a square wave of
+  half-period ``flap_len`` with a per-edge phase, so it is down on a
+  deterministic schedule (pure function of ``(edge, k)`` -- any row subset
+  realizes the identical schedule, the sharded engine's contract);
+* **crash/rejoin with staleness** -- per-device crash/rejoin Markov bits
+  (positional (m,) draws sliced by ``rows``, like ``resources.evolve``).
+  A crashed device freezes theta and accumulates a staleness counter;
+  on rejoin it optionally warm-starts from the average of its live
+  neighbors' models (``warm_start`` -- ROADMAP recovery item (d))
+  instead of re-entering consensus with the frozen stale model.
+
+Structure mirrors ``core.resources`` exactly: a frozen ``FaultConfig``
+whose all-default state means *disabled*, a ``FaultState`` carried through
+the scan, and a Python-level gate in the engines -- a disabled config keeps
+the compiled step structurally identical to the pre-fault program, so
+golden trajectories stay bit-exact by construction.
+
+RNG discipline: the fault stream derives from the engine's TRACED root key
+via ``fault_key`` (double ``fold_in`` under a salt distinct from the
+resource stream's) and never touches the engine's own splits.  The static
+flap assignment (which edges flap, with what phase) is *staging-time* host
+randomness keyed on ``FaultConfig.seed`` -- a property of the scenario like
+the graph realization, not of the run seed.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.topology import EdgeList, GraphProcess
+
+# fold_in salt separating the fault stream from the engine and resource
+# (0x7E50) streams
+_STREAM_SALT = 0xFA17
+
+# staleness counter saturation: far beyond any horizon, safely below int32
+STALE_CAP = 1 << 30
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultConfig:
+    """Static knobs of the correlated-failure process.
+
+    All-defaults means *disabled* (``enabled`` False): the engines take a
+    Python-level branch on that, so the disabled step is structurally the
+    pre-fault program -- bit-compat with the golden trajectories is by
+    construction, not by tolerance."""
+
+    # cluster-level outages: P(an up cluster goes down) per iteration and
+    # P(a down cluster recovers); one Markov bit per cluster, fleet-global
+    cluster_fail_rate: float = 0.0
+    cluster_recover_rate: float = 0.25
+    # scripted bridge partition: every cross-cluster edge is severed for
+    # k in [partition_start, partition_start + partition_len).  A negative
+    # start (or zero length) disables the window.
+    partition_start: int = -1
+    partition_len: int = 0
+    # flapping links: fraction of base edges marked flapping at staging;
+    # a flapping edge is down when ((k // flap_len) + phase) is odd
+    flap_rate: float = 0.0
+    flap_len: int = 8
+    # crash/rejoin: per-device Markov kill bits with staleness-aware rejoin
+    crash_rate: float = 0.0
+    rejoin_rate: float = 0.25
+    # rejoin recovery: warm-start the rejoined device's model from the
+    # average of its live neighbors instead of the frozen stale theta
+    warm_start: bool = False
+    # fault-stream offset (folded into the traced root key) AND the seed of
+    # the staging-time flap assignment
+    seed: int = 0
+
+    def __post_init__(self):
+        for name in ("cluster_fail_rate", "cluster_recover_rate",
+                     "flap_rate", "crash_rate", "rejoin_rate"):
+            val = getattr(self, name)
+            if not 0.0 <= val <= 1.0:
+                raise ValueError(f"{name} must be in [0, 1]; got {name}={val}")
+        if self.partition_len < 0:
+            raise ValueError(
+                f"partition_len must be >= 0; got {self.partition_len}")
+        if self.flap_len < 1:
+            raise ValueError(f"flap_len must be >= 1; got {self.flap_len}")
+
+    @property
+    def partition_scripted(self) -> bool:
+        return self.partition_start >= 0 and self.partition_len > 0
+
+    @property
+    def enabled(self) -> bool:
+        return (self.cluster_fail_rate > 0.0 or self.partition_scripted
+                or self.flap_rate > 0.0 or self.crash_rate > 0.0)
+
+    @property
+    def edge_faults(self) -> bool:
+        """True when any *edge-level* mechanism is active (partition window
+        or flapping) -- the engines skip the edge-mask staging otherwise."""
+        return self.partition_scripted or self.flap_rate > 0.0
+
+
+class FaultState(NamedTuple):
+    """Fault carry through the scan (local rows on a shard; ``cluster_down``
+    and ``key`` are fleet-global and replicated)."""
+
+    crashed: jax.Array  # (m,) bool device crashed
+    staleness: jax.Array  # (m,) int32 consecutive iterations spent crashed
+    cluster_down: jax.Array  # (C,) bool per-cluster outage bits
+    key: jax.Array  # fault PRNG stream (global, replicated on shards)
+
+
+class FaultFabric(NamedTuple):
+    """Staging-time (host numpy) spatial structure of the fault process:
+    which cluster each device belongs to, which edges bridge clusters, and
+    the static flap assignment.  Layout-agnostic per-edge tables; the
+    engines re-index them into their own layout (dense / ELL / shard rows)
+    via ``edge_tables_dense`` / ``edge_tables_rows``."""
+
+    labels: np.ndarray  # (m,) int32 cluster label per device
+    n_clusters: int
+    cross: np.ndarray  # (E,) bool: edge endpoints in different clusters
+    flap: np.ndarray  # (E,) bool: edge marked flapping
+    phase: np.ndarray  # (E,) int32 in {0, 1}: flap square-wave phase
+
+
+class FaultTabs(NamedTuple):
+    """One engine layout's traced view of the fabric: ``labels`` per owned
+    row, plus the edge tables in that engine's edge layout -- (m, m) dense
+    or (rows, d_max) ELL slots."""
+
+    labels: jax.Array  # (R,) int32
+    cross: jax.Array  # (m, m) | (R, d_max) bool
+    flap: jax.Array
+    phase: jax.Array  # int32, same layout
+
+
+def fault_key(key: jax.Array, cfg: FaultConfig) -> jax.Array:
+    """Derives the fault stream from the engine root key without consuming
+    any split the pre-fault engine performs (salt differs from the resource
+    stream's, so the two coexist independently)."""
+    return jax.random.fold_in(jax.random.fold_in(key, _STREAM_SALT),
+                              int(cfg.seed) & 0x7FFFFFFF)
+
+
+def _fallback_labels(graph: GraphProcess, n_groups: int) -> np.ndarray:
+    """Pseudo-clusters for fabrics without native k-means labels: Morton
+    (Z-order) blocks over device coords when available -- spatially compact
+    groups, so a "cluster" outage still kills a contiguous region -- else
+    contiguous id blocks (exact for ring fabrics)."""
+    from repro.core.topology import _morton_codes
+
+    m = graph.m
+    if graph.coords is not None:
+        order = np.argsort(_morton_codes(graph.coords), kind="stable")
+    else:
+        order = np.arange(m)
+    labels = np.empty(m, np.int32)
+    block = -(-m // n_groups)
+    labels[order] = (np.arange(m) // block).astype(np.int32)
+    return labels
+
+
+def fault_fabric(graph: GraphProcess, cfg: FaultConfig) -> FaultFabric:
+    """Builds the static fault fabric for a graph: cluster labels (the
+    clustered fabric's own assignment when it carries one), cross-cluster
+    edge marks, and the seeded flap assignment.  Host numpy, staging-time,
+    O(E) -- same cost class as the neighbor-list build."""
+    m = graph.m
+    edges = graph.edges
+    if graph.labels is not None:
+        labels = np.asarray(graph.labels, np.int32)
+    else:
+        n_groups = max(2, int(round(np.sqrt(m) / 2.0))) if m > 2 else 1
+        labels = _fallback_labels(graph, n_groups)
+    n_clusters = int(labels.max()) + 1 if m else 1
+    cross = labels[edges.u] != labels[edges.v]
+    e = edges.n_edges
+    if cfg.flap_rate > 0.0:
+        rng = np.random.default_rng([int(cfg.seed) & 0x7FFFFFFF, _STREAM_SALT])
+        flap = rng.uniform(size=e) < cfg.flap_rate
+        phase = rng.integers(0, 2, size=e).astype(np.int32)
+    else:
+        flap = np.zeros(e, bool)
+        phase = np.zeros(e, np.int32)
+    return FaultFabric(labels=labels, n_clusters=n_clusters,
+                       cross=np.asarray(cross, bool), flap=flap, phase=phase)
+
+
+def edge_tables_dense(fab: FaultFabric, edges: EdgeList) -> FaultTabs:
+    """Fabric tables in the dense engine's (m, m) layout (symmetric)."""
+    m = edges.m
+
+    def scatter(vals, dtype):
+        a = np.zeros((m, m), dtype)
+        a[edges.u, edges.v] = vals
+        a[edges.v, edges.u] = vals
+        return a
+
+    return FaultTabs(labels=jnp.asarray(fab.labels),
+                     cross=jnp.asarray(scatter(fab.cross, bool)),
+                     flap=jnp.asarray(scatter(fab.flap, bool)),
+                     phase=jnp.asarray(scatter(fab.phase, np.int32)))
+
+
+def edge_tables_rows(fab: FaultFabric, edges: EdgeList, nbr_idx: np.ndarray,
+                     nbr_mask: np.ndarray,
+                     rows: np.ndarray | None = None) -> FaultTabs:
+    """Fabric tables in ELL layout for an arbitrary row subset: ``nbr_idx``/
+    ``nbr_mask`` are the (R, d_max) neighbor-list rows of global devices
+    ``rows`` (defaults to 0..m-1, the single-device engine).  Because the
+    tables are keyed by canonical edge id, a shard staging only its own rows
+    sees the identical per-edge marks the full fleet sees."""
+    m = edges.m
+    if rows is None:
+        rows = np.arange(m, dtype=np.int64)
+    i = np.asarray(rows, np.int64)[:, None]
+    j = np.asarray(nbr_idx, np.int64)
+    eid = np.minimum(i, j) * m + np.maximum(i, j)
+    pos = np.searchsorted(edges.eids(), eid)
+    pos = np.clip(pos, 0, max(0, edges.n_edges - 1))
+    mask = np.asarray(nbr_mask, bool)
+
+    def take(table, fill, dtype):
+        if edges.n_edges == 0:
+            return np.full(mask.shape, fill, dtype)
+        return np.where(mask, table[pos], fill).astype(dtype)
+
+    return FaultTabs(labels=jnp.asarray(fab.labels[np.asarray(rows)]),
+                     cross=jnp.asarray(take(fab.cross, False, bool)),
+                     flap=jnp.asarray(take(fab.flap, False, bool)),
+                     phase=jnp.asarray(take(fab.phase, 0, np.int32)))
+
+
+def init_state(cfg: FaultConfig, fab: FaultFabric, key: jax.Array,
+               rows: np.ndarray | None = None) -> FaultState:
+    """Initial carry: everything up.  ``rows`` gives a shard's local row
+    count; ``cluster_down``/``key`` stay fleet-global (replicated)."""
+    n = len(fab.labels) if rows is None else int(np.shape(rows)[0])
+    return FaultState(
+        crashed=jnp.zeros((n,), bool),
+        staleness=jnp.zeros((n,), jnp.int32),
+        cluster_down=jnp.zeros((fab.n_clusters,), bool),
+        key=key,
+    )
+
+
+def evolve(cfg: FaultConfig, key: jax.Array, crashed: jax.Array,
+           staleness: jax.Array, cluster_down: jax.Array, m: int,
+           rows: jax.Array | None = None):
+    """One step of the crash/rejoin and cluster-outage Markov chains.
+
+    Per-device draws are positional (m,) arrays sliced by ``rows`` (the
+    sharded engine's bit-compat contract, like ``resources.evolve``);
+    cluster draws are full (C,) on every shard (the bits are fleet-global
+    and must stay replicated).  Returns ``(crashed_new, rejoined,
+    staleness_new, cluster_down_new)``."""
+    k_crash, k_rejoin, k_cluster = jax.random.split(key, 3)
+    take = (lambda a: a) if rows is None else (lambda a: a[rows])
+    if cfg.crash_rate > 0.0:
+        u_crash = take(jax.random.uniform(k_crash, (m,)))
+        u_rejoin = take(jax.random.uniform(k_rejoin, (m,)))
+        crashed_new = jnp.where(crashed, u_rejoin >= cfg.rejoin_rate,
+                                u_crash < cfg.crash_rate)
+    else:
+        crashed_new = crashed
+    rejoined = jnp.logical_and(crashed, ~crashed_new)
+    staleness_new = jnp.where(
+        crashed_new, jnp.minimum(staleness + 1, STALE_CAP),
+        jnp.zeros_like(staleness))
+    if cfg.cluster_fail_rate > 0.0:
+        c = cluster_down.shape[0]
+        u_cl = jax.random.uniform(k_cluster, (c,))
+        cluster_down_new = jnp.where(cluster_down,
+                                     u_cl >= cfg.cluster_recover_rate,
+                                     u_cl < cfg.cluster_fail_rate)
+    else:
+        cluster_down_new = cluster_down
+    return crashed_new, rejoined, staleness_new, cluster_down_new
+
+
+def device_up(crashed: jax.Array, cluster_down: jax.Array,
+              labels: jax.Array) -> jax.Array:
+    """(R,) bool liveness under faults: not crashed, cluster not out."""
+    return jnp.logical_and(~crashed, ~cluster_down[labels])
+
+
+def edge_keep(cfg: FaultConfig, k: jax.Array, tabs: FaultTabs) -> jax.Array:
+    """Edge survival mask for iteration ``k`` in ``tabs``' layout: severs
+    cross-cluster edges inside the scripted partition window and downs
+    flapping edges on their square wave.  A pure function of ``(k, edge)``
+    over static tables -- every layout (dense, ELL, shard rows) realizes
+    the identical schedule."""
+    keep = None
+    if cfg.partition_scripted:
+        k32 = jnp.asarray(k, jnp.int32)
+        active = jnp.logical_and(k32 >= cfg.partition_start,
+                                 k32 < cfg.partition_start + cfg.partition_len)
+        keep = ~jnp.logical_and(tabs.cross, active)
+    if cfg.flap_rate > 0.0:
+        wave = (jnp.asarray(k, jnp.int32) // cfg.flap_len + tabs.phase) % 2
+        down = jnp.logical_and(tabs.flap, wave == 1)
+        keep = ~down if keep is None else jnp.logical_and(keep, ~down)
+    assert keep is not None, "edge_keep called without edge-level faults"
+    return keep

@@ -1,17 +1,60 @@
-"""Information-flow graph analysis (paper Prop. 1, Appendix A).
+"""Information-flow graph analysis (paper Prop. 1, Appendix A) and the
+in-scan B-connectivity watchdog (DESIGN.md "Fault injection & resilience").
 
 The information-flow graph G'^(k) contains only the links actually used for
 parameter exchange at iteration k.  Prop. 1: under Assumption 8, G'^(k) is
 B-connected with B = (l~ + 2) B_1 where l~ B_1 <= B_2 <= (l~ + 1) B_1 - 1.
 
-These helpers measure the *realized* B on simulation traces so tests and
-benchmarks can check the guarantee (physical B_1, trigger bound B_2 =>
-information-flow B).
+Two families of helpers measure the *realized* B:
+
+* host-side (numpy) trace analysis -- ``union_connectivity`` /
+  ``failing_windows`` / ``trigger_bound`` / ``predicted_b`` consume recorded
+  link trajectories (dense bool (T, m, m) or the bit-packed uint32 storage
+  of ``trace="packed"``, unpacked lazily via ``repro.fl.trace``);
+* the **in-scan watchdog** -- an O(E)-per-round label-propagation monitor
+  evolved inside the engines' ``lax.scan``, so B-connectivity is certified
+  live even under ``trace="summary"`` and the sharded engine, where no link
+  matrices survive to analyze after the fact.
+
+Watchdog algorithm: carry a per-neighbor-slot *age* (iterations since the
+edge last carried parameters; the ELL twin of "when was this info-flow edge
+last in the union graph").  Each iteration, relax a minimax-age distance to
+device 0 over the neighbor list for ``n_prop`` rounds:
+
+    d[i] <- min(d[i], min_s max(d[nbr[i, s]], age[i, s]))
+
+After convergence, ``max_i d[i] + 1`` is the smallest window ``w`` such
+that the union of the last ``w`` information-flow graphs is connected --
+emitted per iteration as ``window_needed``, with ``window_connected =
+(window_needed <= window)``.  Relaxation converges exactly within ``m - 1``
+rounds (minimax Bellman-Ford over simple paths); ``default_prop_rounds``
+uses exactly that at small m and a diameter-scaled approximation at fleet
+scale (an *under*-propagated round count can only overestimate
+``window_needed`` -- the watchdog errs toward flagging).
+
+``empirical_b`` folds a ``window_needed`` trajectory into the realized B
+(provably equal to ``union_connectivity`` on the same trace: all windows of
+size b are connected iff needed(k) <= b for every k >= b - 1), and
+``b_certificate`` packages observed vs. predicted-bound B as the artifact
+the CI fault-smoke uploads.
 """
 from __future__ import annotations
 
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
 import numpy as np
 
+# "never active" slot age / unreachable distance; far above any horizon,
+# low enough that +1 arithmetic stays in int32
+AGE_INF = 1 << 30
+
+
+# ---------------------------------------------------------------------------
+# host-side trace analysis (numpy)
+# ---------------------------------------------------------------------------
 
 def _connected(a: np.ndarray) -> bool:
     m = a.shape[0]
@@ -27,19 +70,61 @@ def _connected(a: np.ndarray) -> bool:
     return bool(seen.all())
 
 
-def union_connectivity(adjs: np.ndarray) -> int:
+def as_dense_links(adjs: np.ndarray, m: int | None = None) -> np.ndarray:
+    """Normalizes a recorded link trajectory to dense (T, m, m) bool.
+
+    Accepts the dense bool storage of ``trace="full"`` or the bit-packed
+    uint32 words of ``trace="packed"`` (a ``SimResult._comm``-style
+    (T, m, W) array), unpacking the latter via ``repro.fl.trace``.  Packed
+    input needs ``m`` explicitly: the padded last word makes the device
+    count ambiguous (W words cover any m in (32(W-1), 32W])."""
+    a = np.asarray(adjs)
+    if a.dtype == np.uint32:
+        if m is None:
+            raise ValueError(
+                "packed link trajectories need the device count: pass "
+                "union_connectivity(..., m=result.m) -- the zero-padded "
+                "last word makes m ambiguous from the shape alone")
+        from repro.fl import trace as trace_mod
+
+        return trace_mod.unpack_links(a, m)
+    if a.dtype != np.bool_:
+        raise TypeError(
+            f"expected a bool (T, m, m) or packed uint32 (T, m, W) link "
+            f"trajectory; got dtype {a.dtype}")
+    return a
+
+
+def union_connectivity(adjs: np.ndarray, *, m: int | None = None) -> int:
     """Smallest window size B such that the union of every B consecutive
-    graphs in ``adjs`` (T, m, m) is connected; returns -1 if none works."""
+    graphs in ``adjs`` is connected; -1 if no window size works.
+
+    ``adjs`` may be dense bool (T, m, m) or the bit-packed uint32 (T, m, W)
+    storage of ``trace="packed"`` (pass ``m``); both yield the identical
+    answer (tests/test_flow.py pins the agreement)."""
+    adjs = as_dense_links(adjs, m)
     t = adjs.shape[0]
     for b in range(1, t + 1):
-        ok = True
-        for s in range(0, t - b + 1):
-            if not _connected(adjs[s : s + b].any(axis=0)):
-                ok = False
-                break
-        if ok:
+        if failing_windows(adjs, b).size == 0:
             return b
     return -1
+
+
+def failing_windows(adjs: np.ndarray, b: int, *,
+                    m: int | None = None) -> np.ndarray:
+    """Per-window-start failure detail: the start indices ``s`` whose union
+    ``adjs[s : s + b]`` is NOT connected (empty = every size-b window is
+    connected, i.e. the trace is b-connected).  This is the diagnostic
+    ``union_connectivity`` folds away: *which* stretch of the run broke
+    Assumption 8 -- e.g. the scripted partition window a fault-injection
+    run severed."""
+    adjs = as_dense_links(adjs, m)
+    t = adjs.shape[0]
+    if b < 1:
+        raise ValueError(f"window size must be >= 1; got b={b}")
+    bad = [s for s in range(0, t - b + 1)
+           if not _connected(adjs[s:s + b].any(axis=0))]
+    return np.asarray(bad, np.int64)
 
 
 def trigger_bound(v_trace: np.ndarray) -> int:
@@ -64,3 +149,163 @@ def predicted_b(b1: int, b2: int) -> int:
     if l_tilde * b1 > b2 or b2 > (l_tilde + 1) * b1 - 1:
         l_tilde = max(0, -(-b2 // b1) - 1)
     return (l_tilde + 2) * b1
+
+
+# ---------------------------------------------------------------------------
+# in-scan B-connectivity watchdog
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class WatchdogConfig:
+    """Static knobs of the in-scan monitor.  ``window=0`` disables it (the
+    engines take a Python-level branch, so a disabled config keeps the
+    compiled step structurally identical to the pre-watchdog program)."""
+
+    # sliding union window W the run is expected to stay connected over
+    # (set it to the predicted B = (l~ + 2) B_1 to monitor Prop. 1 live)
+    window: int = 0
+    # label-propagation rounds per iteration; 0 = auto
+    # (``default_prop_rounds``: exact at m <= 256, diameter-scaled above)
+    n_prop: int = 0
+
+    def __post_init__(self):
+        if self.window < 0:
+            raise ValueError(f"window must be >= 0; got {self.window}")
+        if self.n_prop < 0:
+            raise ValueError(f"n_prop must be >= 0; got {self.n_prop}")
+
+    @property
+    def enabled(self) -> bool:
+        return self.window > 0
+
+    def rounds(self, m: int) -> int:
+        return self.n_prop if self.n_prop > 0 else default_prop_rounds(m)
+
+
+def default_prop_rounds(m: int) -> int:
+    """Propagation rounds: ``m`` (exact -- minimax Bellman-Ford converges
+    in <= m - 1 rounds) up to m=256; beyond that a diameter-scaled
+    approximation (union graphs of the geometric/clustered fabrics have
+    O(sqrt(m)) diameter).  Under-propagation only ever *overestimates*
+    ``window_needed`` -- conservative for a monitor that flags violations."""
+    if m <= 256:
+        return m
+    return int(4 * np.ceil(np.sqrt(m))) + 32
+
+
+class WatchdogState(NamedTuple):
+    """Scan carry: per-neighbor-slot ages (iterations since the slot's edge
+    last appeared in the information-flow graph).  ELL layout (rows, d_max)
+    -- local rows on a shard; pad slots stay at AGE_INF forever."""
+
+    age: jax.Array  # (rows, d_max) int32
+
+
+def watchdog_init(rows: int, d_max: int) -> WatchdogState:
+    return WatchdogState(age=jnp.full((rows, d_max), AGE_INF, jnp.int32))
+
+
+def _age_update(comm_ell: jax.Array, age: jax.Array) -> jax.Array:
+    # active slots reset to 0; everything else (incl. pad slots) ages,
+    # saturating at AGE_INF so "never active" is absorbing
+    return jnp.where(comm_ell, 0, jnp.minimum(age + 1, AGE_INF))
+
+
+def watchdog_step(cfg: WatchdogConfig, nbr_idx: jax.Array,
+                  comm_ell: jax.Array, age: jax.Array):
+    """One monitor iteration (single-device engines).
+
+    ``comm_ell`` is the step's information-flow slot mask (the same array
+    Event 3 mixes over), ``age`` the carried ``WatchdogState.age``.
+    Returns ``(age_new, window_connected, window_needed)``: the smallest
+    union window (ending at this iteration) that connects the fleet, and
+    whether it fits ``cfg.window``.  Pure jnp, O(E) per propagation round,
+    never touches an (m, m) matrix -- the summary-trace contract."""
+    m = age.shape[0]
+    age_new = _age_update(comm_ell, age)
+    d0 = jnp.where(jnp.arange(m) == 0, 0, AGE_INF).astype(jnp.int32)
+
+    def body(_, d):
+        cand = jnp.maximum(d[nbr_idx], age_new)  # pad slots: max w/ INF
+        return jnp.minimum(d, cand.min(axis=1))
+
+    d = jax.lax.fori_loop(0, cfg.rounds(m), body, d0)
+    needed = jnp.minimum(d.max(), AGE_INF - 1) + 1
+    return age_new, needed <= cfg.window, needed
+
+
+def watchdog_step_halo(cfg: WatchdogConfig, m: int, nbr_loc: jax.Array,
+                       owned: jax.Array, comm_ell: jax.Array, age: jax.Array,
+                       ex: Callable[[jax.Array], jax.Array], axis_name: str):
+    """Sharded twin of ``watchdog_step``: the distance vector lives on the
+    shard's owned rows and each propagation round ships the boundary rows
+    through the engine's halo exchange (``ex``), exactly like the mixing
+    payload.  The slot arithmetic is identical, so observed-B matches the
+    single-device watchdog bit for bit (the global max reduces via pmax)."""
+    age_new = _age_update(comm_ell, age)
+    d0 = jnp.where(owned == 0, 0, AGE_INF).astype(jnp.int32)
+
+    def body(_, d):
+        buf = jnp.concatenate([d, ex(d)])
+        cand = jnp.maximum(buf[nbr_loc], age_new)
+        return jnp.minimum(d, cand.min(axis=1))
+
+    d = jax.lax.fori_loop(0, cfg.rounds(m), body, d0)
+    needed = jnp.minimum(jax.lax.pmax(d.max(), axis_name), AGE_INF - 1) + 1
+    return age_new, needed <= cfg.window, needed
+
+
+def comm_ell_from_dense(comm: jax.Array, nbr_idx: jax.Array,
+                        nbr_mask: jax.Array) -> jax.Array:
+    """Gathers a dense (m, m) information-flow matrix into the watchdog's
+    ELL slot layout (dense mix impls don't otherwise build one)."""
+    m = comm.shape[0]
+    rows = jnp.arange(m, dtype=nbr_idx.dtype)[:, None]
+    return jnp.logical_and(comm[rows, nbr_idx], nbr_mask)
+
+
+# ---------------------------------------------------------------------------
+# empirical-B certificate (host side, consumes the watchdog channels)
+# ---------------------------------------------------------------------------
+
+def empirical_b(window_needed: np.ndarray) -> int:
+    """Folds a ``window_needed`` trajectory into the realized B: the
+    smallest b such that every size-b window of the run's information-flow
+    graphs is connected; -1 if none.  Identity with the O(T^2 m^2) dense
+    check (pinned by tests): all size-b windows are connected iff
+    needed(k) <= b for every k >= b - 1, so B = min{b : max(needed[b-1:])
+    <= b} via one suffix-max sweep -- O(T), no link matrices needed, which
+    is what makes the certificate available from summary-trace runs."""
+    needed = np.asarray(window_needed, np.int64)
+    t = needed.shape[0]
+    if t == 0:
+        return -1
+    suffix_max = np.maximum.accumulate(needed[::-1])[::-1]
+    ok = np.nonzero(suffix_max <= np.arange(1, t + 1))[0]
+    return int(ok[0]) + 1 if ok.size else -1
+
+
+def b_certificate(window_needed: np.ndarray, v_trace: np.ndarray,
+                  b1: int, *, window: int = 0) -> dict:
+    """The empirical B-connectivity certificate (the CI fault-smoke
+    artifact): observed B from the watchdog trajectory, the trigger bound
+    B_2, Prop. 1's predicted B = (l~ + 2) B_1, and whether the realized
+    information flow honored both the bound and the configured watchdog
+    window.  ``b1`` is the physical fabric's union window (known by
+    construction for the builtin processes, or measured on an adj trace)."""
+    obs = empirical_b(window_needed)
+    b2 = trigger_bound(np.asarray(v_trace, bool))
+    pred = predicted_b(int(b1), int(b2)) if b2 > 0 and b1 > 0 else -1
+    needed = np.asarray(window_needed, np.int64)
+    violations = (np.nonzero(needed > window)[0] if window > 0
+                  else np.empty(0, np.int64))
+    return {
+        "observed_b": int(obs),
+        "b1": int(b1),
+        "b2": int(b2),
+        "predicted_b": int(pred),
+        "bound_holds": bool(obs > 0 and pred > 0 and obs <= pred),
+        "window": int(window),
+        "violation_steps": [int(s) for s in violations],
+        "window_violated": bool(violations.size > 0),
+    }

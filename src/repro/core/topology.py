@@ -466,7 +466,7 @@ def scale_free_edges(m: int, m_attach: int = 2, seed: int = 0) -> EdgeList:
 
 
 def clustered_edges(m: int, n_clusters: int = 0,
-                    seed: int = 0) -> tuple[EdgeList, np.ndarray]:
+                    seed: int = 0) -> tuple[EdgeList, np.ndarray, np.ndarray]:
     """Location-clustered hierarchical D2D fabric: devices drawn uniformly on
     the unit square are k-means clustered (a few vectorized Lloyd rounds);
     inside each cluster every device links to the cluster head (the member
@@ -474,12 +474,14 @@ def clustered_edges(m: int, n_clusters: int = 0,
     short link); cluster heads form the backhaul -- a ring over heads plus a
     nearest-other-head bridge each.  ``n_clusters <= 0`` picks ~sqrt(m)/2.
     Connected by construction (member -> head star, heads ringed).  Returns
-    ``(edges, points)``; the positions feed the sharded engine's Morton
-    partitioner, exactly like the RGG builder."""
+    ``(edges, points, labels)``; the positions feed the sharded engine's
+    Morton partitioner (like the RGG builder) and the (m,) int32 cluster
+    labels feed the correlated fault process (``core.faults``: cluster
+    outages and bridge partitions are keyed off this very assignment)."""
     rng = np.random.default_rng(seed)
     pts = rng.uniform(size=(m, 2))
     if m <= 2:
-        return ring_edges(m), pts
+        return ring_edges(m), pts, np.zeros(m, np.int32)
     k = int(n_clusters) if n_clusters > 0 else max(2, int(round(np.sqrt(m) / 2.0)))
     k = min(k, m)
     centers = pts[rng.choice(m, size=k, replace=False)].copy()
@@ -521,7 +523,8 @@ def clustered_edges(m: int, n_clusters: int = 0,
         np.fill_diagonal(hd, np.inf)
         us.append(heads_arr)  # nearest-other-head bridges
         vs.append(heads_arr[hd.argmin(axis=1)])
-    return _dedup_canonical(np.concatenate(us), np.concatenate(vs), m), pts
+    return (_dedup_canonical(np.concatenate(us), np.concatenate(vs), m), pts,
+            labels.astype(np.int32))
 
 
 # ---------------------------------------------------------------------------
@@ -609,6 +612,13 @@ class GraphProcess:
     # randomness beyond the edge realization and never enter the engine
     # cache key or the jitted adjacency stream
     coords: np.ndarray | None = dataclasses.field(
+        default=None, compare=False, repr=False)
+    # optional (m,) int32 cluster labels (the clustered builder's k-means
+    # assignment): consumed by the correlated fault process (``core.faults``)
+    # to key cluster outages and bridge partitions off the fabric's own
+    # hierarchy.  Like ``coords``, a staging-time hint -- never part of the
+    # jitted adjacency stream or the engine cache key.
+    labels: np.ndarray | None = dataclasses.field(
         default=None, compare=False, repr=False)
 
     def __post_init__(self):
@@ -879,6 +889,7 @@ def make_process(
     stages through its edge-list builder; no (m, m) host matrix exists
     unless a consumer later asks for the dense ``.base`` view."""
     coords = None
+    labels = None
     if topology == "rgg":
         edges, coords = random_geometric_graph(m, radius, seed)
     elif topology == "er":
@@ -890,8 +901,10 @@ def make_process(
     elif topology == "scale_free":
         edges = scale_free_edges(m, m_attach=m_attach, seed=seed)
     elif topology == "clustered":
-        edges, coords = clustered_edges(m, n_clusters=n_clusters, seed=seed)
+        edges, coords, labels = clustered_edges(m, n_clusters=n_clusters,
+                                                seed=seed)
     else:
         raise ValueError(f"unknown topology: {topology}")
     return GraphProcess(edges=edges, kind=time_varying, drop=drop,
-                        cycle_len=cycle_len, seed=seed + 1, coords=coords)
+                        cycle_len=cycle_len, seed=seed + 1, coords=coords,
+                        labels=labels)

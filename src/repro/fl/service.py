@@ -59,9 +59,12 @@ PARTITIONS: tuple[str, ...] = ("by_labels", "dirichlet")
 
 # spec fields a batch group may vary per cell: the trigger policy and the
 # PRNG seed are *traced* engine arguments, and the sampler seed only shapes
-# the staged index array (also traced).  Everything else is compile-shaping
-# and defines the compatibility signature.
-CELL_FIELDS: tuple[str, ...] = ("policy", "seeds", "sample_seed")
+# the staged index array (also traced).  ``deadline_s`` is pure queue
+# policy -- it never touches the compiled program, so two requests that
+# differ only in deadline still co-batch.  Everything else is
+# compile-shaping and defines the compatibility signature.
+CELL_FIELDS: tuple[str, ...] = ("policy", "seeds", "sample_seed",
+                                "deadline_s")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -105,6 +108,19 @@ class ScenarioSpec:
     straggle_rate: float = 0.0
     bw_walk: float = 0.0
     budget_bytes: float = 0.0
+    # --- fault injection (compile-shaping; zero defaults = disabled) ------
+    cluster_fail_rate: float = 0.0
+    cluster_recover_rate: float = 0.25
+    partition_start: int = -1
+    partition_len: int = 0
+    flap_rate: float = 0.0
+    flap_len: int = 8
+    crash_rate: float = 0.0
+    rejoin_rate: float = 0.25
+    warm_start: bool = False
+    # --- B-connectivity watchdog (compile-shaping; 0 = disabled) ----------
+    watchdog_window: int = 0
+    watchdog_nprop: int = 0
     # --- engine ----------------------------------------------------------
     iters: int = 300
     mix_impl: str = "dense"  # see simulator.SIM_MIX_IMPLS
@@ -117,11 +133,17 @@ class ScenarioSpec:
     # FederatedBatches(seed=sample_seed + s), matching the historical
     # quickstart/sweep protocol (seed + 2)
     sample_seed: int = 2
+    # queue policy (never compile-shaping): a request still waiting in the
+    # service queue ``deadline_s`` seconds after submit is answered with an
+    # error report instead of being launched.  0 = no deadline.
+    deadline_s: float = 0.0
 
     def __post_init__(self):
         object.__setattr__(self, "seeds", tuple(int(s) for s in self.seeds))
         if not self.seeds:
             raise ValueError("seeds must name at least one seed")
+        if self.deadline_s < 0:
+            raise ValueError(f"deadline_s must be >= 0, got {self.deadline_s}")
         if self.topology not in TOPOLOGIES:
             raise ValueError(f"unknown topology {self.topology!r}; "
                              f"allowed: {TOPOLOGIES}")
@@ -154,7 +176,16 @@ class ScenarioSpec:
             mix_impl=self.mix_impl, shards=self.shards, trace=self.trace,
             churn_rate=self.churn_rate, recover_rate=self.recover_rate,
             straggle_rate=self.straggle_rate, bw_walk=self.bw_walk,
-            budget_bytes=self.budget_bytes)
+            budget_bytes=self.budget_bytes,
+            cluster_fail_rate=self.cluster_fail_rate,
+            cluster_recover_rate=self.cluster_recover_rate,
+            partition_start=self.partition_start,
+            partition_len=self.partition_len,
+            flap_rate=self.flap_rate, flap_len=self.flap_len,
+            crash_rate=self.crash_rate, rejoin_rate=self.rejoin_rate,
+            warm_start=self.warm_start,
+            watchdog_window=self.watchdog_window,
+            watchdog_nprop=self.watchdog_nprop)
 
     def signature(self) -> tuple:
         """Batch-compatibility key: every compile-shaping field.
@@ -339,6 +370,12 @@ class ScenarioReport:
     # ``results``/``tx`` empty.  Other rounds keep draining (a poisoned spec
     # must not strand the rest of the queue).
     error: str | None = None
+    # seeds whose trajectory diverged (non-finite loss / consensus error):
+    # their cells are withheld from ``results`` so a NaN can never be read
+    # as an answer, while the finite co-batched cells come back untouched
+    quarantined: tuple[int, ...] = ()
+    # poll rounds this request was relaunched after a contained failure
+    retries: int = 0
 
     @property
     def ok(self) -> bool:
@@ -348,7 +385,12 @@ class ScenarioReport:
         if self.error is not None:
             raise RuntimeError(
                 f"request {self.request_id} failed: {self.error}")
-        return self.results[self.spec.seeds[0] if seed is None else seed]
+        s = self.spec.seeds[0] if seed is None else seed
+        if s in self.quarantined:
+            raise RuntimeError(
+                f"request {self.request_id} seed {s} was quarantined: "
+                "trajectory diverged (non-finite loss/consensus_err)")
+        return self.results[s]
 
     def timing_dict(self) -> dict:
         return {"request_id": self.request_id, "launch_id": self.launch_id,
@@ -368,6 +410,9 @@ class ServiceStats:
     program_misses: int = 0
     padded_cells: int = 0  # bucket-padding overhead cells executed
     failures: int = 0  # requests answered with error-tagged reports
+    retries: int = 0  # failed requests re-queued for another round
+    deadline_expired: int = 0  # requests expired in queue, never launched
+    quarantined: int = 0  # diverged (non-finite) cells withheld
     engine: simulator.EngineCacheStats = dataclasses.field(
         default_factory=simulator.EngineCacheStats)
 
@@ -376,7 +421,9 @@ class ServiceStats:
                 "launches": self.launches, "program_hits": self.program_hits,
                 "program_misses": self.program_misses,
                 "padded_cells": self.padded_cells,
-                "failures": self.failures,
+                "failures": self.failures, "retries": self.retries,
+                "deadline_expired": self.deadline_expired,
+                "quarantined": self.quarantined,
                 "engine_cache": self.engine.as_dict()}
 
 
@@ -386,6 +433,7 @@ class _Pending:
     spec: ScenarioSpec
     sig: tuple
     t_submit: float
+    attempts: int = 0  # launch attempts already consumed (for retry caps)
 
 
 def _bucket(n: int) -> int:
@@ -413,13 +461,29 @@ class ScenarioService:
     ``mix_impl="sharded"`` requests are accepted but execute their cells
     serially (vmap over a shard_map program is unsupported on the pinned
     jax); they still share one compiled engine via the simulator cache.
+
+    Hardening (DESIGN.md "Fault injection & resilience"): a round that
+    fails is retried up to ``max_retries`` times per request with
+    exponential backoff before the error report goes out; a request whose
+    spec carries ``deadline_s`` and is still queued past it is expired
+    without launching; cells whose trajectory diverged to NaN/Inf are
+    quarantined out of the report without touching their co-batched
+    neighbors.
     """
 
-    def __init__(self, provider=None, *, max_cells: int = 16):
+    def __init__(self, provider=None, *, max_cells: int = 16,
+                 max_retries: int = 1, retry_backoff_s: float = 0.05):
         if max_cells < 1:
             raise ValueError(f"max_cells must be >= 1, got {max_cells}")
+        if max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, got {max_retries}")
+        if retry_backoff_s < 0:
+            raise ValueError(
+                f"retry_backoff_s must be >= 0, got {retry_backoff_s}")
         self._stager = _Stager(provider)
         self.max_cells = max_cells
+        self.max_retries = max_retries
+        self.retry_backoff_s = retry_backoff_s
         self._queue: deque[_Pending] = deque()
         self._next_id = 0
         # vmapped-grid cache per engine instance (engines themselves live in
@@ -449,15 +513,40 @@ class ScenarioService:
                                    engine=simulator.engine_cache_stats())
 
     # ------------------------------------------------------------- rounds --
+    def _expire(self) -> list[ScenarioReport]:
+        """Sweeps the queue for requests past their ``deadline_s``: they are
+        answered with error reports instead of being launched (a stale
+        what-if is worth less than the round it would occupy)."""
+        t_now = time.perf_counter()
+        expired = [p for p in self._queue
+                   if p.spec.deadline_s > 0
+                   and t_now - p.t_submit > p.spec.deadline_s]
+        reports: list[ScenarioReport] = []
+        for p in expired:
+            self._queue.remove(p)
+            self._stats.deadline_expired += 1
+            reports.append(ScenarioReport(
+                request_id=p.rid, spec=p.spec, launch_id=-1, results={},
+                tx={}, queue_wait_s=t_now - p.t_submit, stage_s=0.0,
+                run_s=0.0, launch_cells=0, engine_cache_hit=False,
+                program_cache_hit=False, retries=p.attempts,
+                error=(f"DeadlineExceeded: queued "
+                       f"{t_now - p.t_submit:.3f}s > deadline_s="
+                       f"{p.spec.deadline_s}")))
+        return reports
+
     def poll(self) -> list[ScenarioReport]:
         """Serves one batch round; [] when the queue is empty.
 
         A staging/engine failure is contained to the round: the failed
-        requests (already dequeued) come back as error-tagged reports and
-        the rest of the queue keeps draining on later polls -- one poisoned
-        spec must not strand every request behind it in ``serve``."""
+        requests are re-queued (up to ``max_retries`` attempts each, with
+        ``retry_backoff_s * 2**attempt`` backoff) or come back as
+        error-tagged reports, and the rest of the queue keeps draining on
+        later polls -- one poisoned spec must not strand every request
+        behind it in ``serve``."""
+        reports = self._expire()
         if not self._queue:
-            return []
+            return reports
         sig = self._queue[0].sig
         group: list[_Pending] = []
         budget = self.max_cells
@@ -468,16 +557,30 @@ class ScenarioService:
                 budget -= n
                 self._queue.remove(p)
         try:
-            return self._launch(group)
+            return reports + self._launch(group)
         except Exception as e:  # noqa: BLE001 -- contain any round failure
-            self._stats.failures += len(group)
             t_now = time.perf_counter()
-            return [ScenarioReport(
-                request_id=p.rid, spec=p.spec, launch_id=-1, results={},
-                tx={}, queue_wait_s=t_now - p.t_submit, stage_s=0.0,
-                run_s=0.0, launch_cells=0, engine_cache_hit=False,
-                program_cache_hit=False,
-                error=f"{type(e).__name__}: {e}") for p in group]
+            backoff = 0.0
+            for p in group:
+                if p.attempts < self.max_retries:
+                    p.attempts += 1
+                    self._stats.retries += 1
+                    backoff = max(
+                        backoff,
+                        self.retry_backoff_s * 2 ** (p.attempts - 1))
+                    self._queue.append(p)  # back of the queue: FIFO fairness
+                else:
+                    self._stats.failures += 1
+                    reports.append(ScenarioReport(
+                        request_id=p.rid, spec=p.spec, launch_id=-1,
+                        results={}, tx={}, queue_wait_s=t_now - p.t_submit,
+                        stage_s=0.0, run_s=0.0, launch_cells=0,
+                        engine_cache_hit=False, program_cache_hit=False,
+                        retries=p.attempts,
+                        error=f"{type(e).__name__}: {e}"))
+            if backoff:
+                time.sleep(backoff)
+            return reports
 
     def serve(self, specs: Sequence[ScenarioSpec] = ()) -> list[ScenarioReport]:
         """Submit ``specs``, drain the queue, return reports by request id."""
@@ -571,11 +674,23 @@ class ScenarioService:
                              engine_hit=after.hits > before.hits,
                              program_hit=after.misses == before.misses)
 
+    @staticmethod
+    def _diverged(res: SimResult) -> bool:
+        """A cell whose loss or consensus error ever left the finite range
+        is quarantined: NaN/Inf trajectories must never be read as answers."""
+        return not (np.isfinite(res.loss).all()
+                    and np.isfinite(res.consensus_err).all())
+
     def _reports(self, group, cells, results, *, t_start, stage_s, run_s,
                  launch_id, engine_hit, program_hit) -> list[ScenarioReport]:
         per_req: dict[int, dict[int, SimResult]] = {p.rid: {} for p in group}
+        bad: dict[int, list[int]] = {p.rid: [] for p in group}
         for (p, s), res in zip(cells, results):
-            per_req[p.rid][s] = res
+            if self._diverged(res):
+                bad[p.rid].append(s)
+                self._stats.quarantined += 1
+            else:
+                per_req[p.rid][s] = res
         return [ScenarioReport(
             request_id=p.rid, spec=p.spec, launch_id=launch_id,
             results=per_req[p.rid],
@@ -583,4 +698,5 @@ class ScenarioService:
                 for s, r in per_req[p.rid].items()},
             queue_wait_s=t_start - p.t_submit, stage_s=stage_s, run_s=run_s,
             launch_cells=len(cells), engine_cache_hit=engine_hit,
-            program_cache_hit=program_hit) for p in group]
+            program_cache_hit=program_hit, retries=p.attempts,
+            quarantined=tuple(bad[p.rid])) for p in group]

@@ -29,6 +29,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import efhc, topology, triggers
+from repro.core import faults as faults_mod
+from repro.core import flow as flow_mod
 from repro.core import resources as resources_mod
 from repro.core.topology import GraphProcess
 from repro.fl import trace as trace_mod
@@ -103,14 +105,32 @@ def make_sharded_engine(
     # the plan's per-shard tables, stacked (S, ...) and split over the mesh
     tables = (plan.owned, plan.nbr_gid, plan.nbr_loc, plan.mask,
               plan.send_idx, plan.recv_src)
+    n_ctx = len(tables)
     perm_flat = plan.owned.reshape(-1)  # shard-major device order
     inv_perm = jnp.asarray(plan.inv_perm)
 
     rcfg = cfg.resources
+    fcfg = cfg.faults
+    wcfg = cfg.watchdog
+    if fcfg is not None:
+        # per-shard fault tables in the shard's own ELL row layout, stacked
+        # (S, ms, d_max) like the plan tables; keyed by canonical global
+        # edge id, so each shard sees the identical per-edge marks
+        fab = faults_mod.fault_fabric(graph, fcfg)
+        per_shard = [faults_mod.edge_tables_rows(
+                         fab, graph.edges, plan.nbr_gid[s], plan.mask[s],
+                         rows=plan.owned[s]) for s in range(S)]
+        tables = tables + tuple(
+            np.stack([np.asarray(t[i]) for t in per_shard])
+            for i in range(len(faults_mod.FaultTabs._fields)))
+    else:
+        fab = None
 
-    def shard_body(policy_idx, k_bw, k_init, k_state, k_res, alphas, idx_sh,
-                   *tabs):
-        ctx = efhc.ShardCtx(*(t[0] for t in tabs))  # drop the shard dim
+    def shard_body(policy_idx, k_bw, k_init, k_state, k_res, k_fault, alphas,
+                   idx_sh, *tabs):
+        ctx = efhc.ShardCtx(*(t[0] for t in tabs[:n_ctx]))  # drop shard dim
+        ftabs = (faults_mod.FaultTabs(*(t[0] for t in tabs[n_ctx:]))
+                 if fcfg is not None else None)
 
         def global_order(x_local):
             return jax.lax.all_gather(x_local, _AXIS).reshape(-1)[inv_perm]
@@ -124,8 +144,16 @@ def make_sharded_engine(
         # resource state: local rows, fleet-global stream key (replicated)
         res0 = (resources_mod.init_state(rcfg, bw_l, k_res)
                 if rcfg is not None else None)
+        # fault state: local crash/staleness rows, fleet-global cluster
+        # bits + stream key (replicated on every shard)
+        f0 = (faults_mod.init_state(fcfg, fab, k_fault, rows=ctx.owned)
+              if fcfg is not None else None)
+        wd0 = (flow_mod.watchdog_init(ctx.nbr_loc.shape[0],
+                                      ctx.nbr_loc.shape[1])
+               if wcfg is not None else None)
         state = efhc.init_state(w0, bw_l, adj0, k_state,
-                                opt_state=opt.init(w0), resources=res0)
+                                opt_state=opt.init(w0), resources=res0,
+                                faults=f0, watchdog=wd0)
 
         def one_step(st, per):
             ix, alpha = per  # ix: (ms, batch) dataset rows
@@ -133,7 +161,8 @@ def make_sharded_engine(
             st, aux = efhc.step_sharded(
                 cfg, graph, ctx, st, grad_fn=grad_fn, batch=batch,
                 alpha_k=alpha, model_dim=model_dim, m=m, inv_perm=inv_perm,
-                axis_name=_AXIS, policy_idx=policy_idx, opt_update=opt.update)
+                axis_name=_AXIS, policy_idx=policy_idx, opt_update=opt.update,
+                ftabs=ftabs)
             return st, aux._asdict()
 
         def eval_acc(st):
@@ -179,8 +208,10 @@ def make_sharded_engine(
     out_specs = {"v": dev_spec, "loss": dev_spec, "comm_count": dev_spec,
                  "deg": dev_spec, "tx_time": P(), "util": P(),
                  "consensus_err": P(), "acc": P(), "bandwidths": P(_AXIS),
-                 "down_count": P(), "exhausted_count": P()}
-    in_specs = ((P(), P(), P(), P(), P(), P(), P(None, _AXIS, None))
+                 "down_count": P(), "exhausted_count": P(),
+                 "fault_down_count": P(), "stale_max": P(),
+                 "window_connected": P(), "window_needed": P()}
+    in_specs = ((P(), P(), P(), P(), P(), P(), P(), P(None, _AXIS, None))
                 + (P(_AXIS),) * len(tables))
     mapped = _shard_map(shard_body, mesh, in_specs, out_specs)
 
@@ -190,10 +221,12 @@ def make_sharded_engine(
         k_bw, k_init, k_state = jax.random.split(key, 3)
         k_res = (resources_mod.resource_key(key, rcfg)
                  if rcfg is not None else k_state)
+        k_fault = (faults_mod.fault_key(key, fcfg)
+                   if fcfg is not None else k_state)
         alphas = sched(jnp.arange(T))
         idx_p = jnp.asarray(idx)[:, perm_flat]  # shard-major rows
-        out = mapped(policy_idx, k_bw, k_init, k_state, k_res, alphas, idx_p,
-                     *[jnp.asarray(t) for t in tables])
+        out = mapped(policy_idx, k_bw, k_init, k_state, k_res, k_fault,
+                     alphas, idx_p, *[jnp.asarray(t) for t in tables])
         # per-device channels come back in shard-major order; restore the
         # global device order the SimResult contract promises
         for f in ("v", "loss", "comm_count", "deg"):

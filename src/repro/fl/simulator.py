@@ -32,6 +32,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import efhc, triggers
+from repro.core import faults as faults_mod
+from repro.core import flow as flow_mod
 from repro.core import resources as resources_mod
 from repro.core.topology import GraphProcess
 from repro.data.loader import FederatedBatches
@@ -119,6 +121,22 @@ class SimConfig:
     straggle_rate: float = 0.0  # P(device delays its Event-4 update)
     bw_walk: float = 0.0  # log-space bandwidth random-walk std per iter
     budget_bytes: float = 0.0  # per-device broadcast budget; 0 = unlimited
+    # correlated fault injection (DESIGN.md "Fault injection & resilience"):
+    # same contract -- all-default knobs keep the engines on the
+    # structurally identical pre-fault path
+    cluster_fail_rate: float = 0.0  # P(an up cluster goes down) per iter
+    cluster_recover_rate: float = 0.25  # P(a down cluster recovers)
+    partition_start: int = -1  # first iter of the scripted bridge partition
+    partition_len: int = 0  # partition window length; 0 disables
+    flap_rate: float = 0.0  # fraction of base edges marked flapping
+    flap_len: int = 8  # flap square-wave half-period (iterations)
+    crash_rate: float = 0.0  # P(device crashes) per iteration
+    rejoin_rate: float = 0.25  # P(crashed device rejoins) per iteration
+    warm_start: bool = False  # rejoin from live-neighbor average, not stale theta
+    # in-scan B-connectivity watchdog: sliding union window to certify
+    # (0 = off); propagation rounds per iteration (0 = auto)
+    watchdog_window: int = 0
+    watchdog_nprop: int = 0
 
     def __post_init__(self):
         """Fail-fast field validation (DESIGN.md "Scenario service").
@@ -162,6 +180,8 @@ class SimConfig:
                 f"densify (T, m, m) at fleet scale")
         triggers.check_sigma_n(self.sigma_n)
         self.resources()  # ResourceConfig.__post_init__ validates the knobs
+        self.faults()  # FaultConfig.__post_init__ validates the knobs
+        self.watchdog()  # WatchdogConfig.__post_init__ validates the knobs
 
     def resources(self) -> resources_mod.ResourceConfig | None:
         """The run's ``ResourceConfig``, or None when every knob is at its
@@ -177,6 +197,28 @@ class SimConfig:
             straggle_rate=self.straggle_rate, bw_walk=self.bw_walk,
             budget_bytes=self.budget_bytes)
         return rcfg if rcfg.enabled else None
+
+    def faults(self) -> faults_mod.FaultConfig | None:
+        """The run's ``FaultConfig``, or None when disabled.  Like the
+        resource stream, the fault stream derives from the TRACED root key
+        (``FaultConfig.seed`` stays 0 so service-batched cells match solo
+        runs); the staging-time flap assignment is a scenario property."""
+        fcfg = faults_mod.FaultConfig(
+            cluster_fail_rate=self.cluster_fail_rate,
+            cluster_recover_rate=self.cluster_recover_rate,
+            partition_start=self.partition_start,
+            partition_len=self.partition_len,
+            flap_rate=self.flap_rate, flap_len=self.flap_len,
+            crash_rate=self.crash_rate, rejoin_rate=self.rejoin_rate,
+            warm_start=self.warm_start)
+        return fcfg if fcfg.enabled else None
+
+    def watchdog(self) -> flow_mod.WatchdogConfig | None:
+        """The run's ``WatchdogConfig``, or None when ``watchdog_window``
+        is 0 (the engines then stay structurally watchdog-free)."""
+        wcfg = flow_mod.WatchdogConfig(window=self.watchdog_window,
+                                       n_prop=self.watchdog_nprop)
+        return wcfg if wcfg.enabled else None
 
 
 @dataclasses.dataclass
@@ -208,6 +250,14 @@ class SimResult:
     # runs without a resource process (None only from pre-resource pickles)
     down_count: np.ndarray | None = None
     exhausted_count: np.ndarray | None = None
+    # fault-injection channels (trace.FAULT_CHANNELS): (T,) int32 devices
+    # silenced by crash/cluster outage, and worst rejoin staleness in flight
+    fault_down_count: np.ndarray | None = None
+    stale_max: np.ndarray | None = None
+    # watchdog channels (trace.WATCHDOG_CHANNELS): (T,) bool / int32 --
+    # all-True / all-zero for runs without a watchdog
+    window_connected: np.ndarray | None = None
+    window_needed: np.ndarray | None = None
 
     @property
     def m(self) -> int:
@@ -264,6 +314,8 @@ def _efhc_cfg(sim: SimConfig) -> efhc.EFHCConfig:
         gamma=None,
         mix_impl=sim.mix_impl,
         resources=sim.resources(),
+        faults=sim.faults(),
+        watchdog=sim.watchdog(),
     )
 
 
@@ -271,6 +323,145 @@ def _model_dim(sim: SimConfig) -> int:
     """Exact parameter count = flat-view width D (the bytes a broadcast
     actually ships).  Subsumed by ``model_spec(sim).flat_dim``."""
     return model_spec(sim).flat_dim
+
+
+class _EngineCore:
+    """Shared staging + scan closures behind both engine entry points.
+
+    ``make_engine`` runs ``init`` + one ``span`` over the whole horizon;
+    ``run_checkpointed`` runs the SAME ``span`` over consecutive segments,
+    persisting the carry between them.  Because the two paths trace the
+    verbatim-identical chunk body, a resumed run replays the uninterrupted
+    program bit for bit (pinned by tests/test_checkpoint_resume.py)."""
+
+    def __init__(self, sim: SimConfig, graph: GraphProcess, *,
+                 eval_every: int, x, y, eval_fn):
+        self.E = max(1, int(eval_every))
+        self.m = sim.m
+        self.sim = sim
+        self.graph = graph
+        self.trace = trace_mod.check_trace_mode(sim.trace)
+        self.spec = model_spec(sim)
+        self.opt = init_opt(sim.optimizer)
+        self.cfg = _efhc_cfg(sim)
+        self.sched = paper_diminishing(sim.alpha0, gamma=1.0, theta=0.5)
+        self.model_dim = self.spec.flat_dim
+        self.x_all, self.y_all = jnp.asarray(x), jnp.asarray(y)
+        self.eval_dev = eval_fn.device if isinstance(eval_fn, EvalFn) else eval_fn
+        # sparse impls carry Event-1 state as the ELL slot mask of G^(k-1);
+        # the watchdog needs the neighbor list under EVERY impl (dense comm
+        # matrices are gathered into its slot layout)
+        self.sparse = self.cfg.mix_impl in efhc.SPARSE_MIX_IMPLS
+        self.nl = (graph.neighbors()
+                   if self.sparse or self.cfg.watchdog is not None else None)
+        self.rcfg = self.cfg.resources
+        self.fcfg = self.cfg.faults
+        self.wcfg = self.cfg.watchdog
+        if self.fcfg is not None:
+            self.fab = faults_mod.fault_fabric(graph, self.fcfg)
+            if self.sparse:
+                self.ftabs = faults_mod.edge_tables_rows(
+                    self.fab, graph.edges, self.nl.idx, self.nl.mask)
+            else:
+                self.ftabs = faults_mod.edge_tables_dense(
+                    self.fab, graph.edges)
+        else:
+            self.fab, self.ftabs = None, None
+
+    def init(self, seed) -> tuple[efhc.EFHCState, jax.Array]:
+        """Initial carry + bandwidths for a run seed (pure, jit-able)."""
+        sim, graph = self.sim, self.graph
+        key = jax.random.PRNGKey(seed)
+        k_bw, k_init, k_state = jax.random.split(key, 3)
+        bw = triggers.sample_bandwidths(k_bw, self.m, sim.b_mean, sim.sigma_n)
+        w0 = self.spec.init_stack(k_init, self.m)
+        adj0 = (graph.adjacency_ell(0, self.nl) if self.sparse
+                else graph.adjacency(0))
+        res0 = (resources_mod.init_state(
+                    self.rcfg, bw, resources_mod.resource_key(key, self.rcfg))
+                if self.rcfg is not None else None)
+        f0 = (faults_mod.init_state(
+                  self.fcfg, self.fab, faults_mod.fault_key(key, self.fcfg))
+              if self.fcfg is not None else None)
+        wd0 = (flow_mod.watchdog_init(self.m, self.nl.idx.shape[1])
+               if self.wcfg is not None else None)
+        state = efhc.init_state(w0, bw, adj0, k_state,
+                                opt_state=self.opt.init(w0), resources=res0,
+                                faults=f0, watchdog=wd0)
+        return state, bw
+
+    def trace_ys(self, aux: efhc.StepAux) -> dict:
+        """Per-iteration scan ys: the (m, m) float P matrix is never
+        carried (SimResult doesn't expose it) and the bool link matrices
+        are stored per ``sim.trace`` -- dense, bit-packed uint32 words,
+        or row-sum summaries only (DESIGN.md "Trace modes").  The row
+        sums come from StepAux directly, so under trace="summary" the
+        ys never touch aux.comm/aux.adj at all -- which is what lets
+        the sparse mix impls dead-code-eliminate the dense scatters."""
+        ys = {"loss": aux.loss, "tx_time": aux.tx_time, "util": aux.util,
+              "v": aux.v, "consensus_err": aux.consensus_err,
+              "comm_count": aux.comm_count, "deg": aux.deg,
+              "down_count": aux.down_count,
+              "exhausted_count": aux.exhausted_count,
+              "fault_down_count": aux.fault_down_count,
+              "stale_max": aux.stale_max,
+              "window_connected": aux.window_connected,
+              "window_needed": aux.window_needed}
+        if self.trace == "full":
+            ys["comm"], ys["adj"] = aux.comm, aux.adj
+        elif self.trace == "packed":
+            ys["comm"] = trace_mod.pack_links(aux.comm)
+            ys["adj"] = trace_mod.pack_links(aux.adj)
+        return ys
+
+    def span(self, policy_idx, state: efhc.EFHCState, idx, alphas, *,
+             final: bool):
+        """Scans ``idx.shape[0]`` iterations from ``state`` (chunked by
+        ``E``, on-device eval at the chunk firsts).  ``final`` adds the
+        legacy k == T-1 eval overwrite -- True for a whole-horizon run and
+        the last checkpoint segment, False for interior segments."""
+        policy_idx = jnp.asarray(policy_idx, jnp.int32)
+        T_span, E = idx.shape[0], self.E
+
+        def one_step(st, per):
+            ix, alpha = per  # ix: (m, batch) dataset rows for this iteration
+            batch = (self.x_all[ix], self.y_all[ix])
+            st, aux = efhc.step(self.cfg, self.graph, st,
+                                grad_fn=self.spec.grad_fn, batch=batch,
+                                alpha_k=alpha, model_dim=self.model_dim,
+                                policy_idx=policy_idx, nl=self.nl,
+                                opt_update=self.opt.update, ftabs=self.ftabs)
+            return st, self.trace_ys(aux)
+
+        def eval_acc(st):
+            if self.eval_dev is None:
+                return jnp.asarray(0.0, jnp.float32)
+            return self.eval_dev(st.w).astype(jnp.float32)
+
+        def chunk_body(st, chunk):
+            # eval after the chunk's first step = iterations 0, E, 2E, ...
+            # (the legacy loop's schedule), then scan the remaining E-1 steps
+            st, aux0 = one_step(st, jax.tree.map(lambda a: a[0], chunk))
+            acc = eval_acc(st)
+            st, auxr = jax.lax.scan(one_step, st, jax.tree.map(lambda a: a[1:], chunk))
+            aux = jax.tree.map(lambda a, b: jnp.concatenate([a[None], b], 0), aux0, auxr)
+            return st, (aux, acc)
+
+        per = (idx, alphas)
+        n_full, rem = divmod(T_span, E)
+        head = jax.tree.map(
+            lambda a: a[: n_full * E].reshape((n_full, E) + a.shape[1:]), per)
+        state, (aux_h, accs) = jax.lax.scan(chunk_body, state, head)
+        aux = jax.tree.map(lambda a: a.reshape((n_full * E,) + a.shape[2:]), aux_h)
+        acc_t = jnp.repeat(accs, E, total_repeat_length=n_full * E)
+        if rem:
+            tail = jax.tree.map(lambda a: a[n_full * E:], per)
+            state, (aux_r, acc_r) = chunk_body(state, tail)
+            aux = jax.tree.map(lambda a, b: jnp.concatenate([a, b], 0), aux, aux_r)
+            acc_t = jnp.concatenate([acc_t, jnp.full((rem,), acc_r)])
+        if final:
+            acc_t = acc_t.at[T_span - 1].set(eval_acc(state))  # legacy's k == T-1 eval
+        return state, {**aux, "acc": acc_t}
 
 
 def make_engine(
@@ -306,96 +497,16 @@ def make_engine(
             sim, graph, T=T, eval_every=eval_every, x=x, y=y, eval_fn=eval_fn)
         return eng, model_dim
 
-    E = max(1, int(eval_every))
-    m = sim.m
-    trace = trace_mod.check_trace_mode(sim.trace)
-    spec = model_spec(sim)
-    grad_fn = spec.grad_fn
-    opt = init_opt(sim.optimizer)
-    cfg = _efhc_cfg(sim)
-    sched = paper_diminishing(sim.alpha0, gamma=1.0, theta=0.5)
-    model_dim = spec.flat_dim
-    x_all, y_all = jnp.asarray(x), jnp.asarray(y)
-    eval_dev = eval_fn.device if isinstance(eval_fn, EvalFn) else eval_fn
-    # sparse impls carry Event-1 state as the ELL slot mask of G^(k-1)
-    nl = graph.neighbors() if cfg.mix_impl in efhc.SPARSE_MIX_IMPLS else None
-
-    rcfg = cfg.resources
+    core = _EngineCore(sim, graph, eval_every=eval_every, x=x, y=y,
+                       eval_fn=eval_fn)
 
     def engine(policy_idx, seed, idx):
-        policy_idx = jnp.asarray(policy_idx, jnp.int32)
-        key = jax.random.PRNGKey(seed)
-        k_bw, k_init, k_state = jax.random.split(key, 3)
-        bw = triggers.sample_bandwidths(k_bw, m, sim.b_mean, sim.sigma_n)
-        w0 = spec.init_stack(k_init, m)
-        adj0 = graph.adjacency(0) if nl is None else graph.adjacency_ell(0, nl)
-        res0 = (resources_mod.init_state(
-                    rcfg, bw, resources_mod.resource_key(key, rcfg))
-                if rcfg is not None else None)
-        state = efhc.init_state(w0, bw, adj0, k_state, opt_state=opt.init(w0),
-                                resources=res0)
-        alphas = sched(jnp.arange(T))
+        state, bw = core.init(seed)
+        alphas = core.sched(jnp.arange(T))
+        _, out = core.span(policy_idx, state, idx, alphas, final=True)
+        return {**out, "bandwidths": bw}
 
-        def trace_ys(aux: efhc.StepAux) -> dict:
-            """Per-iteration scan ys: the (m, m) float P matrix is never
-            carried (SimResult doesn't expose it) and the bool link matrices
-            are stored per ``sim.trace`` -- dense, bit-packed uint32 words,
-            or row-sum summaries only (DESIGN.md "Trace modes").  The row
-            sums come from StepAux directly, so under trace="summary" the
-            ys never touch aux.comm/aux.adj at all -- which is what lets
-            the sparse mix impls dead-code-eliminate the dense scatters."""
-            ys = {"loss": aux.loss, "tx_time": aux.tx_time, "util": aux.util,
-                  "v": aux.v, "consensus_err": aux.consensus_err,
-                  "comm_count": aux.comm_count, "deg": aux.deg,
-                  "down_count": aux.down_count,
-                  "exhausted_count": aux.exhausted_count}
-            if trace == "full":
-                ys["comm"], ys["adj"] = aux.comm, aux.adj
-            elif trace == "packed":
-                ys["comm"] = trace_mod.pack_links(aux.comm)
-                ys["adj"] = trace_mod.pack_links(aux.adj)
-            return ys
-
-        def one_step(st, per):
-            ix, alpha = per  # ix: (m, batch) dataset rows for this iteration
-            batch = (x_all[ix], y_all[ix])
-            st, aux = efhc.step(cfg, graph, st, grad_fn=grad_fn, batch=batch,
-                                alpha_k=alpha, model_dim=model_dim,
-                                policy_idx=policy_idx, nl=nl,
-                                opt_update=opt.update)
-            return st, trace_ys(aux)
-
-        def eval_acc(st):
-            if eval_dev is None:
-                return jnp.asarray(0.0, jnp.float32)
-            return eval_dev(st.w).astype(jnp.float32)
-
-        def chunk_body(st, chunk):
-            # eval after the chunk's first step = iterations 0, E, 2E, ...
-            # (the legacy loop's schedule), then scan the remaining E-1 steps
-            st, aux0 = one_step(st, jax.tree.map(lambda a: a[0], chunk))
-            acc = eval_acc(st)
-            st, auxr = jax.lax.scan(one_step, st, jax.tree.map(lambda a: a[1:], chunk))
-            aux = jax.tree.map(lambda a, b: jnp.concatenate([a[None], b], 0), aux0, auxr)
-            return st, (aux, acc)
-
-        per = (idx, alphas)
-        n_full, rem = divmod(T, E)
-        head = jax.tree.map(
-            lambda a: a[: n_full * E].reshape((n_full, E) + a.shape[1:]), per)
-        state, (aux_h, accs) = jax.lax.scan(chunk_body, state, head)
-        aux = jax.tree.map(lambda a: a.reshape((n_full * E,) + a.shape[2:]), aux_h)
-        acc_t = jnp.repeat(accs, E, total_repeat_length=n_full * E)
-        if rem:
-            tail = jax.tree.map(lambda a: a[n_full * E:], per)
-            state, (aux_r, acc_r) = chunk_body(state, tail)
-            aux = jax.tree.map(lambda a, b: jnp.concatenate([a, b], 0), aux, aux_r)
-            acc_t = jnp.concatenate([acc_t, jnp.full((rem,), acc_r)])
-        acc_t = acc_t.at[T - 1].set(eval_acc(state))  # legacy's k == T-1 eval
-
-        return {**aux, "acc": acc_t, "bandwidths": bw}
-
-    return engine, model_dim
+    return engine, core.model_dim
 
 
 # Compiled-engine cache for run(): the engine is policy- and seed-agnostic
@@ -514,6 +625,11 @@ def _cached_engine(sim: SimConfig, graph: GraphProcess, *, T: int,
            sim.trace, int(sim.shards), T, max(1, int(eval_every)),
            sim.churn_rate, sim.recover_rate, sim.straggle_rate, sim.bw_walk,
            sim.budget_bytes,
+           sim.cluster_fail_rate, sim.cluster_recover_rate,
+           int(sim.partition_start), int(sim.partition_len),
+           sim.flap_rate, int(sim.flap_len), sim.crash_rate,
+           sim.rejoin_rate, bool(sim.warm_start),
+           int(sim.watchdog_window), int(sim.watchdog_nprop),
            _graph_cache_key(graph), id(x), id(y), id(eval_fn))
 
     def build():
@@ -545,6 +661,10 @@ def _result_from_device(out: dict, model_dim: int, trace: str) -> SimResult:
               if "adj" in host else None),
         down_count=np.asarray(host["down_count"], np.int32),
         exhausted_count=np.asarray(host["exhausted_count"], np.int32),
+        fault_down_count=np.asarray(host["fault_down_count"], np.int32),
+        stale_max=np.asarray(host["stale_max"], np.int32),
+        window_connected=np.asarray(host["window_connected"], bool),
+        window_needed=np.asarray(host["window_needed"], np.int32),
     )
 
 
@@ -607,19 +727,31 @@ def _run_python(
 
     cfg = _efhc_cfg(sim)
     sched = paper_diminishing(sim.alpha0, gamma=1.0, theta=0.5)
-    nl = graph.neighbors() if cfg.mix_impl in efhc.SPARSE_MIX_IMPLS else None
-    adj0 = graph.adjacency(0) if nl is None else graph.adjacency_ell(0, nl)
+    sparse = cfg.mix_impl in efhc.SPARSE_MIX_IMPLS
+    nl = (graph.neighbors()
+          if sparse or cfg.watchdog is not None else None)
+    adj0 = graph.adjacency_ell(0, nl) if sparse else graph.adjacency(0)
     rcfg = cfg.resources
     res0 = (resources_mod.init_state(
                 rcfg, bw, resources_mod.resource_key(key, rcfg))
             if rcfg is not None else None)
+    fcfg = cfg.faults
+    if fcfg is not None:
+        fab = faults_mod.fault_fabric(graph, fcfg)
+        ftabs = (faults_mod.edge_tables_rows(fab, graph.edges, nl.idx, nl.mask)
+                 if sparse else faults_mod.edge_tables_dense(fab, graph.edges))
+        f0 = faults_mod.init_state(fcfg, fab, faults_mod.fault_key(key, fcfg))
+    else:
+        ftabs, f0 = None, None
+    wd0 = (flow_mod.watchdog_init(m, nl.idx.shape[1])
+           if cfg.watchdog is not None else None)
     state = efhc.init_state(w0, bw, adj0, k_state, opt_state=opt.init(w0),
-                            resources=res0)
+                            resources=res0, faults=f0, watchdog=wd0)
 
     step_jit = jax.jit(
         lambda st, batch, alpha: efhc.step(
             cfg, graph, st, grad_fn=grad_fn, batch=batch, alpha_k=alpha,
-            model_dim=model_dim, nl=nl, opt_update=opt.update
+            model_dim=model_dim, nl=nl, opt_update=opt.update, ftabs=ftabs
         )
     )
 
@@ -634,6 +766,10 @@ def _run_python(
     cons_t = np.zeros(T, np.float32)
     down_t = np.zeros(T, np.int32)
     exh_t = np.zeros(T, np.int32)
+    fdown_t = np.zeros(T, np.int32)
+    stale_t = np.zeros(T, np.int32)
+    wconn_t = np.ones(T, bool)
+    wneed_t = np.zeros(T, np.int32)
 
     last_acc = 0.0
     for k in range(T):
@@ -648,6 +784,10 @@ def _run_python(
         cons_t[k] = float(aux.consensus_err)
         down_t[k] = int(aux.down_count)
         exh_t[k] = int(aux.exhausted_count)
+        fdown_t[k] = int(aux.fault_down_count)
+        stale_t[k] = int(aux.stale_max)
+        wconn_t[k] = bool(aux.window_connected)
+        wneed_t[k] = int(aux.window_needed)
         if eval_fn is not None and (k % eval_every == 0 or k == T - 1):
             last_acc = eval_fn(jax.device_get(state.w))
         acc_t[k] = last_acc
@@ -666,4 +806,132 @@ def _run_python(
         consensus_err=cons_t, model_dim=model_dim,
         bandwidths=np.asarray(bw), trace=trace, _comm=comm_s, _adj=adj_s,
         down_count=down_t, exhausted_count=exh_t,
+        fault_down_count=fdown_t, stale_max=stale_t,
+        window_connected=wconn_t, window_needed=wneed_t,
     )
+
+
+# ---------------------------------------------------------------------------
+# crash-safe checkpoint/resume (DESIGN.md "Fault injection & resilience")
+# ---------------------------------------------------------------------------
+
+class CheckpointHalt(RuntimeError):
+    """Raised by ``run_checkpointed(halt_after=...)`` right after a segment
+    checkpoint lands -- the test harness's deterministic stand-in for a
+    mid-run crash (kill -9 between segments)."""
+
+
+def run_checkpointed(
+    sim: SimConfig,
+    graph: GraphProcess,
+    batches: FederatedBatches,
+    eval_fn: EvalFn | None = None,
+    *,
+    ckpt_dir: str,
+    checkpoint_every: int,
+    eval_every: int = 10,
+    resume: bool = True,
+    halt_after: int | None = None,
+) -> SimResult:
+    """Whole-horizon simulation with crash-safe segment checkpoints.
+
+    The horizon is cut into segments of ``checkpoint_every`` iterations
+    (which must be a multiple of ``eval_every``, so segment boundaries fall
+    on chunk boundaries).  Each segment scans the SAME compiled chunk body
+    the uninterrupted engine scans (``_EngineCore.span``), then persists the
+    full carry -- ``EFHCState`` including ``opt_state``, ``ResourceState``,
+    ``FaultState``, watchdog ages -- plus the segment's trajectories through
+    the msgpack checkpoint layer (atomic tmp+rename writes; one
+    ``step_<end>.msgpack`` per segment, never rotated).
+
+    A later call with the same ``ckpt_dir`` and ``resume=True`` (the
+    default) restores the newest carry and continues from there, re-running
+    nothing; the assembled ``SimResult`` is bit-identical on EVERY channel
+    to the uninterrupted checkpointed run (tests/test_checkpoint_resume.py).
+    Relative to the one-shot ``run()`` engine the integer/bool channels
+    (triggers, link counts, fault/watchdog verdicts) also match exactly;
+    float channels agree to ULP-level tolerance only, because the one-shot
+    engine compiles init + the whole horizon as a single XLA program with
+    different fusion boundaries than the per-segment programs.
+    ``halt_after=n`` raises ``CheckpointHalt`` after ``n`` segments --
+    the deterministic crash used by the resume tests and the example.
+
+    Batch staging stays deterministic across processes:
+    ``FederatedBatches.stage(T)`` draws from the construction-seeded rng,
+    so a fresh ``batches`` object in the resuming process stages the
+    identical (T, m, batch) index tensor.
+    """
+    from repro.checkpoint import msgpack_ckpt
+
+    if sim.mix_impl == "sharded":
+        raise ValueError(
+            "run_checkpointed drives the single-device chunked engine; "
+            "mix_impl='sharded' is not checkpointable yet")
+    E = max(1, int(eval_every))
+    C = int(checkpoint_every)
+    if C < 1 or C % E != 0:
+        raise ValueError(
+            f"checkpoint_every must be a positive multiple of eval_every "
+            f"(segment boundaries must fall on eval-chunk boundaries); got "
+            f"checkpoint_every={checkpoint_every}, eval_every={eval_every}")
+    T = sim.iters
+    core = _EngineCore(sim, graph, eval_every=E, x=batches.x, y=batches.y,
+                       eval_fn=eval_fn)
+    idx = jnp.asarray(batches.stage(T))
+    pol = triggers.policy_index(sim.policy)
+    meta = {"sim": dataclasses.asdict(sim), "T": int(T), "eval_every": int(E),
+            "checkpoint_every": int(C)}
+
+    done = 0
+    ys_parts: list[dict] = []
+    state = bw = None
+    if resume:
+        ends = msgpack_ckpt._steps(ckpt_dir)
+        for end in ends:
+            payload = msgpack_ckpt.restore(ckpt_dir, end)
+            if payload.get("meta") != meta:
+                raise ValueError(
+                    f"checkpoint {ckpt_dir}/step_{end} was written by a "
+                    f"different scenario (sim/T/eval_every/checkpoint_every "
+                    f"mismatch); refusing to resume into it")
+            ys_parts.append(payload["ys"])
+            if end == ends[-1]:
+                # leaves come back as exact-dtype numpy; None fields are
+                # preserved by the codec and skipped by tree.map
+                state = jax.tree.map(jnp.asarray, payload["state"])
+                bw = jnp.asarray(payload["bandwidths"])
+                done = int(end)
+    if state is None:
+        state, bw = core.init(int(sim.seed))
+
+    # one jitted runner per ``final`` flag; jax re-specializes on segment
+    # length automatically (at most two lengths: C and the T % C tail)
+    seg_mid = jax.jit(lambda p, st, ix, al: core.span(p, st, ix, al,
+                                                      final=False))
+    seg_fin = jax.jit(lambda p, st, ix, al: core.span(p, st, ix, al,
+                                                      final=True))
+
+    segments_run = 0
+    while done < T:
+        end = min(done + C, T)
+        runner = seg_fin if end == T else seg_mid
+        alphas = core.sched(jnp.arange(done, end))
+        state, out = runner(pol, state, idx[done:end], alphas)
+        ys_host = jax.device_get(out)
+        ys_parts.append(ys_host)
+        msgpack_ckpt.save(
+            ckpt_dir, end,
+            {"meta": meta, "end": int(end), "state": state,
+             "bandwidths": bw, "ys": ys_host},
+            keep=0)  # keep every segment: earlier ys are part of the result
+        done = end
+        segments_run += 1
+        if halt_after is not None and segments_run >= halt_after and done < T:
+            raise CheckpointHalt(
+                f"halted after {segments_run} segment(s) at iteration {done} "
+                f"(checkpoint {ckpt_dir}/step_{done}.msgpack)")
+
+    out_all = {k: np.concatenate([np.asarray(p[k]) for p in ys_parts], axis=0)
+               for k in ys_parts[0]}
+    out_all["bandwidths"] = np.asarray(jax.device_get(bw))
+    return _result_from_device(out_all, core.model_dim, sim.trace)

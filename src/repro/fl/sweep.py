@@ -71,6 +71,12 @@ class SweepResult:
     # resource channels (S, P, T) int32; all-zero without a resource process
     down_count: np.ndarray | None = None
     exhausted_count: np.ndarray | None = None
+    # fault channels (S, P, T) int32; all-zero without a fault process
+    fault_down_count: np.ndarray | None = None
+    stale_max: np.ndarray | None = None
+    # watchdog channels (S, P, T); all-True / all-zero without a watchdog
+    window_connected: np.ndarray | None = None
+    window_needed: np.ndarray | None = None
 
     @property
     def m(self) -> int:
@@ -101,6 +107,14 @@ class SweepResult:
                         else self.down_count[s, p]),
             exhausted_count=(None if self.exhausted_count is None
                              else self.exhausted_count[s, p]),
+            fault_down_count=(None if self.fault_down_count is None
+                              else self.fault_down_count[s, p]),
+            stale_max=(None if self.stale_max is None
+                       else self.stale_max[s, p]),
+            window_connected=(None if self.window_connected is None
+                              else self.window_connected[s, p]),
+            window_needed=(None if self.window_needed is None
+                           else self.window_needed[s, p]),
         )
 
     @property
@@ -181,6 +195,10 @@ def run_sweep(
         _adj=(np.asarray(out["adj"], link_dtype) if "adj" in out else None),
         down_count=np.asarray(out["down_count"], np.int32),
         exhausted_count=np.asarray(out["exhausted_count"], np.int32),
+        fault_down_count=np.asarray(out["fault_down_count"], np.int32),
+        stale_max=np.asarray(out["stale_max"], np.int32),
+        window_connected=np.asarray(out["window_connected"], bool),
+        window_needed=np.asarray(out["window_needed"], np.int32),
     )
 
 
@@ -211,6 +229,10 @@ def _run_sweep_sharded(sim, graph, batches_factory, eval_fn, *,
         trace=trace_mod.check_trace_mode(sim.trace),
         down_count=stack("down_count", np.int32),
         exhausted_count=stack("exhausted_count", np.int32),
+        fault_down_count=stack("fault_down_count", np.int32),
+        stale_max=stack("stale_max", np.int32),
+        window_connected=stack("window_connected", bool),
+        window_needed=stack("window_needed", np.int32),
     )
 
 

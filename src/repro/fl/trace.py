@@ -37,6 +37,16 @@ WORD = 32  # bits per packed word
 # process -- SimResult/SweepResult carry them as optional trajectories.
 RESOURCE_CHANNELS: tuple[str, ...] = ("down_count", "exhausted_count")
 
+# fault-injection scan channels (same contract): devices silenced by a
+# crash or cluster outage, and the worst rejoin staleness in flight
+FAULT_CHANNELS: tuple[str, ...] = ("fault_down_count", "stale_max")
+
+# in-scan B-connectivity watchdog channels (DESIGN.md "Fault injection &
+# resilience"): per-iteration union-window connectivity verdict and the
+# smallest window that would connect -- the empirical-B certificate input,
+# available even under trace="summary" where no link matrices survive
+WATCHDOG_CHANNELS: tuple[str, ...] = ("window_connected", "window_needed")
+
 
 def check_trace_mode(trace: str) -> str:
     if trace not in TRACE_MODES:

@@ -7,6 +7,8 @@ interpreter.  Modes:
 
     python tests/sharded_worker.py golden   # m=8, 8 shards vs golden artifact
     python tests/sharded_worker.py parity   # m=256, 8 shards vs single device
+    python tests/sharded_worker.py fabrics  # scale-free/clustered + dynamics
+    python tests/sharded_worker.py faults   # fault stack + watchdog parity
 
 Prints "SHARDED-WORKER-OK" on success; any assertion failure exits nonzero
 with a traceback.  Invoked by tests/test_golden_trajectory.py and
@@ -160,8 +162,47 @@ def check_fabrics():
     np.testing.assert_allclose(sh.consensus_err, ref.consensus_err, rtol=1e-5)
 
 
+def check_faults():
+    """ISSUE 10 acceptance: the sharded engine (8 shards) realizes the
+    IDENTICAL fault stream and watchdog verdicts as the single-device
+    sparse engine under the full fault stack -- cluster outages, a
+    scripted bridge partition, flapping links, crash/rejoin with warm
+    start, and the B-connectivity watchdog (pmax halo propagation)."""
+    import jax
+
+    assert jax.device_count() >= 8, jax.device_count()
+    m, T, dim = 256, 6, 32
+    x, y = image_dataset(1024, seed=0, dim=dim)
+    rng = np.random.default_rng(0)
+    parts = [np.sort(p) for p in np.array_split(rng.permutation(len(y)), m)]
+    sim = SimConfig(m=m, iters=T, dim=dim, r=50.0, seed=0, trace="summary",
+                    policy="zero", cluster_fail_rate=0.15,
+                    cluster_recover_rate=0.3, partition_start=2,
+                    partition_len=2, flap_rate=0.2, flap_len=2,
+                    crash_rate=0.1, rejoin_rate=0.3, warm_start=True,
+                    watchdog_window=3)
+    mk = lambda: FederatedBatches(x, y, parts, sim.batch, seed=2)
+    graph = make_process(m, "clustered", time_varying="edge_dropout",
+                         drop=0.3, seed=0)
+    ref = run(dataclasses.replace(sim, mix_impl="sparse"), graph, mk(),
+              None, eval_every=T)
+    sh = run(dataclasses.replace(sim, mix_impl="sharded", shards=8), graph,
+             mk(), None, eval_every=T)
+    assert np.asarray(ref.fault_down_count).max() > 0, "faults must engage"
+    for f in ("v", "comm_count", "deg", "fault_down_count", "stale_max",
+              "window_connected", "window_needed", "bandwidths"):
+        assert (np.asarray(getattr(sh, f))
+                == np.asarray(getattr(ref, f))).all(), \
+            f"faults: sharded != single-device on {f}"
+    for f in ("loss", "tx_time", "util"):
+        np.testing.assert_allclose(
+            np.asarray(getattr(sh, f)), np.asarray(getattr(ref, f)),
+            atol=1e-4, err_msg=f"faults: sharded vs single-device {f}")
+    np.testing.assert_allclose(sh.consensus_err, ref.consensus_err, rtol=1e-5)
+
+
 if __name__ == "__main__":
     mode = sys.argv[1] if len(sys.argv) > 1 else "parity"
     {"golden": check_golden, "parity": check_parity,
-     "fabrics": check_fabrics}[mode]()
+     "fabrics": check_fabrics, "faults": check_faults}[mode]()
     print("SHARDED-WORKER-OK")

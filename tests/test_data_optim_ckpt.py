@@ -191,3 +191,110 @@ def test_checkpoint_jax_arrays_and_bf16(tmp_path):
     back = checkpoint.restore(d, 0)
     assert back["w"].dtype == np.dtype("bfloat16") or str(back["w"].dtype) == "bfloat16"
     np.testing.assert_array_equal(np.asarray(back["w"], np.float32), np.ones((3, 3)))
+
+
+def _assert_tree_bit_equal(back, want, path=""):
+    """Structure, types, dtypes, and bytes must all survive the round trip."""
+    if want is None:
+        assert back is None, path
+        return
+    if isinstance(want, (np.ndarray, jnp.ndarray)):
+        w = np.asarray(want)
+        assert isinstance(back, np.ndarray), (path, type(back))
+        assert back.dtype == w.dtype, (path, back.dtype, w.dtype)
+        assert back.shape == w.shape, path
+        assert back.tobytes() == w.tobytes(), f"{path}: bytes differ"
+        return
+    if isinstance(want, tuple):  # incl. NamedTuples
+        assert type(back) is type(want), (path, type(back), type(want))
+        assert len(back) == len(want), path
+        fields = getattr(type(want), "_fields",
+                         [str(i) for i in range(len(want))])
+        for f, b, w in zip(fields, back, want):
+            _assert_tree_bit_equal(b, w, f"{path}.{f}")
+        return
+    if isinstance(want, dict):
+        assert set(back) == set(want), path
+        for k in want:
+            _assert_tree_bit_equal(back[k], want[k], f"{path}[{k}]")
+        return
+    assert back == want and type(back) is type(want), path
+
+
+def test_checkpoint_roundtrips_full_engine_carry(tmp_path):
+    """ISSUE 10 satellite: a REAL engine carry -- ``EFHCState`` with Adam
+    ``opt_state``, ``ResourceState``, ``FaultState``, watchdog ages --
+    restores as the exact pytree: NamedTuple classes (not lists), every leaf
+    dtype byte-identical, None fields preserved.  This is the property the
+    crash-safe resume path stands on; the seed codec flattened NamedTuples
+    into lists (msgpack packs tuples as lists), which this pins against."""
+    from repro.core import efhc, resources, faults, flow
+    from repro.core.topology import make_process
+    from repro.data.synthetic import image_dataset as _img
+    from repro.fl import simulator
+
+    x, y = _img(200, seed=0, dim=16)
+    graph = make_process(6, "rgg", seed=0)
+    sim = simulator.SimConfig(m=6, dim=16, iters=4, batch=4,
+                              optimizer="adam", mix_impl="sparse",
+                              churn_rate=0.1, crash_rate=0.1,
+                              watchdog_window=3)
+    core = simulator._EngineCore(sim, graph, eval_every=2, x=x, y=y,
+                                 eval_fn=None)
+    state, bw = core.init(0)
+    assert isinstance(state.resources, resources.ResourceState)
+    assert isinstance(state.faults, faults.FaultState)
+    assert isinstance(state.watchdog, flow.WatchdogState)
+
+    d = str(tmp_path / "carry")
+    tree = {"state": state, "bandwidths": bw, "meta": {"end": 4, "tag": "x"},
+            "maybe": None, "mixed": (3, "s", None)}
+    checkpoint.save(d, 4, tree)
+    back = checkpoint.restore(d)
+    want = jax.device_get(tree)
+    assert isinstance(back["state"], efhc.EFHCState)
+    assert isinstance(back["state"].faults, faults.FaultState)
+    _assert_tree_bit_equal(back, want)
+    # the restored carry is scan-ready: jnp round trip preserves values
+    re_state = jax.tree.map(jnp.asarray, back["state"])
+    for got, ref in zip(jax.tree.leaves(re_state), jax.tree.leaves(state)):
+        np.testing.assert_array_equal(jax.device_get(got),
+                                      jax.device_get(ref))
+
+
+def test_checkpoint_nones_and_nested_tuples(tmp_path):
+    """None at every level and tuples-of-tuples keep their exact shape
+    (bare nil vs the tagged form must both decode to None)."""
+    d = str(tmp_path / "nt")
+    tree = {"a": None, "b": ((1, 2), (None, np.arange(3))),
+            "c": [None, (np.float32(1.5),)]}
+    checkpoint.save(d, 0, tree)
+    back = checkpoint.restore(d)
+    assert back["a"] is None
+    assert isinstance(back["b"], tuple) and isinstance(back["b"][0], tuple)
+    assert back["b"][1][0] is None
+    assert isinstance(back["c"], list) and back["c"][0] is None
+    np.testing.assert_array_equal(back["b"][1][1], np.arange(3))
+    assert back["b"][1][1].dtype == np.arange(3).dtype
+
+
+def test_checkpoint_old_format_still_decodes(tmp_path):
+    """Pre-tag files (plain msgpack maps/lists, arrays under __nd__) keep
+    restoring -- forward-written by older code, read by this one."""
+    import msgpack as _mp
+    d = tmp_path / "old"
+    d.mkdir()
+    arr = np.arange(4, dtype=np.float32)
+    raw = {"w": {"__nd__": list(arr.shape), "dtype": str(arr.dtype),
+                 "data": arr.tobytes()},
+           "lst": [1, 2], "s": "x"}
+    (d / "step_0.msgpack").write_bytes(_mp.packb(raw, use_bin_type=True))
+    back = checkpoint.restore(str(d))
+    np.testing.assert_array_equal(back["w"], arr)
+    assert back["lst"] == [1, 2] and back["s"] == "x"
+
+
+def test_checkpoint_rejects_unserializable():
+    with pytest.raises(TypeError, match="serialize"):
+        from repro.checkpoint.msgpack_ckpt import _tree_encode
+        _tree_encode({"f": lambda: None})

@@ -1,6 +1,8 @@
 import numpy as np
+import pytest
 
 from repro.core import flow
+from repro.fl import trace as trace_mod
 
 
 def test_union_connectivity_simple():
@@ -28,3 +30,95 @@ def test_predicted_b_formula():
     assert flow.predicted_b(1, 1) == 3  # l~=1
     assert flow.predicted_b(2, 3) == 6  # l~=1 (2<=3<=3)
     assert flow.predicted_b(3, 7) == 12  # l~=2 (6<=7<=8)
+
+
+def _random_trace(t, m, p, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.uniform(size=(t, m, m)) < p
+    a = np.triu(a, 1)
+    return a | a.transpose(0, 2, 1)
+
+
+@pytest.mark.parametrize("m,p,seed", [(7, 0.15, 0), (12, 0.08, 1),
+                                      (33, 0.05, 2), (40, 0.04, 3)])
+def test_union_connectivity_packed_matches_full(m, p, seed):
+    """ISSUE 10 satellite: the analyzer accepts trace='packed' storage
+    (bit-packed uint32 rows) directly and answers identically to the dense
+    bool path -- m=33/40 exercise the padded last word."""
+    a = _random_trace(20, m, p, seed)
+    packed = trace_mod.pack_links_np(a)
+    assert packed.dtype == np.uint32
+    assert flow.union_connectivity(packed, m=m) == flow.union_connectivity(a)
+    b = max(1, flow.union_connectivity(a))
+    np.testing.assert_array_equal(flow.failing_windows(packed, b, m=m),
+                                  flow.failing_windows(a, b))
+    np.testing.assert_array_equal(
+        flow.failing_windows(packed, max(1, b - 1), m=m),
+        flow.failing_windows(a, max(1, b - 1)))
+
+
+def test_packed_without_m_raises():
+    packed = trace_mod.pack_links_np(_random_trace(4, 8, 0.3, 0))
+    with pytest.raises(ValueError, match="m="):
+        flow.union_connectivity(packed)
+
+
+def test_failing_windows_localizes_the_break():
+    """A trace connected everywhere except a dead stretch: the failing
+    window starts must bracket exactly the stretch no size-b window can
+    bridge."""
+    t, m, b = 12, 5, 2
+    ring = np.zeros((m, m), bool)
+    for i in range(m):
+        ring[i, (i + 1) % m] = ring[(i + 1) % m, i] = True
+    a = np.broadcast_to(ring, (t, m, m)).copy()
+    a[5:8] = False  # 3 dead iterations > window 2
+    fails = flow.failing_windows(a, b)
+    # windows [5,6] and [6,7] see only dead graphs
+    np.testing.assert_array_equal(fails, [5, 6])
+    assert flow.failing_windows(a, 4).size == 0  # window 4 bridges the gap
+    with pytest.raises(ValueError, match="window size"):
+        flow.failing_windows(a, 0)
+
+
+@pytest.mark.parametrize("m,p,seed", [(6, 0.2, 0), (10, 0.1, 4),
+                                      (16, 0.06, 7)])
+def test_empirical_b_equals_union_connectivity(m, p, seed):
+    """The suffix-max fold over per-step smallest-suffix-windows must
+    reproduce the O(T^2) dense answer exactly (the identity the
+    summary-trace certificate rests on)."""
+    a = _random_trace(24, m, p, seed)
+    eye = np.eye(m, dtype=bool)
+    t = a.shape[0]
+    needed = np.empty(t, np.int64)
+    for k in range(t):
+        need = next((b for b in range(1, k + 2)
+                     if flow._connected(a[k - b + 1: k + 1].any(0) | eye)),
+                    flow.AGE_INF)
+        needed[k] = need
+    assert flow.empirical_b(needed) == flow.union_connectivity(a)
+
+
+def test_empirical_b_edge_cases():
+    assert flow.empirical_b(np.asarray([], np.int64)) == -1
+    assert flow.empirical_b(np.asarray([1, 1, 1])) == 1
+    # never connects: needed stays saturated
+    assert flow.empirical_b(np.full(5, flow.AGE_INF)) == -1
+    # connects only with the whole trace as the window: a size-5 window is
+    # a superset of the connecting size-4 suffix, so B=5 either way
+    assert flow.empirical_b(np.asarray([9, 9, 9, 9, 4])) == 5
+    assert flow.empirical_b(np.asarray([9, 9, 9, 9, 5])) == 5
+    # the last suffix that connects needs more steps than the trace holds
+    assert flow.empirical_b(np.asarray([9, 9, 9, 9, 6])) == -1
+
+
+def test_b_certificate_contents():
+    needed = np.asarray([2, 1, 3, 2, 2])
+    v = np.ones((5, 3), bool)  # B2 = 1
+    cert = flow.b_certificate(needed, v, 1, window=2)
+    assert cert["observed_b"] == 3 and cert["b2"] == 1
+    assert cert["predicted_b"] == flow.predicted_b(1, 1) == 3
+    assert cert["bound_holds"] and cert["window"] == 2
+    assert cert["violation_steps"] == [2] and cert["window_violated"]
+    no_win = flow.b_certificate(needed, v, 1)
+    assert no_win["violation_steps"] == [] and not no_win["window_violated"]

@@ -87,7 +87,8 @@ def test_signature_ignores_exactly_the_cell_fields():
     """Property-style sweep: toggling any cell-varying field keeps the
     signature; toggling any compile-shaping field changes it."""
     base = api.ScenarioSpec(**BASE)
-    cell_variants = dict(policy="gossip", seeds=(4, 5), sample_seed=9)
+    cell_variants = dict(policy="gossip", seeds=(4, 5), sample_seed=9,
+                         deadline_s=30.0)
     for f, v in cell_variants.items():
         other = dataclasses.replace(base, **{f: v})
         assert other.signature() == base.signature(), f
@@ -98,7 +99,11 @@ def test_signature_ignores_exactly_the_cell_fields():
         dirichlet_alpha=0.5, smooth=1, r=10.0, b_mean=1000.0, sigma_n=0.5,
         alpha0=0.2, optimizer="adam", batch=4, iters=6, mix_impl="sparse",
         trace="packed", eval_every=2, churn_rate=0.1, recover_rate=0.25,
-        straggle_rate=0.1, bw_walk=0.05, budget_bytes=1e6)
+        straggle_rate=0.1, bw_walk=0.05, budget_bytes=1e6,
+        cluster_fail_rate=0.05, cluster_recover_rate=0.5, partition_start=3,
+        partition_len=2, flap_rate=0.1, flap_len=4, crash_rate=0.05,
+        rejoin_rate=0.5, warm_start=True, watchdog_window=4,
+        watchdog_nprop=8)
     for f, v in shaping_variants.items():
         other = dataclasses.replace(base, **{f: v})
         assert other.signature() != base.signature(), f
@@ -236,3 +241,138 @@ def test_sweep_entry_point_matches_service_cells():
     for rep, policy in zip(reports, ("efhc", "gossip")):
         assert_bit_identical(rep.results[0], grid.result(0, policy),
                              f"sweep vs service {policy}")
+
+
+# ------------------------------------------------------ service hardening --
+# ISSUE 10: deadlines, bounded retry-with-backoff, NaN/Inf quarantine.
+
+def test_deadline_s_is_queue_policy_not_compile_shaping():
+    base = api.ScenarioSpec(**BASE)
+    with_deadline = dataclasses.replace(base, deadline_s=5.0)
+    assert with_deadline.signature() == base.signature(), \
+        "deadline_s must not split batch signatures"
+    with pytest.raises(ValueError, match="deadline_s"):
+        api.ScenarioSpec(**BASE, deadline_s=-1.0)
+
+
+def test_expired_request_is_answered_not_launched():
+    import time
+
+    svc = api.ScenarioService(max_cells=4)
+    rid = svc.submit(api.ScenarioSpec(**BASE, deadline_s=1e-9))
+    ok_rid = svc.submit(api.ScenarioSpec(**BASE))
+    time.sleep(0.01)
+    reports = svc.serve()
+    by_rid = {r.request_id: r for r in reports}
+    bad = by_rid[rid]
+    assert not bad.ok and "DeadlineExceeded" in bad.error
+    assert bad.results == {} and bad.launch_id == -1
+    assert by_rid[ok_rid].ok, "no-deadline request must still be served"
+    assert svc.stats().deadline_expired == 1
+    assert svc.stats().as_dict()["deadline_expired"] == 1
+
+
+class _FlakyProvider:
+    """Fails the first ``n_fail`` staging calls, then delegates to the
+    default synthetic provider -- the transient-infrastructure-error stand-in
+    the retry loop exists for."""
+
+    def __init__(self, n_fail):
+        self.n_fail = n_fail
+        self.calls = 0
+
+    def __call__(self, spec):
+        self.calls += 1
+        if self.calls <= self.n_fail:
+            raise OSError("transient staging failure")
+        return service_mod._DEFAULT_PROVIDER(spec)
+
+
+def test_transient_failure_retries_and_recovers():
+    provider = _FlakyProvider(n_fail=1)
+    svc = api.ScenarioService(provider, max_cells=4, max_retries=2,
+                              retry_backoff_s=0.0)
+    spec = api.ScenarioSpec(**BASE, seeds=(0,))
+    reports = svc.serve([spec])
+    assert len(reports) == 1 and reports[0].ok
+    assert reports[0].retries == 1, "one failed round before the success"
+    stats = svc.stats()
+    assert stats.retries == 1 and stats.failures == 0
+    assert_bit_identical(reports[0].results[0], api.simulate(spec, seed=0),
+                         "post-retry cell")
+
+
+def test_persistent_failure_exhausts_retries_then_errors():
+    provider = _FlakyProvider(n_fail=100)
+    svc = api.ScenarioService(provider, max_cells=4, max_retries=2,
+                              retry_backoff_s=0.0)
+    reports = svc.serve([api.ScenarioSpec(**BASE)])
+    assert len(reports) == 1 and not reports[0].ok
+    assert "transient staging failure" in reports[0].error
+    assert reports[0].retries == 2
+    stats = svc.stats()
+    assert stats.retries == 2 and stats.failures == 1
+    assert provider.calls == 3  # initial + 2 retries
+
+
+def test_retry_knobs_validate():
+    with pytest.raises(ValueError, match="max_retries"):
+        api.ScenarioService(max_retries=-1)
+    with pytest.raises(ValueError, match="retry_backoff_s"):
+        api.ScenarioService(retry_backoff_s=-0.1)
+
+
+class _PoisonedProvider:
+    """The default synthetic dataset with one training row driven to Inf:
+    only the cells whose sampler stream draws that row diverge."""
+
+    def __init__(self, row):
+        self.row = row
+        self._cache = {}
+
+    def __call__(self, spec):
+        k = service_mod.SyntheticProvider.key(spec)
+        if k not in self._cache:
+            ds = service_mod._DEFAULT_PROVIDER(spec)
+            x = np.array(ds.x)
+            x[self.row] = np.inf
+            self._cache[k] = dataclasses.replace(ds, x=x)
+        return self._cache[k]
+
+
+def test_nan_quarantine_isolates_the_diverged_cell():
+    """A cell that samples the poisoned row goes non-finite and is
+    quarantined; a co-batched cell of the SAME request that never touches
+    the row comes back BIT-identical to its run against the same provider
+    -- quarantine must be pure filtering, not recomputation."""
+    row = 7
+    provider = _PoisonedProvider(row)
+    probe = api.ScenarioSpec(**BASE, seeds=(0,))
+    ds = provider(probe)
+    hit = miss = None
+    for s in range(64):
+        idx = probe.batches(s, ds).stage(probe.iters)  # (T, m, batch)
+        per_step = (idx == row).reshape(idx.shape[0], -1).any(1)
+        if hit is None and per_step[: probe.iters // 2].any():
+            hit = s  # diverges early: non-finite before the recorded evals end
+        if miss is None and not per_step.any():
+            miss = s
+        if hit is not None and miss is not None:
+            break
+    assert hit is not None and miss is not None, \
+        "need both a poisoned and a clean sampler stream among seeds 0..63"
+
+    spec = api.ScenarioSpec(**BASE, seeds=(hit, miss))
+    svc = api.ScenarioService(provider, max_cells=4)
+    rep = svc.serve([spec])[0]
+    assert rep.ok, "quarantine is per-cell, not a request failure"
+    assert rep.quarantined == (hit,)
+    assert set(rep.results) == {miss} and set(rep.tx) == {miss}
+    with pytest.raises(RuntimeError, match="quarantined"):
+        rep.result(hit)
+    solo = service_mod.solo_run(spec, seed=miss, provider=provider)
+    assert_bit_identical(rep.results[miss], solo, "clean cell next to NaN")
+    assert svc.stats().quarantined == 1
+    # the diverged run really is non-finite (the quarantine was warranted)
+    bad = service_mod.solo_run(spec, seed=hit, provider=provider)
+    assert not np.isfinite(bad.loss).all()
